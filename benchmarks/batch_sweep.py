@@ -1,0 +1,55 @@
+"""The paper's §III-D batch-job workflow: sweep the full design space
+(kernel x size x sparsity x precision) and emit one CSV row per
+configuration — the Quartus/VTR batch launcher, re-targeted.
+
+Default mode is the analytic resource model (instant, 800 rows); --compile
+additionally lowers+compiles every configuration and records measured HLO
+MACs (the full-fidelity mode, a few minutes on this host).
+
+  PYTHONPATH=src python -m benchmarks.batch_sweep \
+      [--out results/kratos_design_space.csv] [--compile]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.core import bench_specs as BS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/kratos_design_space.csv")
+    ap.add_argument("--compile", action="store_true")
+    a = ap.parse_args()
+
+    header = ["kernel", "unroll", "size", "sparsity", "bits",
+              "dense_macs", "effective_macs", "mac_fraction",
+              "weight_bytes", "weight_bytes_fraction", "mxu_rate",
+              "ops_per_invocation"]
+    if a.compile:
+        header.append("hlo_macs")
+    rows = [",".join(header)]
+    for base in BS.TABLE_II:
+        for spec in BS.sweep(base):
+            r = spec.resource_report()
+            row = [spec.kernel, spec.unroll, spec.size,
+                   f"{spec.sparsity:g}", str(spec.bits or 16),
+                   f"{r['dense_macs']:g}", f"{r['effective_macs']:g}",
+                   f"{r['mac_fraction']:g}", f"{r['weight_bytes']:g}",
+                   f"{r['weight_bytes_fraction']:g}", f"{r['mxu_rate']:g}",
+                   str(spec.ops_per_invocation())]
+            if a.compile:
+                from benchmarks.common import hlo_cost
+                params, x, fn = BS.instantiate(spec)
+                row.append(f"{hlo_cost(fn, params, x)['macs']:g}")
+            rows.append(",".join(row))
+    out = "\n".join(rows) + "\n"
+    with open(a.out, "w") as f:
+        f.write(out)
+    print(f"wrote {len(rows)-1} design points to {a.out}")
+
+
+if __name__ == "__main__":
+    main()

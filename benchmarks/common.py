@@ -1,0 +1,50 @@
+"""Shared benchmark machinery.
+
+Every figure benchmark measures its quantity from the COMPILED artifact
+(jit -> lower -> compile -> loop-aware HLO analysis), mirroring the paper's
+workflow where every point is a synthesized circuit — not an analytic
+estimate. The analytic cost model (core.kratos.cost_report) is printed next
+to the measured value as a cross-check.
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.analysis import hlo as HA
+from repro.launch import mesh as M
+
+
+def hlo_cost(fn: Callable, *args) -> Dict[str, float]:
+    """Compile fn(*args) and return loop-aware {flops, bytes, macs}."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    r = HA.analyze(compiled.as_text())
+    r["macs"] = r["flops"] / 2.0
+    return r
+
+
+def roofline_seconds(flops: float, bytes_: float, *, int8: bool = False
+                     ) -> Dict[str, float]:
+    peak = M.PEAK_INT8_OPS if int8 else M.PEAK_BF16_FLOPS
+    t_c = flops / peak
+    t_m = bytes_ / M.HBM_BW
+    return {"t_compute": t_c, "t_memory": t_m, "t": max(t_c, t_m),
+            "bound": "compute" if t_c >= t_m else "memory"}
+
+
+class CSV:
+    """Print aligned CSV to stdout and collect rows."""
+
+    def __init__(self, header):
+        self.header = header
+        self.rows = []
+        print(",".join(header))
+
+    def row(self, *vals):
+        r = [f"{v:.6g}" if isinstance(v, float) else str(v) for v in vals]
+        self.rows.append(r)
+        print(",".join(r))
+        sys.stdout.flush()

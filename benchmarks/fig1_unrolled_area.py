@@ -1,0 +1,76 @@
+"""Fig. 1 reproduction: the compounding story on a 64x64 GEMM.
+
+Paper claim (C5): naive unrolling of a 64x64x64 matmul eats 63% of an
+Arria-10; specialization (1) cuts ~4x, and specialization + pruning (2) +
+quantization (3) compounds to ~600x (0.1% of the device).
+
+TPU restatement: 'area' is effective resource-seconds. We measure, from
+compiled HLO, the MAC count and weight traffic of:
+    naive      generic dense GEMM, f32 weights (no specialization)
+    spec       weight-stationary bf16 (constants baked: the weight tensor
+               is a compile-time-planned resident — no quadratic win on a
+               fixed MXU, the honest degradation)
+    spec+prune tree kernel at 90% balanced sparsity
+    +quant     tree kernel, 90% sparse, 4-bit packed weights
+and report the compounded reduction in (MACs, weight bytes, roofline time).
+
+  PYTHONPATH=src python -m benchmarks.fig1_unrolled_area
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CSV, hlo_cost, roofline_seconds
+from repro.core import kratos as kr
+
+N = 64
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, N))
+    csv = CSV(["config", "hlo_macs", "weight_bytes", "t_roofline_ns",
+               "mac_reduction", "byte_reduction", "time_reduction"])
+
+    configs = [
+        ("naive_f32", kr.KratosSpec(), jnp.float32, 4),
+        ("specialized_bf16", kr.KratosSpec(), jnp.bfloat16, 2),
+        ("spec+prune0.9", kr.KratosSpec(sparsity=0.9, bk=4, bn=4), jnp.bfloat16, 2),
+        ("spec+prune0.9+4bit", kr.KratosSpec(sparsity=0.9, bits=4, bk=4, bn=4),
+         jnp.bfloat16, 0.5),
+    ]
+    base = None
+    for name, spec, dtype, bytes_per_w in configs:
+        params = kr.init(key, N, N, spec, jnp.float32)
+        packed = kr.pack(params, spec)
+
+        def fn(pk, xx, _spec=spec):
+            return kr.apply_packed(pk, xx.astype(dtype), _spec, N, N)
+
+        cost = hlo_cost(fn, packed, x)
+        rep = kr.cost_report(N, N, spec, m=N)
+        wb = rep["weight_bytes_fraction"] * 2 * N * N * (bytes_per_w / 2) \
+            if name == "naive_f32" else rep["weight_bytes"]
+        t = roofline_seconds(cost["flops"], wb + 2 * 2 * N * N)["t"]
+        if base is None:
+            base = (cost["macs"], wb, t)
+        csv.row(name, cost["macs"], wb, t * 1e9,
+                base[0] / max(cost["macs"], 1), base[1] / max(wb, 1e-9),
+                base[2] / t)
+    print("\n# C5 check: paper compounds ~600x FPGA area on this GEMM; the")
+    print("# fixed-silicon restatement compounds MACs x bytes as measured")
+    print("# above (pruning is linear; precision is linear-in-bytes — the")
+    print("# quadratic multiplier shrink has no MXU analogue, per DESIGN.md).")
+
+
+def main() -> None:
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

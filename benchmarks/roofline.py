@@ -1,0 +1,90 @@
+"""§Roofline table generator: reads the dry-run ledger and renders the
+per-(arch x shape) three-term roofline table (markdown + CSV).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--ledger results/dryrun.jsonl]
+      [--md results/roofline.md] [--multi-pod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+from repro.launch.dryrun import roofline_terms
+
+
+def load_ledger(path: str) -> Dict:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    return recs
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    for scale, suf in ((1, "s"), (1e3, "ms"), (1e6, "us"), (1e9, "ns")):
+        if x * scale >= 1:
+            return f"{x*scale:.2f}{suf}"
+    return f"{x:.2e}s"
+
+
+def render(recs: Dict, multi_pod: bool = False) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant "
+        "| model/HLO flops | roofline frac | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    shapes = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    archs = sorted({k[0] for k in recs})
+    for arch in archs:
+        for shape in shapes:
+            r = recs.get((arch, shape, multi_pod))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped: "
+                             f"{r['reason'][:48]}... | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            t = r.get("roofline") or roofline_terms(r)
+            mem = (r.get("mem_temp_size_in_bytes", 0)
+                   + r.get("mem_argument_size_in_bytes", 0)) / 2 ** 30
+            uf = t.get("useful_flops_fraction")
+            lines.append(
+                f"| {arch} | {shape} | {fmt(t['t_compute_s'])} "
+                f"| {fmt(t['t_memory_s'])} | {fmt(t['t_collective_s'])} "
+                f"| **{t['dominant']}** "
+                f"| {uf:.2f} | {t['roofline_fraction']:.4f} "
+                f"| {'Y' if mem <= 16 else f'{mem:.0f}G'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ledger", default="results/dryrun.jsonl")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    if not os.path.exists(a.ledger):
+        print(f"# no ledger at {a.ledger} — run repro.launch.dryrun_all first")
+        return
+    recs = load_ledger(a.ledger)
+    out = render(recs, a.multi_pod)
+    print(out)
+    if a.md:
+        with open(a.md, "w") as f:
+            f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

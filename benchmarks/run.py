@@ -1,0 +1,57 @@
+"""Run the full benchmark suite: one section per paper table/figure,
+plus the roofline table if a dry-run ledger exists.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def section(title: str) -> None:
+    print(f"\n{'='*72}\n== {title}\n{'='*72}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    t0 = time.time()
+
+    section("Fig. 1 — compounding on a 64x64 GEMM (C5)")
+    from benchmarks import fig1_unrolled_area
+    fig1_unrolled_area.run()
+
+    section("Fig. 5 — utilization vs sparsity (C1)")
+    from benchmarks import fig5_sparsity
+    from repro.core import bench_specs as BS
+    fig5_sparsity.run(sparsities=(0.0, 0.3, 0.5, 0.7, 0.9) if a.quick
+                      else BS.SPARSITIES)
+
+    section("Fig. 6 — utilization vs precision (C2)")
+    from benchmarks import fig6_precision
+    fig6_precision.verify_packed_sizes()
+    fig6_precision.run()
+
+    section("Fig. 7 — throughput vs unroll factor (C3)")
+    from benchmarks import fig7_throughput
+    fig7_throughput.run()
+
+    section("Table III / Fig. 8 — granularity sweep (C4)")
+    from benchmarks import table3_tilesweep
+    table3_tilesweep.run()
+
+    ledger = "results/dryrun.jsonl"
+    if os.path.exists(ledger):
+        section("§Roofline — 40-cell dry-run table (single-pod)")
+        from benchmarks import roofline
+        print(roofline.render(roofline.load_ledger(ledger), multi_pod=False))
+
+    print(f"\n== benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

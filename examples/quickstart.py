@@ -1,0 +1,49 @@
+"""Quickstart: train a small LM with the Kratos technique attached.
+
+Runs in ~1 minute on CPU. Shows the three things this framework is about:
+  1. a model config with a KratosSpec (50% block-sparse + 8-bit weights)
+     on every projection,
+  2. a real training loop on a learnable synthetic task (loss drops),
+  3. the per-projection cost report — compute/bytes vs the dense model
+     (the paper's 'area' saving, restated for TPU time).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs as C
+from repro.core import kratos as kr
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw as O
+from repro.train import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    spec = kr.KratosSpec(sparsity=0.5, bits=8, bk=8, bn=8)
+    cfg = dataclasses.replace(C.get_smoke("h2o-danube-1.8b"), kratos=spec)
+
+    rep = kr.cost_report(cfg.d_model, cfg.d_ff, spec)
+    print(f"kratos spec: {spec}")
+    print(f"per-projection vs dense: {rep['mac_fraction']:.2f}x MACs, "
+          f"{rep['weight_bytes_fraction']:.2f}x weight bytes\n")
+
+    out = run_training(
+        cfg,
+        O.OptimizerConfig(lr=2e-3, warmup_steps=20, total_steps=150),
+        DataConfig(vocab=cfg.vocab, batch=8, seq=32, source="markov"),
+        TrainLoopConfig(steps=150, log_every=25),
+    )
+    losses = [h["loss"] for h in out["history"]]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(irreducible ~ noise entropy; uniform would be ln V = "
+          f"{__import__('math').log(cfg.vocab):.2f})")
+    assert losses[-1] < losses[0] - 1.0, "training did not learn!"
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

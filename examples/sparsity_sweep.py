@@ -1,0 +1,52 @@
+"""The paper's motivating tradeoff, end-to-end: accuracy vs efficiency
+across sparsity x precision on a real (small) training task.
+
+Trains the same model at {dense, 50%, 90%} sparsity x {bf16, 8, 4}-bit
+weights on the learnable markov task, and prints final loss next to the
+compute/byte cost of each point — the accuracy-efficiency frontier the
+paper's §V trends feed into (its ref [53]: 'pruning vs quantization').
+
+  PYTHONPATH=src python examples/sparsity_sweep.py [--steps 120]
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs as C
+from repro.core import kratos as kr
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw as O
+from repro.train import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    a = ap.parse_args()
+
+    base = C.get_smoke("h2o-danube-1.8b")
+    grid = [(0.0, None), (0.5, None), (0.9, None),
+            (0.0, 8), (0.0, 4), (0.5, 8), (0.9, 4)]
+    print(f"{'sparsity':>8} {'bits':>5} {'final_loss':>10} "
+          f"{'mac_frac':>9} {'byte_frac':>9}")
+    for s, bits in grid:
+        spec = kr.KratosSpec(sparsity=s, bits=bits, bk=8, bn=8)
+        cfg = dataclasses.replace(base, kratos=spec)
+        out = run_training(
+            cfg, O.OptimizerConfig(lr=2e-3, warmup_steps=10,
+                                   total_steps=a.steps),
+            DataConfig(vocab=cfg.vocab, batch=8, seq=32, seed=3),
+            TrainLoopConfig(steps=a.steps, log_every=0))
+        rep = kr.cost_report(cfg.d_model, cfg.d_ff, spec)
+        print(f"{s:>8.1f} {bits or 16:>5} "
+              f"{out['history'][-1]['loss']:>10.4f} "
+              f"{rep['mac_fraction']:>9.2f} "
+              f"{rep['weight_bytes_fraction']:>9.2f}")
+    print("sparsity_sweep OK")
+
+
+if __name__ == "__main__":
+    main()

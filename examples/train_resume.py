@@ -1,0 +1,59 @@
+"""Fault-tolerance drill: train, crash mid-run, resume, verify equivalence.
+
+Demonstrates the production restart story end-to-end on CPU:
+  * checkpoints are atomic (tmp+rename) and written asynchronously,
+  * the data pipeline is step-indexed, so the resumed run consumes exactly
+    the batches a never-failed run would have,
+  * the resumed run's final loss matches an uninterrupted reference run
+    bit-for-bit.
+
+  PYTHONPATH=src python examples/train_resume.py
+"""
+
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import configs as C
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw as O
+from repro.train import (SimulatedFailure, TrainLoopConfig, run_training)
+
+
+def main() -> None:
+    cfg = C.get_smoke("gemma2-27b")
+    opt = O.OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+    data = DataConfig(vocab=cfg.vocab, batch=4, seq=24, seed=11)
+    ckdir = tempfile.mkdtemp(prefix="kratos_ck_")
+
+    print("=== reference run (no failure) ===")
+    ref = run_training(cfg, opt, data,
+                       TrainLoopConfig(steps=40, log_every=10))
+
+    print("\n=== run with injected failure at step 23 ===")
+    try:
+        run_training(cfg, opt, data, TrainLoopConfig(
+            steps=40, ckpt_dir=ckdir, ckpt_every=10, log_every=10,
+            fail_at_step=23))
+    except SimulatedFailure as e:
+        print(f"!! crashed as injected: {e}")
+
+    print("\n=== resume (same command, auto-restores latest checkpoint) ===")
+    out = run_training(cfg, opt, data, TrainLoopConfig(
+        steps=40, ckpt_dir=ckdir, ckpt_every=10, log_every=10))
+    print(f"resumed from step {out['resumed_from']}")
+
+    ref_loss = ref["history"][-1]["loss"]
+    res_loss = out["history"][-1]["loss"]
+    print(f"\nfinal loss — reference: {ref_loss:.6f}, resumed: {res_loss:.6f}")
+    assert np.isclose(ref_loss, res_loss, rtol=0, atol=0), "NOT bitwise equal"
+    print("bitwise-identical resume OK")
+    shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

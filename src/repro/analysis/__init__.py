@@ -1,0 +1,1 @@
+# Compiled-artifact analysis: loop-aware HLO cost model + roofline terms.

@@ -1,0 +1,415 @@
+"""Loop-aware cost analysis of post-SPMD HLO text.
+
+Why this exists: `compiled.cost_analysis()` counts each `while` body ONCE —
+but our models lower layer stacks (and gradient-accumulation microbatches)
+as `lax.scan`, so its FLOPs/bytes under-count by the trip count (~20-100x).
+This module parses `compiled.as_text()` and multiplies every computation's
+cost through the loop nest, using the `known_trip_count` backend config XLA
+attaches to counted loops.
+
+Cost model (the same conventions XLA's HloCostAnalysis uses, applied
+loop-aware):
+
+  * dot: 2 * result_elems * contraction_size FLOPs
+  * reduce: operand elems; elementwise arith/cmp/select: result elems;
+    transcendentals (exp/tanh/log/...): result elems (reported separately too)
+  * bytes accessed: sum(operand bytes) + result bytes per instruction;
+    fusion internals are free (only fusion operands/result count — the
+    VMEM-locality assumption); slicing ops count only the touched window;
+    aliasing ops (bitcast/tuple/GTE/parameter/constant) are free
+  * while: (body + condition) * trip_count; conditional: max over branches
+  * collectives: result-shape bytes per execution, multiplied through loops,
+    split by kind (all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute)
+
+Wire-byte convention for the roofline's collective term: all-reduce counts
+2x result bytes (ring reduce-scatter + all-gather), everything else 1x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "power", "sqrt", "rsqrt", "cbrt", "sine", "cosine", "tan", "atan2",
+    "erf", "logistic",
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "remainder", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "is-finite",
+}
+
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+}
+
+_WINDOW_READ = {"slice", "dynamic-slice", "gather"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w\.\-]+) = ([^=]*?) ([\w\-]+)\(")
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?: \([^)]*\))? .*\{\s*$")
+
+
+def _shape_info(text: str) -> Tuple[int, int]:
+    """(total elements, total bytes) of a (possibly tuple) type string."""
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_elems: int
+    result_bytes: int
+    operands: List[str]
+    attrs: str
+    dims: Tuple[int, ...] = ()     # first array shape in the result type
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+def _split_instruction(line: str) -> Optional[Tuple[Instr, str]]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rtype, op = m.group(1), m.group(2).strip(), m.group(3)
+    # operands: top-level %names inside the first balanced paren group
+    start = line.index(op + "(") + len(op)
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    oper_text = line[start + 1:end]
+    attrs = line[end + 1:]
+    operands = re.findall(r"%([\w\.\-]+)", oper_text) if op != "constant" else []
+    elems, nbytes = _shape_info(rtype)
+    dm = _SHAPE_RE.search(rtype)
+    dims = tuple(int(x) for x in dm.group(2).split(",") if x) if dm else ()
+    return Instr(name=name, op=op, result_elems=elems, result_bytes=nbytes,
+                 operands=operands, attrs=attrs, dims=dims), oper_text
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)   # `/*index=5*/` breaks on '='
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped == "}":
+            if cur is not None:
+                comps[cur.name] = cur
+                cur = None
+            continue
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(name=m.group(1), instrs=[], by_name={})
+            continue
+        if cur is None:
+            continue
+        parsed = _split_instruction(line)
+        if parsed is None:
+            continue
+        instr, _ = parsed
+        cur.instrs.append(instr)
+        cur.by_name[instr.name] = instr
+    return comps
+
+
+def _called_comp(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else 1
+
+
+class _CostVisitor:
+    def __init__(self, comps: Dict[str, Computation],
+                 dims: Dict[str, Tuple[int, ...]]):
+        self.comps = comps
+        self.dims = dims
+        self.memo: Dict[str, Dict[str, Any]] = {}
+        self.warnings: List[str] = []
+
+    def comp_cost(self, name: str) -> Dict[str, Any]:
+        if name in self.memo:
+            return self.memo[name]
+        comp = self.comps.get(name)
+        zero = {"flops": 0.0, "transc": 0.0, "bytes": 0.0,
+                "convert_bytes": 0.0,
+                "coll": {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}}
+        if comp is None:
+            return zero
+        total = json.loads(json.dumps(zero))
+        self.memo[name] = total       # break cycles defensively
+        for ins in comp.instrs:
+            self._instr_cost(ins, comp, total)
+        return total
+
+    # ------------------------------------------------------------------
+    def _acc(self, total, sub, mult=1.0):
+        total["flops"] += sub["flops"] * mult
+        total["transc"] += sub["transc"] * mult
+        total["bytes"] += sub["bytes"] * mult
+        total["convert_bytes"] += sub["convert_bytes"] * mult
+        for k in _COLLECTIVES:
+            total["coll"][k]["count"] += sub["coll"][k]["count"] * mult
+            total["coll"][k]["bytes"] += sub["coll"][k]["bytes"] * mult
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> float:
+        tot = 0.0
+        for o in ins.operands:
+            src = comp.by_name.get(o)
+            if src is not None:
+                tot += src.result_bytes
+        return tot
+
+    def _instr_cost(self, ins: Instr, comp: Computation, total) -> None:
+        op = ins.op
+        if op in _FREE:
+            return
+        if op == "while":
+            body = _called_comp(ins.attrs, "body")
+            cond = _called_comp(ins.attrs, "condition")
+            trip = _trip_count(ins.attrs)
+            if trip == 1 and "known_trip_count" not in ins.attrs:
+                self.warnings.append(f"while {ins.name}: unknown trip count")
+            for c in (body, cond):
+                if c:
+                    self._acc(total, self.comp_cost(c), trip)
+            return
+        if op == "conditional":
+            branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"true_computation=%?([\w\.\-]+)|"
+                                  r"false_computation=%?([\w\.\-]+))", ins.attrs)
+            names = []
+            for tup in branches:
+                for part in tup:
+                    if part:
+                        names.extend(re.findall(r"%?([\w\.\-]+)", part))
+            if names:
+                costs = [self.comp_cost(n) for n in names]
+                worst = max(costs, key=lambda c: c["flops"] + c["bytes"])
+                self._acc(total, worst)
+            return
+        if op in ("fusion", "call"):
+            callee = _called_comp(ins.attrs, "calls") or \
+                _called_comp(ins.attrs, "to_apply")
+            if callee:
+                sub = self.comp_cost(callee)
+                # fusion: internal bytes are free; call: keep everything
+                if op == "fusion":
+                    sub = dict(sub, bytes=0.0, convert_bytes=0.0)
+                self._acc(total, sub)
+            total["bytes"] += ins.result_bytes + self._operand_bytes(ins, comp)
+            return
+        if op in _COLLECTIVES:
+            total["coll"][op]["count"] += 1
+            total["coll"][op]["bytes"] += ins.result_bytes
+            total["bytes"] += ins.result_bytes + self._operand_bytes(ins, comp)
+            return
+        # --- plain instructions ---
+        if op == "dot":
+            lhs_dims = ()
+            if ins.operands:
+                src = comp.by_name.get(ins.operands[0])
+                lhs_dims = src.dims if src is not None \
+                    else self.dims.get(ins.operands[0], ())
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+            contraction = 1
+            if m and lhs_dims:
+                for ix in m.group(1).split(","):
+                    if ix:
+                        i = int(ix)
+                        if i < len(lhs_dims):
+                            contraction *= lhs_dims[i]
+            else:
+                self.warnings.append(f"dot {ins.name}: missing dims")
+            total["flops"] += 2.0 * ins.result_elems * contraction
+        elif op == "convolution":
+            self.warnings.append(f"convolution {ins.name}: approximated")
+            total["flops"] += 2.0 * ins.result_elems
+        elif op in ("reduce", "reduce-window"):
+            total["flops"] += self._operand_elems(ins, comp)
+        elif op in _TRANSCENDENTAL:
+            total["flops"] += ins.result_elems
+            total["transc"] += ins.result_elems
+        elif op in _ELEMENTWISE:
+            total["flops"] += ins.result_elems
+        elif op == "scatter":
+            total["flops"] += ins.result_elems * 0  # adds counted via map ops
+        # bytes for plain ops
+        if op == "convert":
+            # XLA:CPU legalizes every bf16 dot by materializing f32 operand
+            # copies; on TPU the MXU consumes bf16 directly and standalone
+            # converts fuse. Tracked separately so the roofline can report a
+            # TPU-adjusted memory term next to the raw CPU-HLO one.
+            b = ins.result_bytes + self._operand_bytes(ins, comp)
+            total["bytes"] += b
+            total["convert_bytes"] += b
+            return
+        if op in _WINDOW_READ:
+            total["bytes"] += 2.0 * ins.result_bytes
+        elif op == "dynamic-update-slice":
+            upd = comp.by_name.get(ins.operands[1]) if len(ins.operands) > 1 \
+                else None
+            ub = upd.result_bytes if upd is not None else ins.result_bytes
+            total["bytes"] += 2.0 * ub
+        else:
+            total["bytes"] += ins.result_bytes + self._operand_bytes(ins, comp)
+
+    def _operand_elems(self, ins: Instr, comp: Computation) -> float:
+        tot = 0.0
+        for o in ins.operands:
+            src = comp.by_name.get(o)
+            if src is not None:
+                tot += src.result_elems
+        return tot
+
+
+def _dims_table(text: str) -> Dict[str, Tuple[int, ...]]:
+    """instruction name -> result dims (first array shape in its type)."""
+    dims: Dict[str, Tuple[int, ...]] = {}
+    pat = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+    for line in text.splitlines():
+        m = pat.match(line)
+        if m and m.group(2) in _DTYPE_BYTES:
+            d = tuple(int(x) for x in m.group(3).split(",") if x)
+            dims[m.group(1)] = d
+    return dims
+
+
+def breakdown(hlo_text: str, top: int = 15) -> List[Tuple[str, float, float]]:
+    """Top contributors: (op_key, bytes x loop-mult, flops x mult).
+
+    op_key groups by (opcode, result shape); loop multipliers come from the
+    computation's effective execution count. The §Perf tool for 'what is the
+    dominant term made of'.
+    """
+    comps = parse_module(hlo_text)
+    m = re.search(r"^ENTRY %?([\w\.\-]+)", hlo_text, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+    # effective execution multiplier per computation
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop(0)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            m_ = mult[name]
+            callees = []
+            if ins.op == "while":
+                t = _trip_count(ins.attrs)
+                for key in ("body", "condition"):
+                    c = _called_comp(ins.attrs, key)
+                    if c:
+                        callees.append((c, m_ * t))
+            elif ins.op in ("fusion", "call"):
+                c = _called_comp(ins.attrs, "calls") or \
+                    _called_comp(ins.attrs, "to_apply")
+                if c:
+                    callees.append((c, m_))
+            for c, cm in callees:
+                mult[c] = mult.get(c, 0.0) + cm
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    agg: Dict[str, List[float]] = {}
+    for cname, comp in comps.items():
+        m_ = mult.get(cname, 0.0)
+        if m_ == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op in _FREE or ins.op in ("fusion", "call", "while",
+                                             "conditional"):
+                continue
+            key = f"{ins.op} {ins.result_bytes/2**20:.0f}MiB"
+            b = ins.result_bytes * m_
+            f = ins.result_elems * m_ if ins.op in _ELEMENTWISE else 0.0
+            cur = agg.setdefault(key, [0.0, 0.0])
+            cur[0] += b
+            cur[1] += f
+    rows = sorted(((k, v[0], v[1]) for k, v in agg.items()),
+                  key=lambda r: -r[1])
+    return rows[:top]
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> Dict[str, Any]:
+    """Loop-aware whole-program cost. Returns per-device totals."""
+    comps = parse_module(hlo_text)
+    dims = _dims_table(hlo_text)
+    if entry is None:
+        m = re.search(r"^ENTRY %?([\w\.\-]+)", hlo_text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    visitor = _CostVisitor(comps, dims)
+    # memoization keyed per computation; entry computed last
+    visitor.memo.pop(entry, None)
+    total = visitor.comp_cost(entry)
+    coll = total["coll"]
+    wire = (2 * coll["all-reduce"]["bytes"] + coll["all-gather"]["bytes"]
+            + coll["reduce-scatter"]["bytes"] + coll["all-to-all"]["bytes"]
+            + coll["collective-permute"]["bytes"]
+            + coll["ragged-all-to-all"]["bytes"])
+    return {
+        "flops": total["flops"],
+        "transcendentals": total["transc"],
+        "bytes": total["bytes"],
+        "bytes_tpu_adjusted": total["bytes"] - total["convert_bytes"],
+        "convert_bytes": total["convert_bytes"],
+        "collectives": {k: dict(v) for k, v in coll.items()},
+        "wire_bytes": wire,
+        "n_computations": len(comps),
+        "warnings": visitor.warnings[:20],
+    }

@@ -1,0 +1,57 @@
+"""Architecture registry: the 10 assigned configs + kratos kernel benches.
+
+`get_config(name)` returns the FULL published config (used only by the
+512-device dry-run via ShapeDtypeStructs — never allocated on CPU);
+`get_smoke(name)` returns a reduced same-family config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+ARCH_IDS = (
+    "minicpm3_4b",
+    "nemotron_4_340b",
+    "gemma2_27b",
+    "h2o_danube_1_8b",
+    "jamba_v0_1_52b",
+    "whisper_large_v3",
+    "deepseek_v2_lite_16b",
+    "deepseek_moe_16b",
+    "llava_next_mistral_7b",
+    "falcon_mamba_7b",
+)
+
+# external ids (as assigned) -> module names
+ALIASES = {
+    "minicpm3-4b": "minicpm3_4b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "gemma2-27b": "gemma2_27b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "whisper-large-v3": "whisper_large_v3",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def _module(name: str):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str, **overrides):
+    import dataclasses
+    cfg = _module(name).CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke(name: str, **overrides):
+    import dataclasses
+    cfg = _module(name).smoke_config()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

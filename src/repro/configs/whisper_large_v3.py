@@ -1,0 +1,38 @@
+"""whisper-large-v3 [audio enc-dec] — arXiv:2212.04356.
+
+32 encoder + 32 decoder layers, d_model=1280, 20H, d_ff=5120, vocab=51866,
+LayerNorm, non-gated GELU MLPs, sinusoidal positions (no RoPE). The conv
+frontend is a STUB per the brief: input_specs() provides precomputed frame
+embeddings (B, 1500, 1280) = 30 s of audio at 50 fps; the assigned shape's
+seq_len/batch apply to the decoder stream (DESIGN.md §arch mapping)."""
+
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    n_layers=32,            # decoder
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    activation="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    use_rope=False,
+    enc_dec=True,
+    enc_positions=1500,
+    frontend="audio",
+    tie_embeddings=True,
+    scan_period=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3-smoke",
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, activation="gelu", gated_mlp=False,
+        norm="layernorm", use_rope=False, enc_dec=True, enc_positions=24,
+        frontend="audio", scan_period=1)

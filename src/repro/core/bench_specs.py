@@ -1,0 +1,151 @@
+"""The Kratos benchmark design space (paper Tables I & II) as config objects.
+
+Eight kernels — {gemmt, gemms} x {row-parallel, fully-unrolled} and
+{conv1d, conv2d} x {pixelwise, row-parallel, fully-unrolled} — each in a
+Small and Large variant, swept over 10 sparsity levels (0 .. 0.9) and 4
+precisions (8/4/2/1-bit), exactly the paper's §IV-B evaluation grid.
+
+`instantiate()` builds runnable (params, inputs, fn) plus the analytic
+resource model used by the figure benchmarks:
+
+  * effective MACs / weight bytes  (the 'ALM utilization' analogue),
+  * ops-per-invocation by unroll factor (the Table-I throughput column),
+  * roofline latency on the target chip (compute vs memory bound).
+
+The microbenchmarks use block granularity bk=bn=1 in the reference path —
+true element-level sparsity, matching the paper's FPGA granularity; the
+LM-framework integration uses hardware-tile granularity (see core.kratos and
+the Table-III tile sweep that bridges the two).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv as kconv
+from repro.core import kratos as kr
+
+SPARSITIES = tuple(round(0.1 * i, 1) for i in range(10))   # 0.0 .. 0.9
+PRECISIONS = (8, 4, 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str                    # e.g. 'gemmt-RP-S'
+    kernel: str                  # gemmt | gemms | conv1d | conv2d
+    unroll: str                  # pixelwise | row | full
+    size: str                    # S | L
+    # GEMM: (m, n, p). Conv: input (Iw[,Ih],Ic), filter (Fw[,Fh]), Oc.
+    dims: Dict[str, int] = dataclasses.field(default_factory=dict)
+    sparsity: float = 0.0
+    bits: Optional[int] = None
+    bk: int = 1                  # element-granular by default (FPGA parity)
+    bn: int = 1
+
+    def kratos_spec(self) -> kr.KratosSpec:
+        impl = "systolic" if self.kernel == "gemms" else "tree"
+        return kr.KratosSpec(sparsity=self.sparsity, bits=self.bits, impl=impl,
+                             unroll=self.unroll, bk=self.bk, bn=self.bn,
+                             seed=17)
+
+    # --- analytic resource model -------------------------------------------
+    def gemm_dims(self) -> Tuple[int, int, int]:
+        d = self.dims
+        if self.kernel in ("gemmt", "gemms"):
+            return d["m"], d["n"], d["p"]
+        if self.kernel == "conv1d":
+            ow = d["iw"] - d["fw"] + 1
+            return ow, d["fw"] * d["ic"], d["oc"]
+        ow, oh = d["iw"] - d["fw"] + 1, d["ih"] - d["fh"] + 1
+        return ow * oh, d["fw"] * d["fh"] * d["ic"], d["oc"]
+
+    def ops_per_invocation(self) -> int:
+        """MACs per 'cycle' under the spec's unroll factor (Table I column)."""
+        m, n, p = self.gemm_dims()
+        if self.unroll == "full":
+            return m * n * p
+        if self.unroll == "row":
+            if self.kernel == "conv2d":
+                ow = self.dims["iw"] - self.dims["fw"] + 1
+                return ow * n * p
+            return n * p                     # one GEMM row / one conv row
+        return n * p                         # pixelwise: one output pixel
+
+    def resource_report(self) -> Dict[str, float]:
+        m, n, p = self.gemm_dims()
+        return kr.cost_report(n, p, self.kratos_spec(), m=m)
+
+
+def _mk(name, kernel, unroll, size, **dims) -> KernelSpec:
+    return KernelSpec(name=name, kernel=kernel, unroll=unroll, size=size,
+                      dims=dims)
+
+
+# Paper Table II, verbatim sizes (conv shapes read per the Table-II format
+# row: input Iw x Ih x Ic, filter Fw x Fh, output channels Oc; conv1d uses
+# Ih = Fh = 1).
+TABLE_II: Tuple[KernelSpec, ...] = (
+    _mk("gemmt-RP-S", "gemmt", "row", "S", m=32, n=32, p=32),
+    _mk("gemmt-RP-L", "gemmt", "row", "L", m=128, n=128, p=128),
+    _mk("gemmt-FU-S", "gemmt", "full", "S", m=16, n=16, p=16),
+    _mk("gemmt-FU-L", "gemmt", "full", "L", m=32, n=32, p=32),
+    _mk("gemms-RP-S", "gemms", "row", "S", m=16, n=16, p=16),
+    _mk("gemms-RP-L", "gemms", "row", "L", m=128, n=128, p=128),
+    _mk("conv1d-PW-S", "conv1d", "pixelwise", "S", iw=32, ic=64, fw=3, oc=64),
+    _mk("conv1d-PW-L", "conv1d", "pixelwise", "L", iw=32, ic=64, fw=3, oc=128),
+    _mk("conv1d-FU-S", "conv1d", "full", "S", iw=32, ic=8, fw=3, oc=8),
+    _mk("conv1d-FU-L", "conv1d", "full", "L", iw=32, ic=16, fw=3, oc=16),
+    _mk("conv2d-PW-S", "conv2d", "pixelwise", "S", iw=25, ih=25, ic=32, fw=3, fh=3, oc=64),
+    _mk("conv2d-PW-L", "conv2d", "pixelwise", "L", iw=25, ih=25, ic=64, fw=3, fh=3, oc=64),
+    _mk("conv2d-RP-S", "conv2d", "row", "S", iw=8, ih=8, ic=8, fw=3, fh=3, oc=8),
+    _mk("conv2d-RP-L", "conv2d", "row", "L", iw=8, ih=8, ic=16, fw=3, fh=3, oc=16),
+    _mk("conv2d-FU-S", "conv2d", "full", "S", iw=8, ih=8, ic=4, fw=3, fh=3, oc=4),
+    _mk("conv2d-FU-L", "conv2d", "full", "L", iw=8, ih=8, ic=8, fw=3, fh=3, oc=8),
+)
+
+BY_NAME = {s.name: s for s in TABLE_II}
+
+
+def sweep(base: KernelSpec, sparsities=SPARSITIES,
+          precisions=(None,) + PRECISIONS) -> List[KernelSpec]:
+    """The paper's batch-job grid for one kernel."""
+    out = []
+    for s, b in itertools.product(sparsities, precisions):
+        out.append(dataclasses.replace(base, sparsity=s, bits=b))
+    return out
+
+
+def instantiate(spec: KernelSpec, key=None, batch: int = 1):
+    """Build (params, inputs, fn) for a spec. fn(params, x) -> y."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    kspec = spec.kratos_spec()
+    d = spec.dims
+    if spec.kernel in ("gemmt", "gemms"):
+        params = kr.init(key, d["n"], d["p"], kspec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch * d["m"], d["n"]))
+
+        def fn(p, xx):
+            return kr.apply(p, xx, kspec, backend="ref")
+        return params, x, fn
+    if spec.kernel == "conv1d":
+        params = kconv.conv1d_init(key, d["fw"], d["ic"], d["oc"], kspec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, d["iw"], d["ic"]))
+        fw = int(params.pop("fw"))          # static under jit
+
+        def fn(p, xx):
+            return kconv.conv1d(dict(p, fw=fw), xx, kspec, backend="ref")
+        return params, x, fn
+    params = kconv.conv2d_init(key, d["fw"], d["fh"], d["ic"], d["oc"], kspec)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, d["iw"], d["ih"], d["ic"]))
+    fw, fh = int(params.pop("fw")), int(params.pop("fh"))
+
+    def fn(p, xx):
+        return kconv.conv2d(dict(p, fw=fw, fh=fh), xx, kspec, backend="ref")
+    return params, x, fn

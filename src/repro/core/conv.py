@@ -1,0 +1,111 @@
+"""Kratos convolution kernels (conv1d / conv2d) on TPU via im2col onto the
+Kratos GEMMs.
+
+The paper's convolutions feed a fully-unrolled filter with an input-staging
+network (BRAM for pixelwise, a shift-register network for row-parallel /
+fully-unrolled). The TPU adaptation replaces the staging network with im2col
+patch extraction (pure data movement, fused by XLA) and the unrolled filter
+with a Kratos GEMM over the (Fw*Fh*Ic, Oc) weight — so filter sparsity and
+precision get exactly the same treatment as GEMM weights.
+
+The input unrolling factor becomes the number of output pixels contracted per
+kernel invocation:
+  pixelwise  -> m = 1 pixel  (grid sweeps output pixels)
+  row        -> m = Ow       (one output row per step)
+  full       -> m = Ow*Oh    (whole feature map in one shot)
+For execution we always batch the full im2col (XLA fuses it); the unroll
+factor drives the *throughput accounting* in the benchmark harness, same as
+the paper's input/cycle column in Table I.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kratos as kr
+
+
+def im2col_1d(x: jnp.ndarray, fw: int) -> jnp.ndarray:
+    """x: (B, Iw, Ic) -> patches (B, Ow, Fw*Ic); stride 1, no padding."""
+    b, iw, ic = x.shape
+    ow = iw - fw + 1
+    cols = [x[:, i:i + ow, :] for i in range(fw)]
+    return jnp.concatenate(cols, axis=-1).reshape(b, ow, fw * ic)
+
+
+def im2col_2d(x: jnp.ndarray, fw: int, fh: int) -> jnp.ndarray:
+    """x: (B, Iw, Ih, Ic) -> patches (B, Ow, Oh, Fw*Fh*Ic); stride 1, valid."""
+    b, iw, ih, ic = x.shape
+    ow, oh = iw - fw + 1, ih - fh + 1
+    cols = []
+    for di in range(fw):
+        for dj in range(fh):
+            cols.append(x[:, di:di + ow, dj:dj + oh, :])
+    return jnp.concatenate(cols, axis=-1).reshape(b, ow, oh, fw * fh * ic)
+
+
+def conv_weight_as_gemm(w: jnp.ndarray) -> jnp.ndarray:
+    """(Fw, Fh, Ic, Oc) or (Fw, Ic, Oc) filter -> (Fw*[Fh*]Ic, Oc) GEMM weight.
+
+    Axis order matches the im2col concat order (fw outer, fh inner, ic last).
+    """
+    return w.reshape(-1, w.shape[-1])
+
+
+def conv1d(params: Dict, x: jnp.ndarray, spec: kr.KratosSpec = kr.DENSE,
+           *, backend: str = "ref") -> jnp.ndarray:
+    """params['w']: (Fw*Ic, Oc) GEMM-form filter; x: (B, Iw, Ic)."""
+    wn, oc = params["w"].shape
+    fw_ic = wn
+    # infer Fw from stored aux
+    fw = params.get("fw", None)
+    if fw is None:
+        raise ValueError("conv1d params must carry 'fw'")
+    ic = fw_ic // fw
+    patches = im2col_1d(x, fw)                       # (B, Ow, Fw*Ic)
+    return kr.apply({"w": params["w"]}, patches, spec, backend=backend)
+
+
+def conv2d(params: Dict, x: jnp.ndarray, spec: kr.KratosSpec = kr.DENSE,
+           *, backend: str = "ref") -> jnp.ndarray:
+    """params['w']: (Fw*Fh*Ic, Oc); params['fw'], params['fh']; x: (B, Iw, Ih, Ic)."""
+    fw, fh = params["fw"], params["fh"]
+    patches = im2col_2d(x, fw, fh)                   # (B, Ow, Oh, Fw*Fh*Ic)
+    return kr.apply({"w": params["w"]}, patches, spec, backend=backend)
+
+
+def conv1d_init(key, fw: int, ic: int, oc: int, spec: kr.KratosSpec = kr.DENSE,
+                dtype=jnp.float32) -> Dict:
+    p = kr.init(key, fw * ic, oc, spec, dtype)
+    p["fw"] = fw
+    return p
+
+
+def conv2d_init(key, fw: int, fh: int, ic: int, oc: int,
+                spec: kr.KratosSpec = kr.DENSE, dtype=jnp.float32) -> Dict:
+    p = kr.init(key, fw * fh * ic, oc, spec, dtype)
+    p["fw"], p["fh"] = fw, fh
+    return p
+
+
+def conv1d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Ground-truth conv1d via lax.conv (w: (Fw, Ic, Oc))."""
+    # lax conv wants NCW / OIW
+    out = jax.lax.conv_general_dilated(
+        x.transpose(0, 2, 1)[:, :, :],            # (B, Ic, Iw)
+        w.transpose(2, 1, 0),                     # (Oc, Ic, Fw)
+        window_strides=(1,), padding="VALID")
+    return out.transpose(0, 2, 1)                 # (B, Ow, Oc)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Ground-truth conv2d via lax.conv (w: (Fw, Fh, Ic, Oc); x: (B,Iw,Ih,Ic))."""
+    out = jax.lax.conv_general_dilated(
+        x.transpose(0, 3, 1, 2),                  # (B, Ic, Iw, Ih)
+        w.transpose(3, 2, 0, 1),                  # (Oc, Ic, Fw, Fh)
+        window_strides=(1, 1), padding="VALID")
+    return out.transpose(0, 2, 3, 1)              # (B, Ow, Oh, Oc)

@@ -1,0 +1,244 @@
+"""KratosSpec / Kratos linear: the paper's contribution as a first-class,
+composable JAX feature.
+
+A `KratosSpec` attaches to any weight-stationary projection in any model
+config and selects:
+
+  * `impl='tree'`      — gathered block-sparse compute ('gemmt'): FLOPs and
+                         weight traffic ∝ (1 - sparsity);
+  * `impl='systolic'`  — dense compute on masked weights ('gemms'): zero
+                         weights still cost full FLOPs (the paper's negative
+                         control, and the dense fast path at sparsity 0);
+  * `bits`             — weight precision in {8,4,2,1} (None = native bf16/f32);
+                         training uses QAT fake-quant w/ straight-through
+                         gradients, serving uses bit-packed kernels;
+  * `act_bits=8`       — optional w8a8 (2x MXU rate on TPU);
+  * `bk, bn`           — sparsity block granularity (the Table-III 'LUT size'
+                         analogue, sweepable);
+  * `unroll`           — 'pixelwise' | 'row' | 'full': the grid
+                         parallelization degree (how much of the output is
+                         produced per kernel invocation), Table I's input
+                         unrolling factor.
+
+Training params stay a dense float `w` (so optimizers/checkpoints are
+oblivious); the plan is a pure function of (shape, spec) and is applied at
+trace time. `pack()` converts trained params to packed serving buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as qz
+from repro.core import sparsity as sp
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+UNROLL_FACTORS = ("pixelwise", "row", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class KratosSpec:
+    sparsity: float = 0.0
+    bits: Optional[int] = None
+    impl: str = "tree"                # 'tree' | 'systolic'
+    unroll: str = "full"
+    bk: int = 128
+    bn: int = 128
+    act_bits: Optional[int] = None    # 8 => w8a8 serving path
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.impl not in ("tree", "systolic"):
+            raise ValueError(f"impl must be tree|systolic, got {self.impl}")
+        if self.unroll not in UNROLL_FACTORS:
+            raise ValueError(f"unroll must be one of {UNROLL_FACTORS}")
+        if self.bits is not None and self.bits not in qz.SUPPORTED_BITS:
+            raise ValueError(f"bits must be in {qz.SUPPORTED_BITS} or None")
+        if self.act_bits not in (None, 8):
+            raise ValueError("act_bits must be None or 8")
+
+    @property
+    def is_identity(self) -> bool:
+        """True if this spec degenerates to a plain dense matmul."""
+        return self.sparsity == 0.0 and self.bits is None and self.act_bits is None
+
+    def with_(self, **kw) -> "KratosSpec":
+        return dataclasses.replace(self, **kw)
+
+
+DENSE = KratosSpec()
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_cached(n_in: int, n_out: int, bk: int, bn: int,
+                 sparsity_milli: int, seed: int) -> sp.BlockSparsePlan:
+    return sp.make_plan(n_in, n_out, bk=bk, bn=bn,
+                        sparsity=sparsity_milli / 1000.0, seed=seed)
+
+
+def plan_for(n_in: int, n_out: int, spec: KratosSpec) -> Optional[sp.BlockSparsePlan]:
+    """The (deterministic, cached) block plan for a given projection."""
+    if spec.sparsity == 0.0:
+        return None
+    return _plan_cached(n_in, n_out, spec.bk, spec.bn,
+                        int(round(spec.sparsity * 1000)), spec.seed)
+
+
+# ---------------------------------------------------------------------------
+# Init / training apply
+# ---------------------------------------------------------------------------
+
+def init(key, n_in: int, n_out: int, spec: KratosSpec = DENSE,
+         dtype=jnp.float32, init_scale: Optional[float] = None) -> Dict[str, Any]:
+    """Dense float master weight; pruned blocks start (and stay) zero."""
+    scale = (n_in ** -0.5) if init_scale is None else init_scale
+    w = jax.random.normal(key, (n_in, n_out), dtype) * jnp.asarray(scale, dtype)
+    plan = plan_for(n_in, n_out, spec)
+    if plan is not None:
+        w = sp.sparsify_init(w, plan)
+    return {"w": w}
+
+
+def _ste_quant(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quant forward, straight-through backward."""
+    return w + jax.lax.stop_gradient(qz.fake_quantize(w, bits) - w)
+
+
+def apply(params: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec = DENSE,
+          *, backend: str = "ref") -> jnp.ndarray:
+    """Training-time application: y = x @ kratos(w).
+
+    x: (..., n_in) -> (..., n_out). The tree path gathers only live blocks,
+    so jit/cost_analysis see (1 - sparsity) of the dense FLOPs; the systolic
+    path multiplies a masked dense weight (full FLOPs) — faithful to Fig. 5.
+    """
+    w = params["w"]
+    n_in, n_out = w.shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, n_in)
+    if spec.bits is not None:
+        w = _ste_quant(w, spec.bits)
+    plan = plan_for(n_in, n_out, spec)
+    if plan is None or spec.impl == "systolic":
+        if plan is not None:  # systolic: mask, but pay dense compute
+            w = w * jnp.asarray(sp.plan_mask(plan), w.dtype)
+        y = ops.matmul(xm, w.astype(x.dtype), backend=backend) \
+            if backend != "ref" else kref.dense_matmul_ref(xm, w.astype(x.dtype))
+    else:
+        blocks = sp.pack_blocks(w.astype(x.dtype), plan)
+        # CO-DESIGN constraint (DESIGN.md §7): the packed blocks must keep
+        # the weight's tensor-parallel output sharding — without this, the
+        # pack reshape/gather loses it, every device computes ALL output
+        # blocks, and the sparsity saving is eaten by replication. Requires
+        # the block width bn to divide the TP shard width (n_out / |model|):
+        # the sparsity granularity and the fabric's shard granularity are
+        # coupled — the paper's LUT-size lesson reappearing as TP geometry.
+        from repro.models import layers as L   # lazy: layers imports kratos
+        blocks = L.shard(blocks, "out_blocks", None, None, None)
+        if backend == "ref":
+            y = kref.bsr_matmul_ref(xm, blocks, plan.indices)
+        else:
+            y = ops.bsr_matmul(xm, blocks, jnp.asarray(plan.indices),
+                               backend=backend)
+    return y.reshape(*lead, n_out)
+
+
+# ---------------------------------------------------------------------------
+# Serving: pack + apply_packed
+# ---------------------------------------------------------------------------
+
+def pack(params: Dict[str, Any], spec: KratosSpec) -> Dict[str, Any]:
+    """Convert trained dense params into packed inference buffers."""
+    w = params["w"]
+    n_in, n_out = w.shape
+    plan = plan_for(n_in, n_out, spec)
+    out: Dict[str, Any] = {}
+    if plan is None or spec.impl == "systolic":
+        if plan is not None:
+            w = w * jnp.asarray(sp.plan_mask(plan), w.dtype)
+        if spec.bits is None:
+            out["w"] = w
+        else:
+            out["qt"] = qz.quantize(w, spec.bits)
+        return out
+    # tree path
+    if spec.bits is None:
+        out["blocks"] = sp.pack_blocks(w, plan)
+    else:
+        scale = qz.compute_scale(w, spec.bits)               # (n_out,)
+        codes = qz.quantize_values(w, scale, spec.bits)      # int8 dense codes
+        cblocks = sp.pack_blocks(codes, plan)                # (n_pb,nnz,bk,bn) i8
+        n_pb, nnz, bk, bn = cblocks.shape
+        vpb = qz.VALUES_PER_BYTE[spec.bits]
+        packed = jax.vmap(lambda b: qz.pack_codes(b, spec.bits))(
+            cblocks.reshape(n_pb * nnz, bk, bn))
+        out["qblocks"] = packed.reshape(n_pb, nnz, bk // vpb, bn)
+        out["qscale"] = jnp.asarray(scale, jnp.float32).reshape(n_pb, bn)
+    return out
+
+
+def apply_packed(packed: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec,
+                 n_in: int, n_out: int, *, backend: str = "ref") -> jnp.ndarray:
+    """Inference-time application on packed buffers."""
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, n_in)
+    plan = plan_for(n_in, n_out, spec)
+    if "w" in packed:
+        y = kref.dense_matmul_ref(xm, packed["w"].astype(x.dtype)) \
+            if backend == "ref" else ops.matmul(xm, packed["w"].astype(x.dtype),
+                                                backend=backend)
+    elif "qt" in packed:
+        if spec.act_bits == 8 and packed["qt"].bits == 8:
+            y = ops.quant_matmul_w8a8(xm, packed["qt"], backend=backend)
+        else:
+            y = ops.quant_matmul(xm, packed["qt"], backend=backend)
+    elif "blocks" in packed:
+        if backend == "ref":
+            y = kref.bsr_matmul_ref(xm, packed["blocks"], plan.indices)
+        else:
+            y = ops.bsr_matmul(xm, packed["blocks"],
+                               jnp.asarray(plan.indices), backend=backend)
+    else:
+        y = ops.bsr_quant_matmul(xm, packed["qblocks"], packed["qscale"],
+                                 jnp.asarray(plan.indices), spec.bits,
+                                 backend=backend)
+    return y.reshape(*lead, n_out)
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (the 'area report' of the benchmark workflow)
+# ---------------------------------------------------------------------------
+
+def cost_report(n_in: int, n_out: int, spec: KratosSpec, m: int = 1,
+                act_bytes: int = 2) -> Dict[str, float]:
+    """Analytic effective cost of one application — the TPU restatement of
+    the paper's ALM-utilization report.
+
+    Returns effective MACs, weight bytes, and MXU-rate credit, relative and
+    absolute. Dense bf16 reference: m*n_in*n_out MACs, 2 bytes/weight.
+    """
+    dense_macs = m * n_in * n_out
+    plan = plan_for(n_in, n_out, spec)
+    keep = 1.0 if plan is None else plan.dense_flops_fraction
+    macs = dense_macs * (keep if spec.impl == "tree" else 1.0)
+    wbits = 16 if spec.bits is None else spec.bits
+    weight_bytes = n_in * n_out * wbits / 8.0
+    if spec.impl == "tree":
+        weight_bytes *= keep
+    mxu_rate = 2.0 if (spec.act_bits == 8 and spec.bits == 8) else 1.0
+    return {
+        "dense_macs": float(dense_macs),
+        "effective_macs": float(macs),
+        "mac_fraction": float(macs / dense_macs),
+        "weight_bytes": float(weight_bytes),
+        "weight_bytes_fraction": float(weight_bytes / (2.0 * n_in * n_out)),
+        "mxu_rate": mxu_rate,
+        "equiv_compute_time_fraction": float(macs / dense_macs / mxu_rate),
+    }

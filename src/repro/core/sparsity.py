@@ -1,0 +1,156 @@
+"""Balanced block-sparsity: the TPU-native adaptation of Kratos' fine-grained
+unstructured sparsity.
+
+On the FPGA, Kratos embeds weights into LUTs and lets synthesis delete
+zero-weight MACs one by one. On a TPU the minimum granule the hardware rewards
+is a tile (the VPU lane group is (8,128), the MXU is (128,128)), so the finest
+*profitable* sparsity is block sparsity. We use **balanced** block sparsity:
+every output-column block keeps exactly the same number of nonzero k-blocks
+(`nnz`), with block positions drawn from a seeded shuffle — mirroring the
+paper's "generate the desired amount of non-zero elements and randomly shuffle
+their location" (§III-D), while keeping the compute grid static, which is the
+TPU equivalent of a synthesizable circuit.
+
+Layout conventions
+------------------
+A weight is ``w: (n_in, n_out)`` used as ``y = x @ w``. Blocks tile
+``n_in`` into ``n_kb = n_in // bk`` k-blocks and ``n_out`` into
+``n_pb = n_out // bn`` output-column blocks. A plan stores, for each output
+block ``j``, the sorted k-block indices that are nonzero:
+
+    plan.indices: int32[n_pb, nnz]        (static numpy at trace time)
+    packed blocks: [n_pb, nnz, bk, bn]    (gathered weight data)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePlan:
+    """Static description of a balanced block-sparse weight."""
+
+    n_in: int
+    n_out: int
+    bk: int
+    bn: int
+    nnz: int                 # nonzero k-blocks per output-column block
+    indices: np.ndarray      # int32[n_pb, nnz], sorted along axis -1
+    seed: int
+
+    @property
+    def n_kb(self) -> int:
+        return self.n_in // self.bk
+
+    @property
+    def n_pb(self) -> int:
+        return self.n_out // self.bn
+
+    @property
+    def sparsity(self) -> float:
+        """Fraction of weight *blocks* (== weight elements) that are zero."""
+        return 1.0 - self.nnz / self.n_kb
+
+    @property
+    def dense_flops_fraction(self) -> float:
+        """FLOPs of the tree (gathered) implementation relative to dense."""
+        return self.nnz / self.n_kb
+
+    def __repr__(self) -> str:  # keep short: numpy array spam otherwise
+        return (
+            f"BlockSparsePlan({self.n_in}x{self.n_out}, block={self.bk}x{self.bn}, "
+            f"nnz={self.nnz}/{self.n_kb}, sparsity={self.sparsity:.3f}, seed={self.seed})"
+        )
+
+
+def nnz_for_sparsity(n_kb: int, sparsity: float) -> int:
+    """Number of kept k-blocks per output block for a target sparsity.
+
+    Clamped to [1, n_kb]: a fully-zero layer is degenerate (the paper sweeps
+    sparsity only up to 0.9).
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1), got {sparsity}")
+    return max(1, min(n_kb, int(round((1.0 - sparsity) * n_kb))))
+
+
+def make_plan(
+    n_in: int,
+    n_out: int,
+    *,
+    bk: int = 128,
+    bn: int = 128,
+    sparsity: float = 0.0,
+    seed: int = 0,
+) -> BlockSparsePlan:
+    """Build a balanced block-sparse plan with seeded-shuffled block positions."""
+    if n_in % bk:
+        raise ValueError(f"n_in={n_in} not divisible by bk={bk}")
+    if n_out % bn:
+        raise ValueError(f"n_out={n_out} not divisible by bn={bn}")
+    n_kb = n_in // bk
+    n_pb = n_out // bn
+    nnz = nnz_for_sparsity(n_kb, sparsity)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, n_in, n_out, bk, bn]))
+    idx = np.empty((n_pb, nnz), dtype=np.int32)
+    for j in range(n_pb):
+        idx[j] = np.sort(rng.permutation(n_kb)[:nnz]).astype(np.int32)
+    return BlockSparsePlan(n_in=n_in, n_out=n_out, bk=bk, bn=bn, nnz=nnz,
+                           indices=idx, seed=seed)
+
+
+def plan_mask(plan: BlockSparsePlan, dtype=np.float32) -> np.ndarray:
+    """Dense 0/1 mask of shape (n_in, n_out) described by the plan."""
+    m = np.zeros((plan.n_kb, plan.n_pb), dtype=dtype)
+    rows = plan.indices  # (n_pb, nnz)
+    for j in range(plan.n_pb):
+        m[rows[j], j] = 1.0
+    # expand blocks
+    m = np.repeat(np.repeat(m, plan.bk, axis=0), plan.bn, axis=1)
+    return m
+
+
+def pack_blocks(w: jnp.ndarray, plan: BlockSparsePlan) -> jnp.ndarray:
+    """Gather the nonzero blocks of a dense (n_in, n_out) weight.
+
+    Returns [n_pb, nnz, bk, bn]. Gradients flow through the gather, so this is
+    also the training-time path (masked-weight training whose mask *is* the
+    plan, i.e. straight-through on the kept blocks).
+    """
+    if w.shape != (plan.n_in, plan.n_out):
+        raise ValueError(f"weight shape {w.shape} != plan ({plan.n_in},{plan.n_out})")
+    wb = w.reshape(plan.n_kb, plan.bk, plan.n_pb, plan.bn)
+    wb = wb.transpose(2, 0, 1, 3)  # (n_pb, n_kb, bk, bn)
+    idx = jnp.asarray(plan.indices)  # (n_pb, nnz)
+    return jnp.take_along_axis(wb, idx[:, :, None, None], axis=1)
+
+
+def unpack_blocks(blocks: jnp.ndarray, plan: BlockSparsePlan) -> jnp.ndarray:
+    """Scatter packed blocks back into a dense (n_in, n_out) weight (zeros elsewhere)."""
+    n_pb, nnz, bk, bn = blocks.shape
+    assert (n_pb, nnz, bk, bn) == (plan.n_pb, plan.nnz, plan.bk, plan.bn)
+    dense = jnp.zeros((plan.n_pb, plan.n_kb, plan.bk, plan.bn), blocks.dtype)
+    idx = jnp.asarray(plan.indices)
+    dense = jax_scatter_along_axis1(dense, idx, blocks)
+    return dense.transpose(1, 2, 0, 3).reshape(plan.n_in, plan.n_out)
+
+
+def jax_scatter_along_axis1(dense, idx, blocks):
+    """dense[(j, idx[j,t])] = blocks[j, t] — vectorized over j."""
+    j = jnp.arange(dense.shape[0])[:, None]  # (n_pb, 1)
+    return dense.at[j, idx].set(blocks)
+
+
+def flat_block_table(plan: BlockSparsePlan) -> np.ndarray:
+    """int32[n_pb * nnz] flattened index table (for scalar-prefetch kernels)."""
+    return plan.indices.reshape(-1).astype(np.int32)
+
+
+def sparsify_init(w: jnp.ndarray, plan: BlockSparsePlan) -> jnp.ndarray:
+    """Apply the plan's mask to a dense init (zeros in pruned blocks)."""
+    return w * jnp.asarray(plan_mask(plan, dtype=np.float32)).astype(w.dtype)

@@ -1,0 +1,154 @@
+"""train_step / serve_step builders (pjit-ready, microbatched, remat-aware).
+
+The steps are pure functions over (state, batch) suitable for jax.jit with
+in/out shardings from distributed.sharding. Gradient accumulation splits the
+per-step batch into `grad_accum` microbatches consumed by a lax.scan — the
+standard trick that bounds saved-activation memory for the 340B config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import adamw as O
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: T.ModelConfig, backend: str = "ref"):
+    def loss_fn(params, batch):
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = T.encode(params, batch["frames"], cfg, backend=backend)
+        logits, aux, _ = T.forward(
+            params, batch["tokens"], cfg, backend=backend,
+            img_embeds=batch.get("img_embeds"), enc_out=enc_out)
+        if cfg.n_img_tokens:
+            logits = logits[:, cfg.n_img_tokens:]
+        loss = T.lm_loss(logits, batch["labels"])
+        return loss + aux.astype(jnp.float32), loss
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: T.ModelConfig, opt_cfg: O.OptimizerConfig,
+                    *, grad_accum: int = 1, backend: str = "ref",
+                    compress_fn: Optional[Callable] = None,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {'params', 'opt', 'step'}; batch = {'tokens','labels',...}.
+    compress_fn: optional gradient-compression hook
+    (distributed.compression) applied to accumulated grads; it receives and
+    returns (grads, compression_state) and state rides in `state['comp']`.
+    accum_dtype: gradient-accumulation buffer dtype. f32 default; bf16
+    halves the largest training temp (the grad tree) — used by the 340B
+    dry-run policy, a standard memory/precision trade at that scale.
+    """
+    loss_fn = make_loss_fn(cfg, backend)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    accum_dtype = jnp.dtype(accum_dtype)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (total, loss), grads = vg(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (b, grad_accum)
+                mb = b // grad_accum
+                # reshape (mb, ga) THEN swap: a split dim's sharding lands on
+                # the major-most factor, and it must stay on the batch-row dim
+                # (axis 1 after the swap), not on the microbatch index — else
+                # every scan iteration gathers the full global batch.
+                x = x.reshape(mb, grad_accum, *x.shape[1:]).swapaxes(0, 1)
+                return L.shard(x, None, "batch", *([None] * (x.ndim - 2)))
+
+            micro = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (tot, l), g = vg(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+
+        new_comp = state.get("comp")
+        if compress_fn is not None:
+            grads, new_comp = compress_fn(grads, state.get("comp"))
+
+        new_p, new_opt, gn = O.adamw_update(grads, state["opt"], params,
+                                            opt_cfg)
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_comp is not None:
+            new_state["comp"] = new_comp
+        metrics = {"loss": loss, "grad_norm": gn,
+                   "lr": O.warmup_cosine(opt_cfg, new_opt["count"])}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: T.ModelConfig, opt_cfg: O.OptimizerConfig):
+    params = T.init(key, cfg)
+    return {"params": params, "opt": O.adamw_init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref"):
+    """prefill(params, batch, caches) -> (next_token_logits, caches)."""
+    # remat exists to trade recompute for backward-pass memory; inference has
+    # no backward pass, and the checkpoint wrapper's conditional-update
+    # plumbing forced whole-cache-stack f32 convert/select churn per layer
+    # (~3.5 TB/step on nemotron decode). Always off for serving.
+    cfg = dataclasses.replace(cfg, remat=False)
+
+    def prefill(params, batch, caches):
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = T.encode(params, batch["frames"], cfg, backend=backend)
+        logits, _, caches = T.forward(
+            params, batch["tokens"], cfg, backend=backend, caches=caches,
+            img_embeds=batch.get("img_embeds"), enc_out=enc_out,
+            last_only=True)
+        return logits, caches
+    return prefill
+
+
+def make_decode_step(cfg: T.ModelConfig, backend: str = "ref"):
+    """decode(params, caches, token, index) -> (logits, caches).
+
+    token: (B, 1) int32; index: scalar int32 count of tokens already cached.
+    """
+    cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
+
+    def decode(params, caches, token, index):
+        logits, _, caches = T.forward(
+            params, token, cfg, backend=backend, caches=caches, index=index)
+        return logits, caches
+    return decode

@@ -1,0 +1,134 @@
+"""Tiled (flash) attention for TPU with causal / sliding-window / soft-cap
+support and GQA-aware k/v streaming.
+
+Not part of Kratos itself, but the perf-critical compute of the assigned LM
+architectures — and the same Kratos philosophy applies at tile level: blocks
+that are *structurally* dead (fully above the causal diagonal, or outside the
+sliding window) are skipped entirely via `pl.when`, so compute scales with
+the live fraction of the score matrix, exactly like tree-pruning dead MACs.
+
+Layout: q (bh, sq, d); k, v (bh_kv, skv, d); GQA group g = bh // bh_kv is
+resolved in the BlockSpec index map (no k/v broadcast is materialized).
+Running max / denominator live in (bq, 128) VMEM scratch (lane-replicated),
+the standard TPU idiom.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               bq: int, bkv: int, n_kv: int, scale: float,
+               causal: bool, window: Optional[int],
+               softcap: Optional[float], q_offset: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq + q_offset           # absolute position of this q tile
+    kv_start = ikv * bkv
+
+    # Structural block skipping (the "pruned tree" of attention):
+    live = jnp.bool_(True)
+    if causal:
+        live &= kv_start <= q_start + bq - 1
+    if window is not None:
+        live &= kv_start + bkv - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.bool_(True)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ikv == n_kv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,            # (bh, sq, d)
+    k: jnp.ndarray,            # (bh_kv, skv, d)
+    v: jnp.ndarray,            # (bh_kv, skv, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    bh_kv, skv, _ = k.shape
+    assert bh % bh_kv == 0, (bh, bh_kv)
+    g = bh // bh_kv
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    if sq % bq or skv % bkv:
+        raise ValueError(f"seq lengths ({sq},{skv}) not divisible by blocks ({bq},{bkv})")
+    scale = (d ** -0.5) if scale is None else scale
+    grid = (bh, sq // bq, skv // bkv)
+    kernel = functools.partial(
+        _fa_kernel, bq=bq, bkv=bkv, n_kv=skv // bkv, scale=scale,
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda h, i, j: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

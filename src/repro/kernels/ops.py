@@ -1,0 +1,127 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+Backends:
+  'ref'       pure-jnp oracle (XLA) — default on CPU; used by the 512-device
+              dry-run (Pallas lowers to TPU-only custom calls).
+  'pallas'    real Pallas lowering — the TPU target.
+  'interpret' Pallas kernel body executed step-by-step on CPU — used by the
+              kernel test suite to validate the TPU code path.
+  'auto'      'pallas' on TPU, 'ref' elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+from repro.kernels import ref as _ref
+from repro.kernels.bsr_matmul import bsr_matmul as _bsr_pallas
+from repro.kernels.dense_matmul import dense_matmul as _dense_pallas
+from repro.kernels.quant_matmul import (
+    quant_matmul as _quant_pallas,
+    quant_matmul_w8a8 as _w8a8_pallas,
+    bsr_quant_matmul as _bsr_quant_pallas,
+)
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+
+VALID_BACKENDS = ("auto", "ref", "pallas", "interpret")
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def _fit_block(block: int, dim: int) -> int:
+    """Largest power-of-two block <= `block` that divides `dim`."""
+    c = min(block, dim)
+    while c > 1 and dim % c:
+        c //= 2
+    return max(c, 1)
+
+
+def matmul(x, w, *, backend: str = "auto", bm: int = 128, bk: int = 128,
+           bn: int = 128):
+    """Dense weight-stationary GEMM ('systolic' analogue)."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.dense_matmul_ref(x, w)
+    m, n = x.shape
+    p = w.shape[1]
+    bm, bk, bn = _fit_block(bm, m), _fit_block(bk, n), _fit_block(bn, p)
+    return _dense_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
+
+
+def bsr_matmul(x, blocks, indices, *, backend: str = "auto", bm: int = 128):
+    """Block-sparse tree GEMM; FLOPs ∝ (1 - sparsity)."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.bsr_matmul_scan_ref(x, blocks, indices)
+    return _bsr_pallas(x, blocks, indices, bm=_fit_block(bm, x.shape[0]),
+                       interpret=(b == "interpret"))
+
+
+def quant_matmul(x, qt: qz.QuantizedTensor, *, backend: str = "auto",
+                 bm: int = 128, bk: int = 128, bn: int = 128):
+    """Weight-only quantized GEMM (w{8,4,2,1}a16)."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.quant_matmul_ref(x, qt)
+    return _quant_pallas(x, qt, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
+
+
+def quant_matmul_w8a8(x, qt: qz.QuantizedTensor, *, backend: str = "auto",
+                      bm: int = 128, bk: int = 128, bn: int = 128):
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.quant_matmul_w8a8_ref(x, qt)
+    return _w8a8_pallas(x, qt, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
+
+
+def bsr_quant_matmul(x, qblocks, scales, indices, bits: int, *,
+                     backend: str = "auto", bm: int = 128):
+    """Sparse + quantized tree GEMM (pruning x quantization compounded)."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return _ref.bsr_quant_matmul_ref(x, qblocks, scales, indices, bits)
+    return _bsr_quant_pallas(x, qblocks, scales, indices, bits, bm=bm,
+                             interpret=(b == "interpret"))
+
+
+def ssm_scan(u, dt, b, c, a, *, backend: str = "auto", bd: int = 128,
+             ck: int = 16):
+    """Selective-scan (Mamba-1) recurrence. Returns (y, h_final)."""
+    from repro.kernels import ssm_scan as _ssm
+    bk = resolve_backend(backend)
+    if bk == "ref":
+        return _ssm.ssm_scan_ref(u, dt, b, c, a)
+    return _ssm.ssm_scan(u, dt, b, c, a, bd=bd, ck=ck,
+                         interpret=(bk == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_offset: int = 0, scale=None, backend: str = "auto",
+                    bq: int = 128, bkv: int = 128):
+    """q: (b, h, sq, d); k, v: (b, h_kv, skv, d). Returns (b, h, sq, d)."""
+    b, h, sq, d = q.shape
+    _, h_kv, skv, _ = k.shape
+    bk = resolve_backend(backend)
+    if bk == "ref":
+        g = h // h_kv
+        kk = jnp.repeat(k, g, axis=1) if g > 1 else k
+        vv = jnp.repeat(v, g, axis=1) if g > 1 else v
+        return _ref.attention_ref(q, kk, vv, causal=causal, window=window,
+                                  softcap=softcap, q_offset=q_offset, scale=scale)
+    out = _fa_pallas(
+        q.reshape(b * h, sq, d), k.reshape(b * h_kv, skv, d),
+        v.reshape(b * h_kv, skv, d),
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+        scale=scale, bq=bq, bkv=bkv, interpret=(bk == "interpret"))
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,147 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the "Modelsim ground truth" of the paper's workflow (§III-D): each
+Pallas kernel is validated against the oracle here over shape/dtype/sparsity
+sweeps (tests/test_kernels.py). They are also the XLA execution path used by
+the 512-device dry-run (Pallas lowers to TPU-only custom calls, and this
+container's backend is CPU) — crucially, the *tree* (gathered block) oracle
+performs only the nonzero-block FLOPs, so `compiled.cost_analysis()` sees the
+same linear-in-(1-sparsity) compute reduction the TPU kernel achieves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+
+
+# ---------------------------------------------------------------------------
+# GEMM family
+# ---------------------------------------------------------------------------
+
+# Projection-dot accumulation type. f32 matches MXU accumulate; setting bf16
+# (dryrun --bf16-reduce) makes GSPMD's row-parallel psums run on bf16 wires —
+# the standard TPU practice for activation/grad reductions (§Perf iteration).
+_DOT_ACCUM = jnp.float32
+
+
+def set_dot_accum(dtype) -> None:
+    global _DOT_ACCUM
+    _DOT_ACCUM = jnp.dtype(dtype)
+
+
+def dense_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """The 'gemms' (weight-stationary systolic) analogue: dense compute
+    regardless of how many weights are zero."""
+    return jnp.dot(x, w, preferred_element_type=_DOT_ACCUM).astype(x.dtype)
+
+
+def bsr_matmul_ref(x: jnp.ndarray, blocks: jnp.ndarray, indices) -> jnp.ndarray:
+    """The 'gemmt' (multiply-adder tree) analogue, oracle form.
+
+    x: (m, n); blocks: (n_pb, nnz, bk, bn); indices: int[n_pb, nnz].
+    Gathers the x k-blocks referenced by each output block and contracts —
+    FLOPs = 2 * m * (nnz * bk) * (n_pb * bn) = dense * (1 - sparsity).
+    """
+    m, n = x.shape
+    n_pb, nnz, bk, bn = blocks.shape
+    xb = x.reshape(m, n // bk, bk)
+    idx = jnp.asarray(indices)
+    xg = jnp.take(xb, idx, axis=1)            # (m, n_pb, nnz, bk)
+    y = jnp.einsum("mjtk,jtkn->mjn", xg, blocks,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(m, n_pb * bn).astype(x.dtype)
+
+
+def bsr_matmul_scan_ref(x: jnp.ndarray, blocks: jnp.ndarray, indices) -> jnp.ndarray:
+    """Memory-light tree form: sequential over output-column blocks.
+
+    Peak extra memory is one gathered (m, nnz, bk) slab instead of n_pb of
+    them; HBM traffic matches the weight-stationary kernel's natural x re-read
+    per output tile. Used inside full models (dry-run path).
+    """
+    m, n = x.shape
+    n_pb, nnz, bk, bn = blocks.shape
+    xb = x.reshape(m, n // bk, bk)
+    idx = jnp.asarray(indices)
+
+    def one_block(carry, args):
+        blk, ix = args                         # (nnz, bk, bn), (nnz,)
+        xg = jnp.take(xb, ix, axis=1)          # (m, nnz, bk)
+        y = jnp.einsum("mtk,tkn->mn", xg, blk,
+                       preferred_element_type=jnp.float32)
+        return carry, y.astype(x.dtype)
+
+    _, ys = jax.lax.scan(one_block, None, (blocks, idx))
+    return jnp.moveaxis(ys, 0, 1).reshape(m, n_pb * bn)
+
+
+def quant_matmul_ref(x: jnp.ndarray, qt: qz.QuantizedTensor) -> jnp.ndarray:
+    """Weight-only quantized GEMM (w{8,4,2,1}a16): unpack, dequant, matmul."""
+    w = qz.dequantize(qt, dtype=x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def quant_matmul_w8a8_ref(x: jnp.ndarray, qt: qz.QuantizedTensor) -> jnp.ndarray:
+    """Fully-quantized int8 GEMM: dynamic per-row act quant, int32 accumulate."""
+    assert qt.bits == 8
+    xq, xs = qz.quantize_activations_int8(x)
+    acc = jax.lax.dot_general(
+        xq, qt.data, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * xs * qt.scale[None, :]).astype(x.dtype)
+
+
+def bsr_quant_matmul_ref(x, qblocks, scales, indices, bits) -> jnp.ndarray:
+    """Sparse + quantized tree GEMM (Kratos point 3: pruning + quantization).
+
+    qblocks: int8[n_pb, nnz, bk // vpb, bn] packed codes;
+    scales:  f32[n_pb, bn] per output channel.
+    """
+    n_pb, nnz, bkp, bn = qblocks.shape
+    vpb = qz.VALUES_PER_BYTE[bits]
+    flat = qblocks.reshape(n_pb * nnz, bkp, bn)
+    codes = jax.vmap(lambda b: qz.unpack_codes(b, bits))(flat)
+    blocks = codes.reshape(n_pb, nnz, bkp * vpb, bn).astype(x.dtype)
+    y = bsr_matmul_ref(x, blocks, indices)
+    return (y.reshape(x.shape[0], n_pb, bn) * scales[None].astype(x.dtype)
+            ).reshape(x.shape[0], n_pb * bn)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jnp.ndarray,            # (b, h, sq, d)
+    k: jnp.ndarray,            # (b, h, skv, d)
+    v: jnp.ndarray,            # (b, h, skv, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,     # sliding-window size (None = unbounded)
+    softcap: Optional[float] = None,  # gemma2-style logit soft-capping
+    q_offset: int = 0,                # absolute position of q[0] (decode)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import: jax locks the device count on first init.
+# This file (and only this file) sees 512 placeholder CPU devices so the
+# production meshes can be built; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+      --shape train_4k [--multi-pod] [--out results.json]
+
+Proves, without hardware: the sharding config is coherent (no mismatched
+collectives), the per-device memory fits 16 GB (memory_analysis), and yields
+HLO FLOPs / bytes / per-collective bytes for EXPERIMENTS.md §Roofline.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.distributed import sharding as SH
+from repro.launch import mesh as M
+from repro.launch import shapes as SP
+from repro.models import transformer as T
+
+
+from repro.analysis import hlo as HA
+
+# ---------------------------------------------------------------------------
+# Sharding trees for the step inputs
+# ---------------------------------------------------------------------------
+
+def input_shardings(kind: str, args, mesh, cell: SP.ShapeCell):
+    """NamedSharding pytree matching cell_inputs(...) output."""
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    def batch_tree(batch):
+        bp = SH.batch_pspec(mesh, cell.batch)
+        lead = list(bp)
+        out = {}
+        for k, v in batch.items():
+            out[k] = ns(P(*(lead + [None] * (v.ndim - len(lead)))))
+        return out
+
+    if kind == "train":
+        state, batch = args
+        pshard = SH.param_shardings(mesh, state["params"])
+        opt = {
+            "m": SH.param_shardings(mesh, state["opt"]["m"]),
+            "v": SH.param_shardings(mesh, state["opt"]["v"]),
+            "count": ns(P()),
+        }
+        st = {"params": pshard, "opt": opt, "step": ns(P())}
+        return (st, batch_tree(batch))
+    params = args[0]
+    pshard = SH.param_shardings(mesh, params)
+    if kind == "prefill":
+        _, batch, caches = args
+        cs = jax.tree_util.tree_map(
+            ns, SH.cache_pspecs(caches, mesh, cell.batch))
+        return (pshard, batch_tree(batch), cs)
+    _, caches, token, index = args
+    cs = jax.tree_util.tree_map(ns, SH.cache_pspecs(caches, mesh, cell.batch))
+    bp = SH.batch_pspec(mesh, cell.batch)
+    tok = ns(P(*(list(bp) + [None])))
+    return (pshard, cs, tok, ns(P()))
+
+
+def output_shardings(kind: str, in_sh, mesh, cell: SP.ShapeCell):
+    """Outputs mirror inputs: new state keeps the state sharding, new caches
+    keep the cache sharding; logits/metrics are batch-sharded/replicated.
+    Without this, jit picks output layouts freely — stacked caches came back
+    replicated, inflating per-device memory ~an order of magnitude."""
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    bp = SH.batch_pspec(mesh, cell.batch)
+    if kind == "train":
+        state_sh, _ = in_sh
+        metrics = {"loss": ns(P()), "grad_norm": ns(P()), "lr": ns(P())}
+        return (state_sh, metrics)
+    if kind == "prefill":
+        _, _, cache_sh = in_sh
+        logits = ns(P(*(list(bp) + [None, None])))
+        return (logits, cache_sh)
+    _, cache_sh, _, _ = in_sh
+    logits = ns(P(*(list(bp) + [None, None])))
+    return (logits, cache_sh)
+
+
+_DONATE = {"train": (0,), "prefill": (2,), "decode": (1,)}
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             cfg_overrides: Dict = None, save_hlo: str = None,
+             serve_tp2d: bool = False, bf16_reduce: bool = False,
+             ) -> Dict[str, Any]:
+    cell = SP.SHAPES_BY_NAME[shape]
+    ok, reason = SP.cell_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    dp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                      if a in ("pod", "data")]))
+    cfg = SP.config_for_dryrun(arch, **(cfg_overrides or {}))
+    t0 = time.time()
+    kind, args = SP.cell_inputs(arch, cell, cfg=cfg)
+    step = SP.make_step_fn(arch, cell, cfg=cfg, mesh_dp=dp)
+
+    if bf16_reduce:
+        from repro.kernels import ref as kref
+        kref.set_dot_accum(jnp.bfloat16)
+    rule_overrides = None
+    if serve_tp2d and kind == "decode":
+        # 2D-TP serving: weights stay fully (data x model)-sharded and are
+        # NEVER re-gathered per step; the d_model contraction dim of every
+        # projection shards over 'data' instead, psumming activation-sized
+        # partials. batch is replicated (decode activations are tiny).
+        rule_overrides = {"batch": None, "dm_in": "data"}
+
+    with SH.use_mesh(mesh, rule_overrides):
+        in_sh = input_shardings(kind, args, mesh, cell)
+        out_sh = output_shardings(kind, in_sh, mesh, cell)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=_DONATE[kind])
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        hlo = compiled.as_text()          # post-SPMD: collectives are here
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    analysis = HA.analyze(hlo)            # loop-aware FLOPs/bytes/collectives
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    xla_flops = float(cost.get("flops", -1)) if cost else -1.0
+
+    result = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok", "kind": kind, "n_chips": n_chips,
+        "seq": cell.seq, "batch": cell.batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": analysis["flops"],
+        "hlo_bytes_per_device": analysis["bytes"],
+        # raw bytes include XLA:CPU's f32-legalization convert copies of
+        # every bf16 dot operand — buffers a TPU lowering never materializes
+        # (the MXU consumes bf16 directly). The adjusted number subtracts
+        # convert traffic and drives the roofline memory term.
+        "hlo_bytes_tpu_adjusted": analysis["bytes_tpu_adjusted"],
+        "xla_cost_analysis_flops_unscaled": xla_flops,   # loop-body-once ref
+        "collectives": {
+            "counts": {k: v["count"] for k, v in analysis["collectives"].items()},
+            "result_bytes": {k: v["bytes"] for k, v in
+                             analysis["collectives"].items()},
+            "wire_bytes_per_device": analysis["wire_bytes"],
+        },
+        "analysis_warnings": analysis["warnings"],
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[f"mem_{attr}"] = int(v)
+    return result
+
+
+def roofline_terms(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """The three roofline terms (seconds) from a dry-run record."""
+    if rec.get("status") != "ok":
+        return {}
+    flops = rec["hlo_flops_per_device"]
+    bytes_ = rec.get("hlo_bytes_tpu_adjusted", rec["hlo_bytes_per_device"])
+    wire = rec["collectives"]["wire_bytes_per_device"]
+    t_compute = flops / M.PEAK_BF16_FLOPS
+    t_memory = bytes_ / M.HBM_BW
+    t_coll = wire / M.ICI_BW_PER_LINK
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    # useful model FLOPs: 6 N D per trained token; decode/prefill: 2 N D
+    n = rec["active_params"]
+    toks = rec["batch"] * (rec["seq"] if rec["kind"] != "decode" else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * n * toks / rec["n_chips"]   # per device
+    terms.update({
+        "dominant": dom.replace("t_", "").replace("_s", ""),
+        "model_flops_per_device": model_flops,
+        "useful_flops_fraction": model_flops / flops if flops > 0 else None,
+        "roofline_fraction":
+            (model_flops / M.PEAK_BF16_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else None,
+    })
+    return terms
+
+
+def parse_kratos(text: str):
+    """'sparsity=0.9,bits=8,impl=tree,bk=128,bn=128' -> KratosSpec."""
+    from repro.core import kratos as kr
+    kw = {}
+    for part in text.split(","):
+        k, v = part.split("=")
+        kw[k] = v if k in ("impl", "unroll") else (
+            float(v) if k == "sparsity" else int(v))
+    return kr.KratosSpec(**kw)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=[s.name for s in SP.SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON record here")
+    ap.add_argument("--save-hlo", default=None)
+    # §Perf iteration knobs
+    ap.add_argument("--serve-tp2d", action="store_true",
+                    help="decode cells: 2D-TP weights, no per-step regather")
+    ap.add_argument("--bf16-reduce", action="store_true",
+                    help="bf16 projection-dot accumulation -> bf16 psums")
+    ap.add_argument("--kratos", default=None,
+                    help="attach a KratosSpec, e.g. 'sparsity=0.9,bits=8'")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.kratos:
+        overrides["kratos"] = parse_kratos(args.kratos)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   save_hlo=args.save_hlo, cfg_overrides=overrides,
+                   serve_tp2d=args.serve_tp2d, bf16_reduce=args.bf16_reduce)
+    rec["variant"] = {k: v for k, v in
+                      (("serve_tp2d", args.serve_tp2d),
+                       ("bf16_reduce", args.bf16_reduce),
+                       ("kratos", args.kratos)) if v}
+    rec["roofline"] = roofline_terms(rec)
+    if args.out:                       # persist before stdout (SIGPIPE-safe)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
+tests and benches must keep seeing 1 device).
+
+Topology targets (TPU v5e-class):
+  single pod : 16 x 16 = 256 chips, axes ('data', 'model')
+  multi pod  : 2 x 16 x 16 = 512 chips, axes ('pod', 'data', 'model') —
+               'pod' is the DCN-grade axis (extra DP by default, pipeline
+               stage axis optionally; see distributed/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e-class, per chip)
+PEAK_BF16_FLOPS = 197e12        # FLOP/s
+PEAK_INT8_OPS = 394e12          # OP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~ per-axis-neighbor)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB

@@ -1,0 +1,195 @@
+"""The assigned (architecture x input-shape) grid: 10 archs x 4 shapes.
+
+Defines, per cell:
+  * the step being lowered (train_step / prefill / decode),
+  * `input_specs()` — weak-type-correct ShapeDtypeStruct stand-ins for every
+    step input (params, optimizer state, batches, KV caches) — nothing is
+    ever allocated,
+  * applicability (long_500k only runs where the KV state is bounded or
+    sub-quadratic; see DESIGN.md §Shape-cell skips),
+  * the per-arch dry-run policy: grad-accumulation factor and dtypes chosen
+    so every cell fits 16 GB/chip on the production mesh (verified by
+    compiled.memory_analysis(), EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.distributed import steps as ST
+from repro.models import transformer as T
+from repro.optim import adamw as O
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+# long_500k runs only where the per-layer KV state is bounded (SWA circular
+# cache) or O(1) (SSM); pure full-attention archs are skipped per the brief.
+LONG_OK = {
+    "falcon_mamba_7b": "O(1) SSM state",
+    "jamba_v0_1_52b": "SSM + 1:8 attn layers (the few full caches shard and fit)",
+    "h2o_danube_1_8b": "SWA: cache capped at window=4096",
+    "llava_next_mistral_7b": "Mistral SWA: cache capped at window=4096",
+    "gemma2_27b": "alternating local/global: half the caches are window-capped,"
+                  " the 23 global 500k caches shard over the mesh and fit",
+}
+LONG_SKIP_REASON = ("pure full-attention: every layer needs an unbounded "
+                    "O(S) cache and O(S^2) prefill; skipped per brief")
+
+
+def cell_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    arch = C.ALIASES.get(arch, arch)
+    if shape == "long_500k":
+        if arch not in LONG_OK:
+            return False, LONG_SKIP_REASON
+        return True, LONG_OK[arch]
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Per-arch dry-run policy (memory fitting knobs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DryrunPolicy:
+    grad_accum: int = 4              # train_4k microbatching
+    opt_state_dtype: str = "float32"
+    param_dtype: str = "bfloat16"
+    act_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"     # grad-accumulation buffer
+    remat_policy: str = "nothing"
+
+
+POLICIES: Dict[str, DryrunPolicy] = {
+    "minicpm3_4b": DryrunPolicy(grad_accum=4),
+    # ga=4 (not 16): SP residual sharding fits the activations, and the
+    # per-layer gradient psum over 'data' runs per microbatch — fewer
+    # microbatches cut that wire term ~4x (§Perf H2.2).
+    "nemotron_4_340b": DryrunPolicy(grad_accum=4, opt_state_dtype="bfloat16",
+                                    accum_dtype="bfloat16"),
+    "gemma2_27b": DryrunPolicy(grad_accum=8),
+    "h2o_danube_1_8b": DryrunPolicy(grad_accum=2),
+    "jamba_v0_1_52b": DryrunPolicy(grad_accum=8),
+    "whisper_large_v3": DryrunPolicy(grad_accum=2),
+    "deepseek_v2_lite_16b": DryrunPolicy(grad_accum=4),
+    "deepseek_moe_16b": DryrunPolicy(grad_accum=4),
+    "llava_next_mistral_7b": DryrunPolicy(grad_accum=8),
+    "falcon_mamba_7b": DryrunPolicy(grad_accum=8),
+}
+
+
+def policy_for(arch: str) -> DryrunPolicy:
+    return POLICIES[C.ALIASES.get(arch, arch)]
+
+
+def config_for_dryrun(arch: str, **overrides) -> T.ModelConfig:
+    """Full published config with dry-run dtypes applied."""
+    pol = policy_for(arch)
+    cfg = C.get_config(arch)
+    return dataclasses.replace(
+        cfg, param_dtype=pol.param_dtype, dtype=pol.act_dtype,
+        remat=True, remat_policy=pol.remat_policy, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input builders (never allocate)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: T.ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.batch, cell.seq
+    out = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+    if cfg.enc_dec:
+        out["frames"] = _sds((b, cfg.enc_positions, cfg.d_model), jnp.float32)
+    if cfg.n_img_tokens:
+        out["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model),
+                                 jnp.float32)
+    return out
+
+
+def state_specs(cfg: T.ModelConfig, opt_cfg: O.OptimizerConfig):
+    """eval_shape of the training state (params + AdamW m/v + step)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def build(k):
+        return ST.init_train_state(k, cfg, opt_cfg)
+
+    return jax.eval_shape(build, key)
+
+
+def param_specs(cfg: T.ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: T.init(k, cfg), key)
+
+
+def cache_specs(cfg: T.ModelConfig, batch: int, max_len: int, dtype):
+    return jax.eval_shape(
+        functools.partial(T.make_caches, cfg, batch, max_len, dtype=dtype))
+
+
+def cell_inputs(arch: str, cell: ShapeCell, cfg: Optional[T.ModelConfig] = None,
+                opt_cfg: Optional[O.OptimizerConfig] = None):
+    """Returns (step_kind, args_pytree_of_SDS) for the cell."""
+    pol = policy_for(arch)
+    cfg = cfg or config_for_dryrun(arch)
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or O.OptimizerConfig(state_dtype=pol.opt_state_dtype)
+        state = state_specs(cfg, opt_cfg)
+        batch = batch_specs(cfg, cell)
+        return "train", (state, batch)
+    params = param_specs(cfg)
+    cdtype = jnp.dtype(pol.cache_dtype)
+    if cell.kind == "prefill":
+        max_len = cell.seq + cfg.n_img_tokens
+        caches = cache_specs(cfg, cell.batch, max_len, cdtype)
+        batch = batch_specs(cfg, cell)
+        del batch["labels"]
+        return "prefill", (params, batch, caches)
+    # decode: one new token against a cache holding `seq` positions
+    max_len = cell.seq + cfg.n_img_tokens
+    caches = cache_specs(cfg, cell.batch, max_len, cdtype)
+    token = _sds((cell.batch, 1), jnp.int32)
+    index = _sds((), jnp.int32)
+    return "decode", (params, caches, token, index)
+
+
+def make_step_fn(arch: str, cell: ShapeCell, cfg: Optional[T.ModelConfig] = None,
+                 opt_cfg: Optional[O.OptimizerConfig] = None, *,
+                 mesh_dp: int = 16, backend: str = "ref"):
+    """The python callable lowered for this cell."""
+    pol = policy_for(arch)
+    cfg = cfg or config_for_dryrun(arch)
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or O.OptimizerConfig(state_dtype=pol.opt_state_dtype)
+        # keep >= 1 batch row per data shard in each microbatch
+        ga = max(1, min(pol.grad_accum, cell.batch // max(mesh_dp, 1)))
+        return ST.make_train_step(cfg, opt_cfg, grad_accum=ga, backend=backend,
+                                  accum_dtype=pol.accum_dtype)
+    if cell.kind == "prefill":
+        return ST.make_prefill_step(cfg, backend=backend)
+    return ST.make_decode_step(cfg, backend=backend)

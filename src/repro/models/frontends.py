@@ -1,0 +1,83 @@
+"""Modality frontends — STUBS per the brief.
+
+The [audio] and [vlm] assigned architectures specify the transformer
+BACKBONE; `input_specs()` provides precomputed frame/patch embeddings, and
+these helpers generate such embeddings from raw-ish inputs so examples and
+tests have something concrete to feed:
+
+  * whisper: raw waveform -> log-mel-ish frames -> (B, 1500, d) embeddings
+    via a FIXED seeded projection (stands in for the two conv1d layers);
+  * llava-next anyres: image -> 5 tiles x 576 patches -> (B, 2880, d)
+    embeddings via a fixed seeded projection (stands in for CLIP-ViT +
+    the multimodal projector).
+
+They are deterministic, shape-faithful, and cheap — NOT trained vision or
+audio towers. DESIGN.md §arch mapping records this as an explicit stub.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+WHISPER_FRAMES = 1500        # 30 s at 50 fps after the conv stride-2
+LLAVA_TILES = 5              # anyres: 4 crops + 1 downscaled overview
+LLAVA_PATCHES_PER_TILE = 576  # 24 x 24 at patch 14 on 336px tiles
+
+
+def _fixed_projection(seed: int, d_in: int, d_out: int) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, d_in, d_out]))
+    return (rng.standard_normal((d_in, d_out)) / np.sqrt(d_in)).astype(
+        np.float32)
+
+
+def whisper_frames(waveform: np.ndarray, d_model: int,
+                   n_mels: int = 128) -> jnp.ndarray:
+    """waveform: (B, T) float. Returns (B, 1500, d_model) frame embeddings."""
+    b, t = waveform.shape
+    hop = max(1, t // WHISPER_FRAMES)
+    frames = waveform[:, :hop * WHISPER_FRAMES].reshape(
+        b, WHISPER_FRAMES, hop)
+    # crude energy features standing in for the log-mel filterbank
+    feats = np.stack([
+        np.log1p(np.abs(frames)).mean(-1),
+        frames.std(-1),
+        frames.max(-1),
+        frames.min(-1),
+    ], axis=-1).astype(np.float32)                       # (B, 1500, 4)
+    feats = np.repeat(feats, n_mels // 4, axis=-1)       # (B, 1500, n_mels)
+    proj = _fixed_projection(0xA0D10, n_mels, d_model)
+    return jnp.asarray(feats @ proj)
+
+
+def llava_patches(image: np.ndarray, d_model: int) -> jnp.ndarray:
+    """image: (B, H, W, 3) float in [0,1]. Returns (B, 2880, d) embeddings.
+
+    Anyres tiling is simulated: the image is resized (strided) into 5 tiles
+    of 24x24 patch grids; each patch's mean colour + position becomes the
+    feature vector fed to the fixed projection.
+    """
+    b, h, w, _ = image.shape
+    grid = 24
+    feats = []
+    for tile in range(LLAVA_TILES):
+        # tile 0..3: quadrants; tile 4: whole image
+        if tile < 4:
+            ys = slice((tile // 2) * h // 2, (tile // 2 + 1) * h // 2)
+            xs = slice((tile % 2) * w // 2, (tile % 2 + 1) * w // 2)
+            sub = image[:, ys, xs]
+        else:
+            sub = image
+        sh, sw = sub.shape[1] // grid, sub.shape[2] // grid
+        sub = sub[:, :sh * grid, :sw * grid]
+        patches = sub.reshape(b, grid, sh, grid, sw, 3).mean((2, 4))
+        pos = np.stack(np.meshgrid(np.linspace(0, 1, grid),
+                                   np.linspace(0, 1, grid),
+                                   indexing="ij"), -1)
+        f = np.concatenate([patches,
+                            np.broadcast_to(pos, (b, grid, grid, 2)),
+                            np.full((b, grid, grid, 1), tile / 4.0)], -1)
+        feats.append(f.reshape(b, grid * grid, 6))
+    feats = np.concatenate(feats, axis=1).astype(np.float32)  # (B, 2880, 6)
+    proj = _fixed_projection(0x11A7A, 6, d_model)
+    return jnp.asarray(feats @ proj)

@@ -1,0 +1,126 @@
+"""AdamW + schedules, from scratch (no optax in this environment).
+
+Notable scale features:
+  * optimizer-state dtype is configurable (`state_dtype='bfloat16'` halves
+    the m/v footprint — required to fit nemotron-340B's states in
+    16 GB/chip; the update math still runs in f32);
+  * states inherit the parameter sharding (FSDP'd params => ZeRO-sharded
+    optimizer, no extra code);
+  * global-norm clipping;
+  * optional int8 error-feedback gradient compression hook
+    (distributed/compression.py) applied before the update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"
+    # layer-stacked leaves (scan blocks, (L, ...) >= 16M elems) update via
+    # lax.map over the layer axis, bounding the f32 update temporaries to one
+    # layer slice. MEASURED REFUTED on XLA:CPU (EXPERIMENTS.md §Perf): the
+    # map's stacked outputs allocate fresh buffers and temp grew 18.5->28.9
+    # GiB; left off by default, kept as a knob for TPU re-evaluation.
+    chunk_stacked_update: bool = False
+    chunk_threshold_elems: int = 1 << 24
+
+
+def warmup_cosine(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def _is_float_leaf(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def adamw_init(params, cfg: OptimizerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def zeros(x):
+        return jnp.zeros(x.shape, dt) if _is_float_leaf(x) else None
+
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig,
+                 lr: Optional[jnp.ndarray] = None):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    count = opt_state["count"] + 1
+    if cfg.clip_norm is not None:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    lr = warmup_cosine(cfg, count) if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd_math(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return (newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype))
+
+    def upd(p, g, m, v):
+        if g is None or not _is_float_leaf(p):
+            return p, m, v
+        if (cfg.chunk_stacked_update and p.ndim >= 3
+                and p.size >= cfg.chunk_threshold_elems):
+            return jax.lax.map(lambda a: upd_math(*a), (p, g, m, v))
+        return upd_math(p, g, m, v)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gn
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    return (lambda p: adamw_init(p, cfg),
+            lambda g, s, p, lr=None: adamw_update(g, s, p, cfg, lr))

@@ -1,0 +1,3 @@
+from repro.train.loop import (TrainLoopConfig, SimulatedFailure, run_training)
+
+__all__ = ["TrainLoopConfig", "SimulatedFailure", "run_training"]

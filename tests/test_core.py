@@ -1,0 +1,213 @@
+"""core/: sparsity plans, quantization, KratosSpec end-to-end, conv."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv as KC
+from repro.core import kratos as kr
+from repro.core import quantize as qz
+from repro.core import sparsity as sp
+
+
+# ---------------------------------------------------------------------------
+# sparsity plans
+# ---------------------------------------------------------------------------
+
+def test_plan_balanced_and_deterministic():
+    p1 = sp.make_plan(256, 128, bk=16, bn=16, sparsity=0.5, seed=7)
+    p2 = sp.make_plan(256, 128, bk=16, bn=16, sparsity=0.5, seed=7)
+    np.testing.assert_array_equal(p1.indices, p2.indices)
+    assert p1.nnz == 8                      # 16 k-blocks * (1 - 0.5)
+    assert p1.indices.shape == (8, 8)
+    assert (np.diff(p1.indices, axis=1) > 0).all()     # sorted, unique
+    p3 = sp.make_plan(256, 128, bk=16, bn=16, sparsity=0.5, seed=8)
+    assert not np.array_equal(p1.indices, p3.indices)  # seed matters
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.1, 0.5, 0.9])
+def test_plan_flops_fraction_linear(sparsity):
+    plan = sp.make_plan(1280, 1280, bk=128, bn=128, sparsity=sparsity)
+    assert abs(plan.dense_flops_fraction - (1 - sparsity)) < 0.051
+
+
+def test_mask_matches_plan_and_roundtrip():
+    plan = sp.make_plan(64, 64, bk=8, bn=8, sparsity=0.5, seed=1)
+    mask = sp.plan_mask(plan)
+    assert mask.shape == (64, 64)
+    assert abs(mask.mean() - 0.5) < 1e-6
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                    jnp.float32)
+    blocks = sp.pack_blocks(w, plan)
+    back = sp.unpack_blocks(blocks, plan)
+    np.testing.assert_allclose(np.asarray(back),
+                               np.asarray(w) * mask, rtol=1e-6)
+
+
+def test_plan_gradients_flow_through_pack():
+    plan = sp.make_plan(32, 32, bk=8, bn=8, sparsity=0.5, seed=0)
+    w = jnp.ones((32, 32))
+
+    def f(w):
+        return jnp.sum(sp.pack_blocks(w, plan) ** 2)
+
+    g = jax.grad(f)(w)
+    mask = sp.plan_mask(plan)
+    np.testing.assert_allclose(np.asarray(g), 2.0 * mask, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,max_rel_err", [(8, 0.01), (4, 0.12), (2, 0.8)])
+def test_quant_dequant_error_bounds(bits, max_rel_err):
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(128, 64)),
+                    jnp.float32)
+    qt = qz.quantize(w, bits)
+    back = qz.dequantize(qt)
+    err = np.abs(np.asarray(back - w)).max()
+    assert err <= np.abs(np.asarray(w)).max() * max_rel_err + 1e-6
+
+
+def test_quant_packed_bytes_scale_with_bits():
+    w = jnp.ones((128, 64))
+    sizes = {b: qz.quantize(w, b).data.size for b in (8, 4, 2, 1)}
+    assert sizes[8] == 2 * sizes[4] == 4 * sizes[2] == 8 * sizes[1]
+
+
+def test_fake_quantize_idempotent():
+    w = jnp.asarray(np.random.default_rng(3).normal(size=(64, 32)), jnp.float32)
+    fq = qz.fake_quantize(w, 4)
+    fq2 = qz.fake_quantize(fq, 4)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(fq2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_binary_quant_sign_and_scale():
+    col0 = [1.0, -2.0, 3.0, -4.0, 1.0, -2.0, 3.0, -4.0]   # mean |.| = 2.5
+    col1 = [-1.0] * 8                                      # mean |.| = 1.0
+    w = jnp.asarray(np.stack([col0, col1], axis=1), jnp.float32)
+    qt = qz.quantize(w, 1)
+    back = np.asarray(qz.dequantize(qt))
+    np.testing.assert_allclose(back[:, 0], np.sign(col0) * 2.5, rtol=1e-5)
+    np.testing.assert_allclose(back[:, 1], [-1.0] * 8, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# KratosSpec end-to-end (train path vs packed serving path)
+# ---------------------------------------------------------------------------
+
+SPECS = [
+    kr.KratosSpec(),
+    kr.KratosSpec(sparsity=0.5, bk=8, bn=8),
+    kr.KratosSpec(sparsity=0.5, bk=8, bn=8, impl="systolic"),
+    kr.KratosSpec(bits=8),
+    kr.KratosSpec(bits=4),
+    kr.KratosSpec(sparsity=0.75, bits=8, bk=8, bn=8),
+    kr.KratosSpec(sparsity=0.5, bits=4, bk=8, bn=8),
+    kr.KratosSpec(bits=8, act_bits=8),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"s{s.sparsity}b{s.bits}"
+                         f"{s.impl[0]}a{s.act_bits}")
+def test_kratos_train_vs_packed(spec):
+    """pack() + apply_packed == apply on the trained dense weight."""
+    key = jax.random.PRNGKey(0)
+    params = kr.init(key, 64, 32, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    y_train = kr.apply(params, x, spec)
+    packed = kr.pack(params, spec)
+    y_serve = kr.apply_packed(packed, x, spec, 64, 32)
+    rtol = 0.08 if spec.act_bits else 1e-4     # a8 requantizes activations
+    np.testing.assert_allclose(np.asarray(y_serve), np.asarray(y_train),
+                               rtol=rtol, atol=0.05)
+
+
+def test_kratos_tree_equals_systolic_math():
+    """Same plan: tree (gathered) and systolic (masked dense) agree exactly."""
+    spec_t = kr.KratosSpec(sparsity=0.5, bk=8, bn=8, impl="tree")
+    spec_s = spec_t.with_(impl="systolic")
+    params = kr.init(jax.random.PRNGKey(2), 64, 48, spec_t)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    np.testing.assert_allclose(np.asarray(kr.apply(params, x, spec_t)),
+                               np.asarray(kr.apply(params, x, spec_s)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kratos_sparse_init_stays_sparse_under_sgd():
+    """Pruned blocks receive zero gradient through the tree path."""
+    spec = kr.KratosSpec(sparsity=0.5, bk=8, bn=8)
+    params = kr.init(jax.random.PRNGKey(4), 32, 32, spec)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+
+    def loss(p):
+        return jnp.sum(kr.apply(p, x, spec) ** 2)
+
+    g = jax.grad(loss)(params)["w"]
+    plan = kr.plan_for(32, 32, spec)
+    mask = sp.plan_mask(plan)
+    np.testing.assert_allclose(np.asarray(g) * (1 - mask), 0.0, atol=1e-6)
+
+
+def test_cost_report_linear_in_sparsity_quadratic_story():
+    """C1/C2 analytics: tree MACs ∝ (1-s); systolic flat; bytes ∝ bits."""
+    n = 1280
+    base = kr.cost_report(n, n, kr.KratosSpec())
+    half = kr.cost_report(n, n, kr.KratosSpec(sparsity=0.5))
+    assert abs(half["mac_fraction"] - 0.5) < 0.06
+    sysl = kr.cost_report(n, n, kr.KratosSpec(sparsity=0.5, impl="systolic"))
+    assert sysl["mac_fraction"] == 1.0
+    w4 = kr.cost_report(n, n, kr.KratosSpec(bits=4))
+    assert abs(w4["weight_bytes_fraction"] - 0.25) < 1e-6
+    w8a8 = kr.cost_report(n, n, kr.KratosSpec(bits=8, act_bits=8))
+    assert w8a8["equiv_compute_time_fraction"] == 0.5
+    assert base["mac_fraction"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# conv via im2col onto Kratos GEMM
+# ---------------------------------------------------------------------------
+
+def test_conv1d_matches_lax_conv():
+    key = jax.random.PRNGKey(6)
+    fw, ic, oc = 3, 8, 16
+    p = KC.conv1d_init(key, fw, ic, oc)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, ic))
+    got = KC.conv1d(p, x)
+    w = p["w"].reshape(fw, ic, oc)
+    want = KC.conv1d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_matches_lax_conv():
+    key = jax.random.PRNGKey(8)
+    fw, fh, ic, oc = 3, 3, 4, 8
+    p = KC.conv2d_init(key, fw, fh, ic, oc)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 12, 10, ic))
+    got = KC.conv2d(p, x)
+    w = p["w"].reshape(fw, fh, ic, oc)
+    want = KC.conv2d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_sparse_quantized():
+    """The paper's headline combination on a conv: prune + quantize."""
+    spec = kr.KratosSpec(sparsity=0.5, bits=8, bk=4, bn=4)
+    key = jax.random.PRNGKey(10)
+    fw, fh, ic, oc = 3, 3, 4, 8
+    p = KC.conv2d_init(key, fw, fh, ic, oc, spec)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 8, 8, ic))
+    got = KC.conv2d(p, x, spec)
+    # oracle: dense conv on the masked+fake-quantized filter
+    plan = kr.plan_for(fw * fh * ic, oc, spec)
+    wm = p["w"] * jnp.asarray(sp.plan_mask(plan))
+    wq = qz.fake_quantize(wm, 8)
+    want = KC.conv2d_ref(x, wq.reshape(fw, fh, ic, oc))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)

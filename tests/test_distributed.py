@@ -1,0 +1,208 @@
+"""Sharding rules, local-mesh execution, HLO analyzer, dryrun plumbing."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs as C
+from repro.analysis import hlo as HA
+from repro.distributed import sharding as SH
+from repro.distributed import steps as ST
+from repro.launch import mesh as M
+from repro.launch import shapes as SP
+from repro.models import transformer as T
+from repro.optim import adamw as O
+
+
+# ---------------------------------------------------------------------------
+# param/cache pspec rules
+# ---------------------------------------------------------------------------
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    devs = np.asarray([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)      # structural only — never dispatched to
+
+
+def test_param_pspecs_cover_all_archs():
+    mesh = _fake_mesh()
+    for arch in C.ARCH_IDS:
+        cfg = C.get_config(arch)
+        shapes = SP.param_specs(cfg)
+        specs = SH.param_pspecs(shapes, mesh)
+        n_sharded = 0
+        for sds, spec in zip(jax.tree_util.tree_leaves(shapes),
+                             jax.tree_util.tree_leaves(
+                                 specs, is_leaf=lambda x: isinstance(x, P))):
+            assert len(spec) <= len(sds.shape), (arch, sds.shape, spec)
+            # divisibility sanitization: every entry must divide the dim
+            for i, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                shards = int(np.prod([mesh.shape[a] for a in axes]))
+                assert sds.shape[i] % shards == 0, (arch, sds.shape, spec)
+                n_sharded += 1
+        assert n_sharded > 0, f"{arch}: nothing sharded at all"
+
+
+def test_big_projections_are_2d_sharded():
+    """Every >=1M-param 2-D projection must shard over BOTH mesh axes
+    (FSDP x TP) — scalars/norms may replicate, big weights must not."""
+    mesh = _fake_mesh()
+    cfg = C.get_config("nemotron-4-340b")
+    shapes = SP.param_specs(cfg)
+    specs = SH.param_pspecs(shapes, mesh)
+    flat_s = jax.tree_util.tree_leaves_with_path(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, sds), spec in zip(flat_s, flat_p):
+        used = [a for e in spec if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))]
+        if np.prod(sds.shape) >= 1 << 25:      # true projections: FSDP x TP
+            assert "model" in used and "data" in used, (path, sds.shape, spec)
+        elif np.prod(sds.shape) >= 1 << 20:    # stacked vectors: >= 1 axis
+            assert used, (path, sds.shape, spec)
+
+
+def test_cache_pspecs_decode_vs_long():
+    mesh = _fake_mesh()
+    cfg = SP.config_for_dryrun("nemotron_4_340b")
+    caches = SP.cache_specs(cfg, 128, 32768, jnp.bfloat16)
+    specs = SH.cache_pspecs(caches, mesh, 128)
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    # kv=8 doesn't divide model=16: cache must shard seq over model instead
+    assert any("model" in str(s) for s in leaves)
+    # batch=1 long-context: batch axis must NOT be sharded
+    specs1 = SH.cache_pspecs(caches, mesh, 1)
+    for s in jax.tree_util.tree_leaves(specs1,
+                                       is_leaf=lambda x: isinstance(x, P)):
+        assert s[0] is None or (len(s) and s[0] != "data"), s
+
+
+def test_batch_pspec_divisibility():
+    mesh = _fake_mesh()
+    assert SH.batch_pspec(mesh, 256) == P(("data",))
+    assert SH.batch_pspec(mesh, 16) == P("data")
+    assert SH.batch_pspec(mesh, 1) == P(None)
+    mesh3 = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert SH.batch_pspec(mesh3, 256) == P(("pod", "data"))
+
+
+def test_activation_resolver_dedup_and_divisibility():
+    mesh = _fake_mesh((4, 4), ("data", "model"))
+    rules = SH.activation_rules(mesh)
+    assert rules["batch"] == ("data",)
+    resolver = SH._resolver_for(mesh)
+    # duplicate 'model' request: second use must drop, not crash
+    x = jnp.zeros((8, 8, 8, 8))
+    # can't actually dispatch on a fake mesh; check the spec path via trace
+    jaxpr = jax.make_jaxpr(
+        lambda y: resolver(y, ("expert", None, None, "ffn")))(x)
+    assert "sharding_constraint" in str(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# real execution on a local (1-device) mesh
+# ---------------------------------------------------------------------------
+
+def test_train_step_under_local_mesh():
+    cfg = C.get_smoke("gemma2_27b")
+    mesh = M.make_local_mesh(1, 1)
+    with SH.use_mesh(mesh):
+        state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
+                                    O.OptimizerConfig())
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                  jnp.int32)}
+        step = jax.jit(ST.make_train_step(cfg, O.OptimizerConfig()))
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer: hand-computable oracles
+# ---------------------------------------------------------------------------
+
+def test_hlo_analyzer_matmul_exact():
+    a = jnp.zeros((256, 512), jnp.float32)
+    b = jnp.zeros((512, 128), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    r = HA.analyze(c.as_text())
+    expect = 2 * 256 * 512 * 128
+    assert abs(r["flops"] - expect) / expect < 0.05
+
+
+def test_hlo_analyzer_scan_trip_count():
+    def g(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jnp.zeros((64, 128))
+    ws = jnp.zeros((10, 128, 128))
+    c = jax.jit(g).lower(x, ws).compile()
+    r = HA.analyze(c.as_text())
+    expect = 10 * (2 * 64 * 128 * 128 + 64 * 128)
+    assert abs(r["flops"] - expect) / expect < 0.02
+    assert not r["warnings"]
+
+
+def test_hlo_analyzer_nested_scans_multiply():
+    def g(x, ws):
+        def outer(x, _):
+            def inner(x, w):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, ws)
+            return x, None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    x = jnp.zeros((32, 64))
+    ws = jnp.zeros((5, 64, 64))
+    c = jax.jit(g).lower(x, ws).compile()
+    r = HA.analyze(c.as_text())
+    expect = 3 * 5 * 2 * 32 * 64 * 64
+    assert abs(r["flops"] - expect) / expect < 0.05
+
+
+def test_hlo_analyzer_bytes_sane():
+    a = jnp.zeros((1024, 1024), jnp.float32)
+    c = jax.jit(lambda a: a + 1.0).lower(a).compile()
+    r = HA.analyze(c.as_text())
+    expect = 2 * 1024 * 1024 * 4         # read + write
+    assert 0.5 * expect <= r["bytes"] <= 3 * expect
+
+
+# ---------------------------------------------------------------------------
+# shape-cell plumbing
+# ---------------------------------------------------------------------------
+
+def test_cell_grid_is_complete():
+    cells = [(a, s.name) for a in C.ARCH_IDS for s in SP.SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if SP.cell_applicable(*c)[0]]
+    skipped = [c for c in cells if not SP.cell_applicable(*c)[0]]
+    assert len(runnable) == 35 and len(skipped) == 5
+    for arch, shape in skipped:
+        assert shape == "long_500k"
+        ok, reason = SP.cell_applicable(arch, shape)
+        assert "full-attention" in reason
+
+
+def test_input_specs_never_allocate():
+    cfg = SP.config_for_dryrun("nemotron_4_340b")
+    kind, args = SP.cell_inputs("nemotron_4_340b", SP.SHAPES_BY_NAME["train_4k"],
+                                cfg=cfg)
+    assert kind == "train"
+    for leaf in jax.tree_util.tree_leaves(args):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    # 340B params present as shapes only
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(args[0]["params"]))
+    assert total > 300e9

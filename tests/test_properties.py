@@ -1,0 +1,115 @@
+"""Seeded property grids over system invariants (hypothesis-style, no
+external deps): sharding-spec sanity, attention masking laws, quantization
+monotonicity, plan-balance across the whole Table-II space."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bench_specs as BS
+from repro.core import kratos as kr
+from repro.core import quantize as qz
+from repro.core import sparsity as sp
+from repro.models import attention as A
+
+
+def test_every_table2_sweep_point_has_consistent_analytics():
+    """All 800 design points: effective MACs <= dense, fraction in (0,1],
+    bytes consistent with bits, systolic always full-MACs."""
+    for base in BS.TABLE_II:
+        for spec in BS.sweep(base):
+            r = spec.resource_report()
+            assert 0 < r["mac_fraction"] <= 1.0 + 1e-9, spec
+            assert r["effective_macs"] <= r["dense_macs"] + 1e-9
+            bits = spec.bits or 16
+            m, n, p = spec.gemm_dims()
+            dense_bytes = n * p * bits / 8.0
+            assert r["weight_bytes"] <= dense_bytes + 1e-6, spec
+            if spec.kernel == "gemms":
+                assert r["mac_fraction"] == 1.0, "systolic must not prune"
+            elif spec.sparsity >= 0.5:
+                assert r["mac_fraction"] <= 0.6, spec
+
+
+def test_balanced_plans_are_balanced_everywhere():
+    rng = np.random.default_rng(7)
+    for _ in range(12):
+        bk = int(rng.choice([8, 16, 32]))
+        bn = int(rng.choice([8, 16, 32]))
+        n_in = bk * int(rng.integers(2, 12))
+        n_out = bn * int(rng.integers(2, 12))
+        s = float(rng.uniform(0, 0.95))
+        plan = sp.make_plan(n_in, n_out, bk=bk, bn=bn, sparsity=s,
+                            seed=int(rng.integers(0, 1000)))
+        # every output block keeps exactly nnz k-blocks (static grid)
+        assert plan.indices.shape == (plan.n_pb, plan.nnz)
+        assert (plan.indices >= 0).all() and (plan.indices < plan.n_kb).all()
+        for j in range(plan.n_pb):
+            assert len(set(plan.indices[j].tolist())) == plan.nnz
+
+
+def test_quant_error_monotone_in_bits():
+    w = jnp.asarray(np.random.default_rng(8).normal(size=(64, 32)),
+                    jnp.float32)
+    errs = []
+    for bits in (8, 4, 2, 1):
+        back = qz.dequantize(qz.quantize(w, bits))
+        errs.append(float(jnp.mean(jnp.abs(back - w))))
+    assert errs == sorted(errs), f"error must grow as bits shrink: {errs}"
+
+
+def test_attention_window_subset_law():
+    """window=inf == plain causal; smaller windows only remove attention."""
+    b, h, s, d = 1, 2, 24, 8
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (b, h, s, d))
+               for i in (30, 31, 32))
+    pos = jnp.arange(s)
+    full = A.attention_positional(q, k, v, pos, pos, causal=True, window=s)
+    plain = A.attention_positional(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(plain),
+                               rtol=1e-5, atol=1e-6)
+    w1 = A.attention_positional(q, k, v, pos, pos, causal=True, window=1)
+    # window=1: each position attends only to itself => output = v row-wise
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softcap_bounds_logits_effect():
+    """softcap -> attention scores bounded => output changes continuously."""
+    b, h, s, d = 1, 1, 16, 8
+    q = jax.random.normal(jax.random.PRNGKey(33), (b, h, s, d)) * 10
+    k = jax.random.normal(jax.random.PRNGKey(34), (b, h, s, d)) * 10
+    v = jax.random.normal(jax.random.PRNGKey(35), (b, h, s, d))
+    pos = jnp.arange(s)
+    big = A.attention_positional(q, k, v, pos, pos, causal=True,
+                                 softcap=1e9)
+    none = A.attention_positional(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(none),
+                               rtol=1e-4, atol=1e-5)
+    capped = A.attention_positional(q, k, v, pos, pos, causal=True,
+                                    softcap=1.0)
+    assert np.isfinite(np.asarray(capped)).all()
+
+
+def test_kratos_identity_spec_is_exact_dense():
+    params = kr.init(jax.random.PRNGKey(36), 32, 16, kr.DENSE)
+    x = jax.random.normal(jax.random.PRNGKey(37), (4, 32))
+    y = kr.apply(params, x, kr.DENSE)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ params["w"]),
+                               rtol=1e-5, atol=1e-5)
+    assert kr.DENSE.is_identity
+
+
+def test_pack_apply_roundtrip_under_sharded_context_is_pure():
+    """plan_for is a pure cached function of (shape, spec): calling it from
+    two sites yields the identical object (trace-stability invariant)."""
+    spec = kr.KratosSpec(sparsity=0.5, bk=8, bn=8, seed=3)
+    p1 = kr.plan_for(64, 32, spec)
+    p2 = kr.plan_for(64, 32, spec)
+    assert p1 is p2
+    assert p1 is not kr.plan_for(64, 32, dataclasses.replace(spec, seed=4))
