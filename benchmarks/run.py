@@ -20,6 +20,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
     t0 = time.time()
+    os.makedirs("results", exist_ok=True)
 
     section("Fig. 1 — compounding on a 64x64 GEMM (C5)")
     from benchmarks import fig1_unrolled_area
@@ -38,11 +39,11 @@ def main() -> None:
 
     section("Fig. 7 — throughput vs unroll factor (C3)")
     from benchmarks import fig7_throughput
-    fig7_throughput.run()
+    fig7_throughput.run(quick=a.quick)
 
     section("Table III / Fig. 8 — granularity sweep (C4)")
     from benchmarks import table3_tilesweep
-    table3_tilesweep.run()
+    table3_tilesweep.run(quick=a.quick)
 
     ledger = "results/dryrun.jsonl"
     if os.path.exists(ledger):

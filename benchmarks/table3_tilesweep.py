@@ -57,14 +57,18 @@ def mxu_pad(g: int) -> float:
     return (128.0 / g) ** 2 if g < 128 else 1.0
 
 
-def run(n: int = 2048, p: int = 2048, bits: int = 8, seed: int = 0) -> None:
+def run(n: int = 2048, p: int = 2048, bits: int = 8, seed: int = 0,
+        quick: bool = False) -> None:
+    if quick:
+        n, p = min(n, 1024), min(p, 1024)
+    sparsities = SPARSITY[::2] if quick else SPARSITY
     rng = np.random.default_rng(seed)
     w = rng.standard_normal((n, p)).astype(np.float32)
     csv = CSV(["sparsity", "grain", "kept_frac", "eff_macs_frac",
                "hw_macs_frac", "vmem_bytes", "t_model_us", "adp",
                "adp_norm"])
     best = {}
-    for s in SPARSITY:
+    for s in sparsities:
         thr = np.quantile(np.abs(w), s)
         mask = np.abs(w) > thr            # magnitude pruning -> unstructured
         rows = []

@@ -1,9 +1,12 @@
-"""Batched serving: prefill + streaming decode across mixed architectures.
+"""Continuous-batched serving across mixed architectures.
 
 Serves three very different backbones (SWA dense, MLA+MoE, pure SSM) through
-the SAME prefill/decode API the dry-run lowers for the production mesh, and
-prints per-arch cache sizes — the reason long_500k is feasible for SSM/SWA
-archs (O(1) / O(window) state) and skipped for full-attention ones.
+the SAME continuous-batching engine: requests with staggered arrivals and
+unequal prompt/generation lengths join and leave the decode slab
+mid-flight, weights are packed once at load (`kratos.pack` via the serve
+registry), and per-arch cache-slab sizes are printed — the reason long_500k
+is feasible for SSM/SWA archs (O(1) / O(window) state per slot) and skipped
+for full-attention ones.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -13,50 +16,44 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs as C
-from repro.distributed import steps as ST
-from repro.models import transformer as T
+from repro.core.kratos import KratosSpec
+from repro.serve import EngineConfig, InferenceEngine, ModelRegistry
 
 ARCHS = ("h2o-danube-1.8b", "deepseek-v2-lite-16b", "falcon-mamba-7b")
-B, S0, GEN = 4, 24, 24
-
-
-def cache_bytes(caches) -> int:
-    return sum(l.size * l.dtype.itemsize
-               for l in jax.tree_util.tree_leaves(caches))
+SPEC = KratosSpec(sparsity=0.5, bits=8, bk=8, bn=8)   # the paper's headline
+N_SLOTS, MAX_LEN = 4, 64
+# (prompt_len, gen_len, arrival_step) — deliberately ragged
+TRACE = [(20, 16, 0), (8, 24, 0), (14, 10, 2), (24, 12, 4), (6, 20, 6),
+         (16, 8, 9)]
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
+    registry = ModelRegistry()
     for arch in ARCHS:
-        cfg = C.get_smoke(arch)
-        params = T.init(jax.random.PRNGKey(1), cfg)
-        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S0)), jnp.int32)
-        caches = T.make_caches(cfg, B, S0 + GEN)
-        prefill = jax.jit(ST.make_prefill_step(cfg))
-        decode = jax.jit(ST.make_decode_step(cfg))
-
+        model = registry.load(arch, SPEC)
+        engine = InferenceEngine(model,
+                                 EngineConfig(n_slots=N_SLOTS, max_len=MAX_LEN))
+        cfg = model.cfg
         t0 = time.time()
-        logits, caches = prefill(params, {"tokens": prompts}, caches)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        gen = [tok]
-        for t in range(GEN - 1):
-            logits, caches = decode(params, caches, tok, jnp.int32(S0 + t))
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            gen.append(tok)
+        reqs = [engine.submit(rng.integers(0, cfg.vocab, s0), gen,
+                              arrival_step=at) for s0, gen, at in TRACE]
+        engine.run()
         dt = time.time() - t0
-        out = np.asarray(jnp.concatenate(gen, 1))
         kind = ("SSM: O(1) state" if cfg.is_ssm else
                 f"SWA: O(window={cfg.window})" if cfg.window else
                 f"MLA: O(S x {cfg.kv_lora_rank + cfg.qk_rope_dim})"
                 if cfg.mla else "full: O(S x 2·H·dh)")
-        print(f"{arch:24s} {B}x{GEN} tokens in {dt:5.1f}s | "
-              f"cache {cache_bytes(caches)/1e6:6.2f} MB ({kind}) | "
-              f"sample: {out[0][:8]}")
+        rep = engine.metrics.report()
+        print(f"{arch:24s} {int(rep['tokens_generated'])} toks in {dt:5.1f}s"
+              f" | {rep['tokens_per_step']:.2f} tok/step,"
+              f" occupancy {rep['mean_occupancy']:.2f}"
+              f" | slab {engine.pool.bytes() / 1e6:6.2f} MB"
+              f"/{N_SLOTS} slots ({kind})"
+              f" | packed {model.compression:.1f}x"
+              f" | sample: {np.asarray(reqs[0].generated)[:6]}")
     print("serve_batched OK")
 
 

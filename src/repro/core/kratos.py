@@ -84,8 +84,15 @@ def _plan_cached(n_in: int, n_out: int, bk: int, bn: int,
 
 
 def plan_for(n_in: int, n_out: int, spec: KratosSpec) -> Optional[sp.BlockSparsePlan]:
-    """The (deterministic, cached) block plan for a given projection."""
-    if spec.sparsity == 0.0:
+    """The (deterministic, cached) block plan for a given projection.
+
+    Returns None (= dense) when the projection's shape doesn't divide the
+    block grid: an arch-wide spec touches every GEMM in the model, and the
+    odd-shaped ones (MLA rope stubs, SSM x_proj, routers) simply fall off
+    the sparsity grid rather than failing the whole model — the paper's
+    granularity lesson: the block geometry only pays where it fits.
+    """
+    if spec.sparsity == 0.0 or n_in % spec.bk or n_out % spec.bn:
         return None
     return _plan_cached(n_in, n_out, spec.bk, spec.bn,
                         int(round(spec.sparsity * 1000)), spec.seed)
@@ -118,7 +125,14 @@ def apply(params: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec = DENSE,
     x: (..., n_in) -> (..., n_out). The tree path gathers only live blocks,
     so jit/cost_analysis see (1 - sparsity) of the dense FLOPs; the systolic
     path multiplies a masked dense weight (full FLOPs) — faithful to Fig. 5.
+
+    A `PackedLinear` leaf (serving trees built by serve.registry) dispatches
+    to `apply_packed`, so the hot decode path runs on packed buffers while
+    every model call site stays oblivious.
     """
+    if isinstance(params, PackedLinear):
+        return apply_packed(params.buffers, x, spec, params.n_in,
+                            params.n_out, backend=backend)
     w = params["w"]
     n_in, n_out = w.shape
     lead = x.shape[:-1]
@@ -154,6 +168,87 @@ def apply(params: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec = DENSE,
 # Serving: pack + apply_packed
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class PackedLinear:
+    """A projection frozen into packed serving buffers.
+
+    A drop-in replacement for the training-time `{"w": ...}` leaf dict:
+    `apply()` dispatches it to `apply_packed`, so a whole model's parameter
+    tree can be re-pointed at packed buffers (serve.registry.pack_model_params)
+    without touching any model code. The logical (n_in, n_out) shape rides in
+    pytree aux-data — buffers alone can't recover it (the tree path drops
+    pruned k-blocks, sub-byte codes fold `VALUES_PER_BYTE` rows per byte).
+
+    Stacked scan-block projections keep a leading layer axis on every buffer;
+    `lax.scan` slices the leaves per layer while (n_in, n_out) stay static.
+    """
+
+    buffers: Dict[str, Any]
+    n_in: int
+    n_out: int
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.buffers))
+        return tuple(self.buffers[k] for k in keys), (keys, self.n_in, self.n_out)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, n_in, n_out = aux
+        return cls(buffers=dict(zip(keys, children)), n_in=n_in, n_out=n_out)
+
+    @property
+    def packed_bytes(self) -> int:
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.buffers):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        return total
+
+
+jax.tree_util.register_pytree_node(
+    PackedLinear, PackedLinear.tree_flatten, PackedLinear.tree_unflatten)
+
+
+def pack_linear(params: Dict[str, Any], spec: KratosSpec) -> PackedLinear:
+    """pack() a `{"w": (n_in, n_out)}` training leaf into a PackedLinear.
+
+    A stacked `(n_layers, n_in, n_out)` weight (scan blocks) is packed per
+    layer via vmap — the plan is shape-deterministic, so every layer shares
+    it and the buffers stack cleanly.
+    """
+    w = params["w"]
+    if w.ndim == 3:
+        n_in, n_out = int(w.shape[1]), int(w.shape[2])
+    elif w.ndim == 2:
+        n_in, n_out = int(w.shape[0]), int(w.shape[1])
+    else:
+        raise ValueError(f"pack_linear expects a 2-D or stacked 3-D weight, "
+                         f"got shape {w.shape}")
+    spec = serving_spec(n_in, n_out, spec)
+    if w.ndim == 3:
+        buffers = jax.vmap(lambda wl: pack({"w": wl}, spec))(w)
+    else:
+        buffers = pack(params, spec)
+    return PackedLinear(buffers=buffers, n_in=n_in, n_out=n_out)
+
+
+def serving_spec(n_in: int, n_out: int, spec: KratosSpec) -> KratosSpec:
+    """Degrade an arch-wide spec to what a given projection can pack.
+
+    Sub-byte code packing folds `VALUES_PER_BYTE[bits]` reduction rows per
+    byte; a projection (or sparse block) whose k-extent doesn't divide that
+    keeps float weights. `apply_packed` dispatches on the buffer keys
+    actually present, so pack- and apply-time decisions can't diverge.
+    """
+    if spec.bits is None:
+        return spec
+    vpb = qz.VALUES_PER_BYTE[spec.bits]
+    tree = spec.impl == "tree" and plan_for(n_in, n_out, spec) is not None
+    k_extent = spec.bk if tree else n_in
+    if k_extent % vpb:
+        spec = spec.with_(bits=None, act_bits=None)
+    return spec
+
+
 def pack(params: Dict[str, Any], spec: KratosSpec) -> Dict[str, Any]:
     """Convert trained dense params into packed inference buffers."""
     w = params["w"]
@@ -186,10 +281,17 @@ def pack(params: Dict[str, Any], spec: KratosSpec) -> Dict[str, Any]:
 
 def apply_packed(packed: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec,
                  n_in: int, n_out: int, *, backend: str = "ref") -> jnp.ndarray:
-    """Inference-time application on packed buffers."""
+    """Inference-time application on packed buffers.
+
+    Dispatch is keyed on WHICH buffers `pack()` produced (dense 'w',
+    quantized 'qt', gathered 'blocks', quantized-gathered 'qblocks'), so a
+    spec degraded at pack time (serving_spec) stays consistent here.
+    """
     lead = x.shape[:-1]
     xm = x.reshape(-1, n_in)
-    plan = plan_for(n_in, n_out, spec)
+    plan = None
+    if "blocks" in packed or "qblocks" in packed:
+        plan = plan_for(n_in, n_out, spec)
     if "w" in packed:
         y = kref.dense_matmul_ref(xm, packed["w"].astype(x.dtype)) \
             if backend == "ref" else ops.matmul(xm, packed["w"].astype(x.dtype),

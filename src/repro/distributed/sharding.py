@@ -271,11 +271,20 @@ def cache_pspecs(caches, mesh: Mesh, batch_size: int) -> Any:
 
 
 def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    """Batch-axis spec: the combined ('pod','data') tuple when the batch
+    divides the FULL mesh (so downstream reshapes can re-split it over any
+    axis subset), a plain 'data' entry when it only divides the data axis,
+    replicated otherwise. Multi-dp-axis meshes keep the tuple whenever the
+    dp product divides — 'pod' x 'data' must shard together or not at all."""
     names = mesh.axis_names
     dp_axes = tuple(a for a in ("pod", "data") if a in names)
     dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    total = int(np.prod([mesh.shape[a] for a in names]))
     if dp_axes and batch_size % dp == 0:
-        return P(dp_axes)
+        if batch_size % total == 0 or len(dp_axes) > 1 \
+                or "data" not in names:
+            return P(dp_axes)
+        return P("data")
     if "data" in names and batch_size % mesh.shape["data"] == 0:
         return P("data")
     return P(None)

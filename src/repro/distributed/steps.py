@@ -120,8 +120,14 @@ def init_train_state(key, cfg: T.ModelConfig, opt_cfg: O.OptimizerConfig):
 # Serving
 # ---------------------------------------------------------------------------
 
-def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref"):
-    """prefill(params, batch, caches) -> (next_token_logits, caches)."""
+def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
+                      last_only: bool = True):
+    """prefill(params, batch, caches) -> (next_token_logits, caches).
+
+    last_only=False returns the full (B, S, vocab) logits — the serve engine
+    right-pads prompts into compile-shape buckets and reads the logits column
+    at the true prompt end, so it needs every position.
+    """
     # remat exists to trade recompute for backward-pass memory; inference has
     # no backward pass, and the checkpoint wrapper's conditional-update
     # plumbing forced whole-cache-stack f32 convert/select churn per layer
@@ -135,7 +141,7 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref"):
         logits, _, caches = T.forward(
             params, batch["tokens"], cfg, backend=backend, caches=caches,
             img_embeds=batch.get("img_embeds"), enc_out=enc_out,
-            last_only=True)
+            last_only=last_only)
         return logits, caches
     return prefill
 
@@ -143,7 +149,11 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref"):
 def make_decode_step(cfg: T.ModelConfig, backend: str = "ref"):
     """decode(params, caches, token, index) -> (logits, caches).
 
-    token: (B, 1) int32; index: scalar int32 count of tokens already cached.
+    token: (B, 1) int32; index: scalar int32 count of tokens already cached
+    (lock-step batch), or an int32 (B,) vector of PER-SLOT counts — the
+    continuous-batching slab decode, where each cache row advances on its
+    own clock (serve.engine). One compiled step serves both regimes; the
+    vector form gathers/scatters per-slot cache offsets (models.attention).
     """
     cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
 

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as _compat
+
 
 def _bsr_kernel(idx_ref, x_ref, b_ref, o_ref, acc_ref, *, nnz: int):
     t = pl.program_id(2)
@@ -75,7 +77,7 @@ def bsr_matmul(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n_pb * bn), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(indices, jnp.int32), x, blocks)

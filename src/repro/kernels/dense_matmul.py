@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as _compat
+
 
 def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kb: int):
     t = pl.program_id(2)
@@ -60,7 +62,7 @@ def dense_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((m, p), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

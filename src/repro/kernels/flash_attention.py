@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as _compat
+
 _LANES = 128
 _NEG_INF = -1e30
 
@@ -128,7 +130,7 @@ def flash_attention(
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,0 +1,23 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed `pltpu.TPUCompilerParams` -> `pltpu.CompilerParams`; the kernels
+are written against the new name and this shim resolves whichever the
+installed jax provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+
+if CompilerParams is None:                             # pragma: no cover
+    class CompilerParams:  # type: ignore[no-redef]
+        """Fail loudly at construction, not with a NoneType call error."""
+
+        def __init__(self, *args, **kwargs):
+            raise ImportError(
+                "this jax exposes neither pallas-TPU CompilerParams nor "
+                "TPUCompilerParams; update repro.kernels.pallas_compat for "
+                "the installed jax version")

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as _compat
+
 from repro.core import quantize as qz
 
 
@@ -97,7 +99,7 @@ def quant_matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((m, p), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, qt.data, scale2d)
@@ -151,7 +153,7 @@ def quant_matmul_w8a8(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         out_shape=jax.ShapeDtypeStruct((m, p), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xq, xs, qt.data, qt.scale.reshape(1, p))
@@ -212,7 +214,7 @@ def bsr_quant_matmul(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n_pb * bn), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(indices, jnp.int32), x, qblocks, scales)

@@ -1,84 +1,79 @@
-"""Batched serving launcher: prefill + decode with KV caches and sampling.
+"""Serving launcher: continuous-batching engine over packed Kratos weights.
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
-      --batch 4 --prompt-len 32 --gen 32 [--temperature 0.8]
+      --requests 8 --prompt-len 32 --gen 32 \
+      [--sparsity 0.5 --bits 8 --impl tree] [--slots 4] [--static] \
+      [--temperature 0.8]
 
-Runs the reduced config on CPU; the serve steps are the SAME functions the
-decode_32k / long_500k dry-run cells lower for the production mesh.
+Loads the reduced config on CPU through the serve registry (weights packed
+once via kratos.pack), submits `--requests` generation requests with a small
+prompt-length jitter, and drives the engine until the trace drains. The
+engine's prefill/decode steps are the SAME `distributed.steps` factories the
+decode_32k / long_500k dry-run cells lower for the production mesh — the
+per-slot-index decode is a strict generalization of the lock-step step.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs as C
-from repro.distributed import steps as ST
-from repro.models import transformer as T
+from repro.core.kratos import KratosSpec
+from repro.serve import (EngineConfig, InferenceEngine, ModelRegistry,
+                         StaticScheduler)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache positions per slot (0 = prompt+gen+slack)")
+    ap.add_argument("--sparsity", type=float, default=0.0)
+    ap.add_argument("--bits", type=int, default=0, help="0 = native bf16/f32")
+    ap.add_argument("--act-bits", type=int, default=0, help="8 => w8a8")
+    ap.add_argument("--impl", default="tree", choices=("tree", "systolic"))
+    ap.add_argument("--block", type=int, default=8, help="sparsity bk=bn")
+    ap.add_argument("--static", action="store_true",
+                    help="lock-step drain-then-refill baseline scheduler")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = C.get_smoke(args.arch)
-    b, s0, gen = args.batch, args.prompt_len, args.gen
-    params = T.init(jax.random.PRNGKey(args.seed), cfg)
+    spec = KratosSpec(sparsity=args.sparsity,
+                      bits=args.bits or None,
+                      act_bits=args.act_bits or None,
+                      impl=args.impl, bk=args.block, bn=args.block)
+    registry = ModelRegistry()
+    model = registry.load(args.arch, spec, seed=args.seed)
+    print(f"[serve] {model.name}: {model.n_packed} packed projections, "
+          f"{model.packed_bytes / 1e6:.2f} MB packed vs "
+          f"{model.dense_bytes / 1e6:.2f} MB dense "
+          f"({model.compression:.2f}x)")
+
+    max_len = args.max_len or (model.cfg.n_img_tokens + args.prompt_len
+                               + args.gen + 8)
+    engine = InferenceEngine(
+        model,
+        EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed),
+        scheduler=StaticScheduler() if args.static else None)
+
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (b, s0)), jnp.int32)
-
-    batch = {"tokens": prompts}
-    if cfg.enc_dec:
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((b, cfg.enc_positions, cfg.d_model)) * 0.1,
-            jnp.float32)
-    if cfg.n_img_tokens:
-        batch["img_embeds"] = jnp.asarray(
-            rng.standard_normal((b, cfg.n_img_tokens, cfg.d_model)) * 0.1,
-            jnp.float32)
-
-    max_len = cfg.n_img_tokens + s0 + gen
-    caches = T.make_caches(cfg, b, max_len)
-    prefill = jax.jit(ST.make_prefill_step(cfg))
-    decode = jax.jit(ST.make_decode_step(cfg))
-
-    t0 = time.time()
-    logits, caches = prefill(params, batch, caches)
-    print(f"[serve] prefill {b}x{s0} in {time.time()-t0:.2f}s")
-
-    key = jax.random.PRNGKey(args.seed + 1)
-
-    def sample(key, logits):
-        if args.temperature <= 0:
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits[:, -1] / args.temperature).astype(jnp.int32)
-
-    tok = sample(key, logits)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for t in range(gen - 1):
-        index = jnp.int32(cfg.n_img_tokens + s0 + t)
-        logits, caches = decode(params, caches, tok, index)
-        key, sub = jax.random.split(key)
-        tok = sample(sub, logits)[:, None]
-        out.append(tok)
-    dt = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"[serve] decoded {gen} tokens x {b} requests in {dt:.2f}s "
-          f"({b * gen / max(dt, 1e-9):.1f} tok/s)")
-    for i in range(min(b, 2)):
-        print(f"  req{i}: {np.asarray(toks[i])[:16]} ...")
+    reqs = []
+    for i in range(args.requests):
+        s0 = max(1, args.prompt_len + int(rng.integers(-4, 5)))
+        prompt = rng.integers(0, model.cfg.vocab, s0)
+        reqs.append(engine.submit(prompt, args.gen, arrival_step=i,
+                                  temperature=args.temperature))
+    engine.run()
+    print(f"[serve] scheduler={engine.scheduler.name} "
+          f"{engine.metrics.format_report()}")
+    for r in reqs[:2]:
+        print(f"  req{r.id}: {np.asarray(r.generated)[:16]} ...")
 
 
 if __name__ == "__main__":

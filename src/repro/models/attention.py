@@ -77,6 +77,11 @@ def attention_positional(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
 
     q_pos: (Sq,) int32 absolute positions; kv_pos: (Skv,) possibly non-monotonic
     (circular cache); extra_mask: (Skv,) bool validity.
+
+    Continuous-batching decode passes PER-SLOT positions: any of q_pos /
+    kv_pos / extra_mask may carry a leading batch axis ((B,Sq) / (B,Skv)),
+    in which case the causal/window/validity mask is computed per batch row —
+    each request in the slab attends under its own sequence clock.
     """
     b, h, sq, dk = q.shape
     kv, skv = k.shape[1], k.shape[2]
@@ -102,13 +107,17 @@ def attention_positional(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     mask = jnp.ones((sq, skv), bool)
+    qp = q_pos[..., :, None]                  # (Sq,1) or (B,Sq,1)
+    kp = kv_pos[..., None, :]                 # (1,Skv) or (B,1,Skv)
     if causal:
-        mask &= kv_pos[None, :] <= q_pos[:, None]
+        mask = mask & (kp <= qp)
     if window is not None:
-        mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask = mask & (kp > qp - window)
     if extra_mask is not None:
-        mask &= extra_mask[None, :]
-    s = jnp.where(mask[None, None], s, -1e30)
+        mask = mask & extra_mask[..., None, :]
+    # (Sq,Skv) -> (1,1,Sq,Skv); per-slot (B,Sq,Skv) -> (B,1,Sq,Skv)
+    mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+    s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
     return o
@@ -188,6 +197,19 @@ def gqa_init(key, cfg: AttnConfig, spec: kr.KratosSpec = kr.DENSE,
     return p
 
 
+def _positions_for(index, s: int) -> jnp.ndarray:
+    """Absolute positions for a length-s segment starting at `index`.
+
+    index: None (from 0) | scalar (shared decode clock) | (B,) per-slot
+    clocks (continuous batching). Returns (S,) or (B, S)."""
+    if index is None:
+        return jnp.arange(s)
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        return index + jnp.arange(s)
+    return index[:, None] + jnp.arange(s)[None, :]
+
+
 def _split_heads(x, n, dh):
     b, s, _ = x.shape
     return x.reshape(b, s, n, dh).transpose(0, 2, 1, 3)
@@ -237,7 +259,7 @@ def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
         k = L.rmsnorm(params["k_norm"], k)
 
     if positions is None:
-        positions = jnp.arange(s) if index is None else (index + jnp.arange(s))
+        positions = _positions_for(index, s)
     if cfg.use_rope:
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
@@ -291,7 +313,13 @@ def _prefill_cache(cache, k, v, cfg: AttnConfig):
 
 
 def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
-    """Write one token at `index`; return (cache, kv_positions, valid_mask)."""
+    """Write one token at `index`; return (cache, kv_positions, valid_mask).
+
+    index: scalar (lock-step batch, one shared position) or (B,) per-slot
+    positions (continuous batching) — the vector form writes each batch row
+    at its own cache offset and returns per-row (B, size) positions/validity
+    for the per-slot attention mask.
+    """
     size = cache["k"].shape[2]
     slot = (index % size) if cfg.window else index
     # the barrier stops XLA from sinking the f32->bf16 convert of the update
@@ -299,16 +327,28 @@ def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
     # into a full cache-stack copy per layer (4.6 GiB x 96 on nemotron).
     k, v = jax.lax.optimization_barrier(
         (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
     slots = jnp.arange(size)
-    if cfg.window:
-        # slot s holds the latest position p <= index with p % size == s
-        kv_pos = index - ((index - slots) % size)
-        valid = kv_pos >= 0
+    if jnp.ndim(index) == 0:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        if cfg.window:
+            # slot s holds the latest position p <= index with p % size == s
+            kv_pos = index - ((index - slots) % size)
+            valid = kv_pos >= 0
+        else:
+            kv_pos = slots
+            valid = slots <= index
     else:
-        kv_pos = slots
-        valid = slots <= index
+        write = jax.vmap(
+            lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (0, at, 0)))
+        ck = write(cache["k"], k, slot)
+        cv = write(cache["v"], v, slot)
+        if cfg.window:
+            kv_pos = index[:, None] - ((index[:, None] - slots[None]) % size)
+            valid = kv_pos >= 0
+        else:
+            kv_pos = slots
+            valid = slots[None] <= index[:, None]
     return {"k": ck, "v": cv}, kv_pos, valid
 
 
@@ -363,7 +403,7 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
     b, s, d = x.shape
     h = cfg.n_heads
     if positions is None:
-        positions = jnp.arange(s) if index is None else (index + jnp.arange(s))
+        positions = _positions_for(index, s)
 
     q_nope, q_rope = _mla_q(params, x, cfg, spec, backend)
     q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
@@ -381,13 +421,24 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
         c_upd, r_upd = jax.lax.optimization_barrier(
             (c_kv.astype(cache["c_kv"].dtype),
              k_rope.astype(cache["k_rope"].dtype)))  # see _decode_cache_write
-        ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_upd, (0, index, 0))
-        cr = jax.lax.dynamic_update_slice(
-            cache["k_rope"], r_upd, (0, 0, index, 0))
+        if jnp.ndim(index) == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_upd, (0, index, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache["k_rope"], r_upd, (0, 0, index, 0))
+            kv_pos = jnp.arange(ck.shape[1])
+            valid = kv_pos <= index
+        else:                      # per-slot clocks (continuous batching)
+            ck = jax.vmap(
+                lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (at, 0)))(
+                cache["c_kv"], c_upd, index)
+            cr = jax.vmap(
+                lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (0, at, 0)))(
+                cache["k_rope"], r_upd, index)
+            kv_pos = jnp.arange(ck.shape[1])
+            valid = kv_pos[None] <= index[:, None]
         new_cache = {"c_kv": ck, "k_rope": cr}
         c_all, kr_all = ck, cr
-        kv_pos = jnp.arange(c_all.shape[1])
-        valid = kv_pos <= index
     elif cache is not None:
         ck = jax.lax.dynamic_update_slice(
             cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))

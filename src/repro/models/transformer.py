@@ -430,7 +430,10 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
     img_embeds: (B, n_img, d) vision-stub tokens prepended (llava).
     enc_out: (B, S_enc, d) encoder output for cross-attention (whisper).
     caches: pytree matching params['prelude'/'blocks'] (+ 'cross') or None.
-    index: decode position (None = full-sequence).
+    index: decode position (None = full-sequence). A scalar decodes the
+    whole batch at one shared position (lock-step serving); a (B,) vector
+    gives every batch row its own position — the continuous-batching slab
+    decode, where requests at different depths share one step.
     last_only: compute logits only for the final position (prefill) — the
     (B, S, vocab) logits tensor is by far the largest in a 32k prefill, and
     only the last column is consumed.
@@ -440,13 +443,15 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
         x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
     if cfg.enc_dec and not cfg.use_rope:
         s = x.shape[1]
-        off = 0 if index is None else index
         pe = _sinusoidal_positions(32768 if index is not None else s,
                                    cfg.d_model).astype(x.dtype)
-        pe = jax.lax.dynamic_slice_in_dim(pe, off, s, axis=0) \
-            if index is not None else pe[:s]
-        x = x + pe
-    positions = None if index is None else (index + jnp.arange(x.shape[1]))
+        if index is None:
+            x = x + pe[:s]
+        elif jnp.ndim(index) == 0:
+            x = x + jax.lax.dynamic_slice_in_dim(pe, index, s, axis=0)
+        else:                       # per-slot positions: gather (B, S, d)
+            x = x + jnp.take(pe, A._positions_for(index, s), axis=0)
+    positions = None if index is None else A._positions_for(index, x.shape[1])
     aux_total = jnp.zeros((), jnp.float32)
 
     new_caches: Optional[Dict] = None if caches is None else \

@@ -1,0 +1,50 @@
+"""repro.serve — continuous-batching inference over packed Kratos weights.
+
+The serving subsystem that makes the paper's contribution visible at
+inference time: models are loaded through a registry that calls
+`kratos.pack()` ONCE per projection (sparse gather plans, bit-packed codes),
+and every decode step dispatches through `kratos.apply_packed` — the packed
+buffers, not the dense training weights, are what the hot path reads.
+
+Layout:
+
+  registry.py    named packed-model store keyed by (arch, KratosSpec);
+                 `pack_model_params` re-points a training parameter tree at
+                 `PackedLinear` serving buffers.
+  cache_pool.py  slab-allocated KV-cache pool: one `T.make_caches` slab of
+                 `n_slots` rows, per-request slot assignment / LIFO reuse.
+  scheduler.py   request admission policy: `ContinuousScheduler` (join the
+                 decode batch whenever a slot frees) vs `StaticScheduler`
+                 (drain-then-refill lock-step baseline).
+  engine.py      the request lifecycle + step loop: per-request prefill into
+                 a slot, one slab decode per step with PER-SLOT cache
+                 clocks, streaming token callbacks.
+  metrics.py     tok/s, p50/p99 latency, time-to-first-token, batch
+                 occupancy.
+
+Quickstart:
+
+    from repro.serve import EngineConfig, InferenceEngine, ModelRegistry
+    from repro.core.kratos import KratosSpec
+
+    reg = ModelRegistry()
+    model = reg.load("h2o-danube-1.8b", KratosSpec(sparsity=0.5, bits=8,
+                                                   bk=8, bn=8))
+    eng = InferenceEngine(model, EngineConfig(n_slots=4, max_len=96))
+    req = eng.submit(prompt_tokens, max_new_tokens=16)
+    eng.run()
+    print(req.generated, eng.metrics.report())
+"""
+
+from repro.serve.cache_pool import CachePool, PoolExhausted
+from repro.serve.engine import EngineConfig, InferenceEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   StaticScheduler)
+
+__all__ = [
+    "CachePool", "PoolExhausted", "EngineConfig", "InferenceEngine",
+    "ServeMetrics", "ModelRegistry", "PackedModel", "pack_model_params",
+    "ContinuousScheduler", "StaticScheduler", "Request",
+]

@@ -1,0 +1,89 @@
+"""Slab-allocated KV-cache pool with per-request slot assignment.
+
+One `transformer.make_caches(cfg, n_slots, max_len)` slab is allocated at
+engine construction and never reallocated: a request entering the engine is
+assigned a free SLOT (one batch row of every cache leaf in the tree), its
+prefilled batch-1 cache is written into that row, and the row is returned to
+the free list when the request completes. The decode step always runs over
+the whole slab — per-slot validity masks (models.attention) make the stale
+rows inert, so freeing is O(1) bookkeeping with no memory traffic.
+
+Slab layout contract (transformer.make_caches): unscanned 'prelude' entries
+carry the batch axis at dim 0; scanned 'blocks' entries are layer-stacked,
+so their batch axis is dim 1. `write_slot` maps over the two groups with the
+right axis — the only place in the serving stack that knows this.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+class PoolExhausted(RuntimeError):
+    """No free cache slot: the scheduler must hold the request in the queue."""
+
+
+def _write_tree(slab: Dict, single: Dict, slot) -> Dict:
+    """Write a batch-1 cache tree into row `slot` of the slab (functional)."""
+    pre = jax.tree_util.tree_map(
+        lambda s, u: jax.lax.dynamic_update_slice_in_dim(
+            s, u.astype(s.dtype), slot, axis=0),
+        slab["prelude"], single["prelude"])
+    blk = jax.tree_util.tree_map(
+        lambda s, u: jax.lax.dynamic_update_slice_in_dim(
+            s, u.astype(s.dtype), slot, axis=1),
+        slab["blocks"], single["blocks"])
+    return {"prelude": pre, "blocks": blk}
+
+
+class CachePool:
+    """Fixed-slot KV pool; slots are reused LIFO (hot rows stay hot)."""
+
+    def __init__(self, cfg: T.ModelConfig, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = T.make_caches(cfg, n_slots, max_len, dtype)
+        # template reused by every per-request prefill (functional: the
+        # prefill step never mutates it)
+        self.single_template = T.make_caches(cfg, 1, max_len, dtype)
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._write = jax.jit(_write_tree)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.n_slots} cache slots in use; admission must wait")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        if not (0 <= slot < self.n_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"double-free of slot {slot}")
+        self._free.append(slot)
+
+    def write_slot(self, slot: int, single: Dict) -> None:
+        """Install a prefilled batch-1 cache tree into `slot` of the slab."""
+        self.caches = self._write(self.caches, single,
+                                  jnp.asarray(slot, jnp.int32))
+
+    def bytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(self.caches))

@@ -1,0 +1,237 @@
+"""Continuous-batching inference engine.
+
+One engine owns: a packed model (serve.registry), a fixed-slot KV slab
+(serve.cache_pool), an admission policy (serve.scheduler) and three compiled
+functions — per-request prefill (batch 1), and ONE slab decode step reused
+every step of the engine's life.
+
+Step loop (`step()`):
+
+  1. admission — the scheduler picks arrived requests for free slots; each
+     admitted request is prefilled alone (batch 1) and its cache written
+     into its slot. Its first token is sampled from the prefill logits.
+  2. slab decode — one `make_decode_step` call over ALL slots with the
+     per-slot position vector (models.attention gathers each row's cache
+     clock); idle slots decode garbage that per-slot validity masks keep
+     inert, so the compiled shape never changes and requests join/leave the
+     batch with zero recompiles.
+  3. lifecycle — sampled tokens are appended per active request (streaming
+     via `Request.on_token`), finished requests free their slots, and the
+     freed slots are admissible on the very next step.
+
+Prefill compile-shape policy: prompts are right-padded to power-of-two
+buckets (full-logits prefill, read at the true prompt end; the padded cache
+tail is never valid under the per-slot masks) so a mixed-length trace
+compiles O(log max_len) prefill shapes instead of one per distinct length.
+Architectures whose prefill state is cumulative over the padded positions
+(SSM/hybrid recurrent state, MoE capacity routing, enc-dec) prefill at exact
+length — correctness over compile reuse.
+
+Determinism contract: with temperature=0 every request's output is
+independent of what else shares the slab (batch-invariance), EXCEPT
+capacity-routed MoE archs where expert-capacity contention is inherently
+batch-dependent (true of the lock-step baseline too).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import steps as ST
+from repro.serve.cache_pool import CachePool
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import PackedModel
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   SchedulerBase)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 96                  # cache positions per slot
+    backend: str = "ref"
+    cache_dtype: str = "float32"
+    prefill_buckets: bool = True       # pow2 right-padding (where exact)
+    bucket_min: int = 16
+    seed: int = 0                      # sampling rng (temperature > 0)
+
+
+class InferenceEngine:
+    """Request lifecycle + step loop over a packed model."""
+
+    def __init__(self, model: PackedModel, cfg: EngineConfig = EngineConfig(),
+                 scheduler: Optional[SchedulerBase] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.model = model
+        self.cfg = cfg
+        mcfg = model.cfg
+        self.scheduler = scheduler or ContinuousScheduler()
+        self.metrics = metrics or ServeMetrics()
+        self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
+                              jnp.dtype(cfg.cache_dtype))
+        self._prefill_last = jax.jit(
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=True))
+        self._prefill_full = jax.jit(
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=False))
+        self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+        self._slots: List[Optional[Request]] = [None] * cfg.n_slots
+        self._tokens = np.zeros((cfg.n_slots, 1), np.int32)
+        self._indices = np.zeros((cfg.n_slots,), np.int32)
+        self._waiting: collections.deque = collections.deque()
+        self._rng = np.random.default_rng(cfg.seed)
+        self._next_id = 0
+        self.step_count = 0
+        self.requests: Dict[int, Request] = {}
+        # padding past the window would let the circular prefill evict real
+        # positions in favor of pad garbage (attention._prefill_cache)
+        windows = [w for w in (mcfg.window,) if w]
+        self._bucket_cap = min([cfg.max_len] + windows)
+        self._exact_prefill = bool(mcfg.is_ssm or mcfg.attn_period
+                                   or mcfg.n_experts or mcfg.enc_dec)
+        # whether a request's total length is bounded by max_len: pure-SSM
+        # state is O(1) and a uniformly-windowed cache is circular, so both
+        # serve sequences longer than the slab — the long_500k story.
+        self._len_bounded = not (
+            mcfg.is_ssm
+            or (mcfg.window is not None and not mcfg.local_global_period
+                and not mcfg.mla and not mcfg.attn_period and not mcfg.enc_dec))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               arrival_step: int = 0, temperature: float = 0.0,
+               eos_id: Optional[int] = None,
+               extras: Optional[Dict[str, Any]] = None,
+               on_token=None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = self.model.cfg.n_img_tokens + len(prompt) + max_new_tokens
+        if self._len_bounded and need > self.cfg.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions "
+                f"(img + prompt {len(prompt)} + gen {max_new_tokens}) but "
+                f"max_len={self.cfg.max_len}")
+        r = Request(id=self._next_id, prompt=prompt,
+                    max_new_tokens=max_new_tokens, arrival_step=arrival_step,
+                    temperature=temperature, eos_id=eos_id, extras=extras,
+                    on_token=on_token)
+        self._next_id += 1
+        self.requests[r.id] = r
+        self._waiting.append(r)
+        self.metrics.on_submit(r.id, arrival_step, len(prompt))
+        return r
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    def step(self) -> None:
+        """One engine step: admissions, then one slab decode."""
+        arrived = [r for r in self._waiting
+                   if r.arrival_step <= self.step_count]
+        for r in self.scheduler.admissible(arrived, self.pool.n_active,
+                                           self.pool.n_free):
+            self._waiting.remove(r)
+            self._start(r)
+        if self.pool.n_active:
+            self._decode_step()
+        else:
+            self.metrics.on_idle_step()
+        self.step_count += 1
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Step until every submitted request completes; returns outputs."""
+        limit = max_steps if max_steps is not None else \
+            10 * sum(r.max_new_tokens + 2 for r in self.requests.values()) \
+            + max([r.arrival_step for r in self.requests.values()], default=0)
+        while (self._waiting or self.pool.n_active) and limit > 0:
+            self.step()
+            limit -= 1
+        if self._waiting or self.pool.n_active:
+            raise RuntimeError("engine did not drain within the step limit")
+        return {rid: np.asarray(r.generated, np.int32)
+                for rid, r in self.requests.items()}
+
+    # ------------------------------------------------------------- internals
+
+    def _prefill_len(self, s0: int) -> int:
+        if self._exact_prefill or not self.cfg.prefill_buckets:
+            return s0
+        b = self.cfg.bucket_min
+        while b < s0:
+            b *= 2
+        return b if b <= self._bucket_cap else s0
+
+    def _sample(self, row: np.ndarray, r: Request) -> int:
+        if r.temperature <= 0.0:
+            return int(np.argmax(row))
+        logits = row.astype(np.float64) / r.temperature
+        g = self._rng.gumbel(size=logits.shape)
+        return int(np.argmax(logits + g))
+
+    def _emit(self, r: Request, tok: int) -> None:
+        r.generated.append(tok)
+        self.metrics.on_token(r.id, self.step_count)
+        if r.on_token is not None:
+            r.on_token(r, tok)
+        done = len(r.generated) >= r.max_new_tokens \
+            or (r.eos_id is not None and tok == r.eos_id)
+        if done:
+            r.state = "done"
+            self.pool.free(r.slot)
+            self._slots[r.slot] = None
+            self.metrics.on_finish(r.id, self.step_count)
+
+    def _start(self, r: Request) -> None:
+        slot = self.pool.alloc()
+        s0 = len(r.prompt)
+        sp = self._prefill_len(s0)
+        tokens = np.zeros((1, sp), np.int32)
+        tokens[0, :s0] = r.prompt
+        batch = {"tokens": jnp.asarray(tokens)}
+        if r.extras:
+            batch.update({k: jnp.asarray(v) for k, v in r.extras.items()})
+        n_img = self.model.cfg.n_img_tokens
+        if sp == s0:
+            logits, caches = self._prefill_last(
+                self.model.params, batch, self.pool.single_template)
+            last = np.asarray(logits[0, -1])
+        else:
+            logits, caches = self._prefill_full(
+                self.model.params, batch, self.pool.single_template)
+            last = np.asarray(logits[0, n_img + s0 - 1])
+        self.pool.write_slot(slot, caches)
+        r.state, r.slot = "running", slot
+        r.index = n_img + s0
+        self._slots[slot] = r
+        self._indices[slot] = r.index
+        self.metrics.on_start(r.id, self.step_count)
+        tok = self._sample(last, r)
+        self._tokens[slot, 0] = tok
+        self._emit(r, tok)            # may finish (max_new_tokens == 1)
+
+    def _decode_step(self) -> None:
+        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots)
+        logits, self.pool.caches = self._decode(
+            self.model.params, self.pool.caches,
+            jnp.asarray(self._tokens), jnp.asarray(self._indices))
+        rows = np.asarray(logits[:, -1])
+        for slot, r in enumerate(self._slots):
+            if r is None:
+                continue
+            r.index += 1
+            self._indices[slot] = r.index
+            tok = self._sample(rows[slot], r)
+            self._tokens[slot, 0] = tok
+            self._emit(r, tok)

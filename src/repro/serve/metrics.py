@@ -1,0 +1,123 @@
+"""Serving metrics: throughput, latency percentiles, batch occupancy.
+
+Everything is recorded in two clocks:
+
+  * wall seconds — what an operator sees (includes jit compiles, host
+    sampling, python overhead);
+  * engine steps — the deterministic clock the scheduler runs on (one slab
+    decode per step). Step-based numbers are what benchmarks compare across
+    scheduling policies, since they are immune to compile-time noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy dependence."""
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    rank = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return float(xs[rank])
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    request_id: int
+    arrival_step: int
+    start_step: int = -1            # step the request entered a slot
+    first_token_step: int = -1
+    finish_step: int = -1
+    n_prompt: int = 0
+    n_generated: int = 0
+    submit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+
+
+class ServeMetrics:
+    """Engine-side counters; one instance per engine run."""
+
+    def __init__(self) -> None:
+        self.t0 = time.time()
+        self.decode_steps = 0
+        self.idle_steps = 0
+        self.prefills = 0
+        self.tokens_generated = 0
+        self.occupancy: List[float] = []      # active / n_slots per decode step
+        self.records: Dict[int, RequestRecord] = {}
+
+    # -- recording hooks (called by the engine) -----------------------------
+
+    def on_submit(self, request_id: int, arrival_step: int, n_prompt: int) -> None:
+        self.records[request_id] = RequestRecord(
+            request_id=request_id, arrival_step=arrival_step,
+            n_prompt=n_prompt, submit_time=time.time())
+
+    def on_start(self, request_id: int, step: int) -> None:
+        rec = self.records[request_id]
+        rec.start_step = step
+        self.prefills += 1
+
+    def on_token(self, request_id: int, step: int) -> None:
+        rec = self.records[request_id]
+        if rec.first_token_step < 0:
+            rec.first_token_step = step
+            rec.first_token_time = time.time()
+        rec.n_generated += 1
+        self.tokens_generated += 1
+
+    def on_finish(self, request_id: int, step: int) -> None:
+        rec = self.records[request_id]
+        rec.finish_step = step
+        rec.finish_time = time.time()
+
+    def on_decode_step(self, n_active: int, n_slots: int) -> None:
+        self.decode_steps += 1
+        self.occupancy.append(n_active / max(1, n_slots))
+
+    def on_idle_step(self) -> None:
+        self.idle_steps += 1
+
+    # -- report -------------------------------------------------------------
+
+    def report(self) -> Dict[str, float]:
+        elapsed = max(time.time() - self.t0, 1e-9)
+        done = [r for r in self.records.values() if r.finish_step >= 0]
+        lat_steps = [float(r.finish_step - r.arrival_step) for r in done]
+        ttft_steps = [float(r.first_token_step - r.arrival_step)
+                      for r in done if r.first_token_step >= 0]
+        lat_wall = [r.finish_time - r.submit_time for r in done]
+        return {
+            "requests_completed": float(len(done)),
+            "tokens_generated": float(self.tokens_generated),
+            "decode_steps": float(self.decode_steps),
+            "idle_steps": float(self.idle_steps),
+            "wall_seconds": elapsed,
+            "tok_per_s": self.tokens_generated / elapsed,
+            "tokens_per_step": self.tokens_generated
+            / max(1, self.decode_steps),
+            "mean_occupancy": (sum(self.occupancy) / len(self.occupancy))
+            if self.occupancy else 0.0,
+            "latency_steps_p50": percentile(lat_steps, 50),
+            "latency_steps_p99": percentile(lat_steps, 99),
+            "latency_s_p50": percentile(lat_wall, 50),
+            "latency_s_p99": percentile(lat_wall, 99),
+            "ttft_steps_p50": percentile(ttft_steps, 50),
+            "ttft_steps_p99": percentile(ttft_steps, 99),
+        }
+
+    def format_report(self) -> str:
+        r = self.report()
+        return (f"{int(r['requests_completed'])} reqs, "
+                f"{int(r['tokens_generated'])} toks in {r['wall_seconds']:.2f}s"
+                f" | {r['tok_per_s']:.1f} tok/s wall, "
+                f"{r['tokens_per_step']:.2f} tok/step"
+                f" | occupancy {r['mean_occupancy']:.2f}"
+                f" | latency p50/p99 {r['latency_steps_p50']:.0f}/"
+                f"{r['latency_steps_p99']:.0f} steps"
+                f" | ttft p50 {r['ttft_steps_p50']:.0f} steps")

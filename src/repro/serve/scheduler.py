@@ -1,0 +1,85 @@
+"""Admission scheduling: when does a waiting request get a cache slot?
+
+The engine calls `scheduler.admissible(...)` once per step, BEFORE the slab
+decode. Both policies consume the arrived-FIFO in order; they differ only in
+when they are willing to admit:
+
+  ContinuousScheduler   admit whenever a slot is free — a finishing request
+                        frees its slot and the next arrival joins the very
+                        next decode step. Mixed-length traffic keeps the
+                        slab full (high occupancy == high tok/step).
+
+  StaticScheduler       the lock-step baseline: admit only when the engine
+                        is EMPTY, i.e. compose a batch, run it to
+                        completion, then compose the next. Short requests
+                        finish early and their slots idle until the longest
+                        member of the batch drains — the occupancy loss the
+                        continuous policy exists to remove.
+
+Prefill/decode interleaving policy: `max_prefills_per_step` bounds how many
+admissions (each one a prefill) may happen before a decode step — new
+arrivals must not starve in-flight decodes (head-of-line blocking the other
+way). The default of 1 interleaves one prefill between decode steps, the
+standard continuous-batching compromise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its engine-managed lifecycle state."""
+
+    id: int
+    prompt: np.ndarray                      # (S0,) int32 token ids
+    max_new_tokens: int
+    arrival_step: int = 0                   # simulated-trace admission gate
+    temperature: float = 0.0                # 0 => greedy
+    eos_id: Optional[int] = None
+    extras: Optional[Dict[str, Any]] = None  # frames / img_embeds (B=1 lead)
+    on_token: Optional[Callable[["Request", int], None]] = None  # streaming
+
+    # engine-managed
+    state: str = "waiting"                  # waiting | running | done
+    slot: int = -1
+    index: int = 0                          # next cache write position
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.state == "done"
+
+
+class SchedulerBase:
+    name = "base"
+
+    def admissible(self, arrived: List[Request], n_active: int,
+                   n_free: int) -> List[Request]:
+        raise NotImplementedError
+
+
+class ContinuousScheduler(SchedulerBase):
+    name = "continuous"
+
+    def __init__(self, max_prefills_per_step: int = 1):
+        self.max_prefills_per_step = max_prefills_per_step
+
+    def admissible(self, arrived: List[Request], n_active: int,
+                   n_free: int) -> List[Request]:
+        n = min(len(arrived), n_free, self.max_prefills_per_step)
+        return arrived[:n]
+
+
+class StaticScheduler(SchedulerBase):
+    name = "static"
+
+    def admissible(self, arrived: List[Request], n_active: int,
+                   n_free: int) -> List[Request]:
+        if n_active > 0:
+            return []                       # drain before refilling
+        return arrived[:n_free]

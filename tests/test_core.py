@@ -127,6 +127,37 @@ def test_kratos_train_vs_packed(spec):
                                rtol=rtol, atol=0.05)
 
 
+@pytest.mark.parametrize("impl", ["tree", "systolic"])
+@pytest.mark.parametrize("bits", [None, 8, 4, 2])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+def test_pack_apply_packed_roundtrip_grid(impl, bits, sparsity):
+    """Full serving grid: apply_packed(pack(p)) == apply(p) within quant tol.
+
+    The serving path re-quantizes the SAME values the QAT forward fake-
+    quantizes, so dense/8/4-bit agree to float rounding; 2-bit goes through
+    sub-byte two's-complement packing where the TWN threshold comparison
+    (|w| > 0.7 mean|w|) can flip codes for borderline weights — element
+    tolerance stays loose but quantization-scale-bounded.
+    """
+    spec = kr.KratosSpec(sparsity=sparsity, bits=bits, impl=impl, bk=8, bn=8)
+    params = kr.init(jax.random.PRNGKey(42), 64, 32, spec)
+    x = jax.random.normal(jax.random.PRNGKey(43), (8, 64))
+    y_train = kr.apply(params, x, spec)
+    packed = kr.pack(params, spec)
+    y_serve = kr.apply_packed(packed, x, spec, 64, 32)
+    # expected buffer layout: {w | qt} for dense-compute, {blocks | qblocks}
+    # for the gathered-tree path
+    if sparsity == 0.0 or impl == "systolic":
+        assert ("w" in packed) == (bits is None)
+        assert ("qt" in packed) == (bits is not None)
+    else:
+        assert ("blocks" in packed) == (bits is None)
+        assert ("qblocks" in packed) == (bits is not None)
+    atol = 0.05 if bits != 2 else 0.15
+    np.testing.assert_allclose(np.asarray(y_serve), np.asarray(y_train),
+                               rtol=1e-4, atol=atol)
+
+
 def test_kratos_tree_equals_systolic_math():
     """Same plan: tree (gathered) and systolic (masked dense) agree exactly."""
     spec_t = kr.KratosSpec(sparsity=0.5, bk=8, bn=8, impl="tree")
