@@ -45,6 +45,12 @@ def main() -> None:
     from benchmarks import table3_tilesweep
     table3_tilesweep.run(quick=a.quick)
 
+    section("Serving — device-resident decode loop (smoke trace)")
+    from benchmarks import serve_bench
+    serve_ok = serve_bench.run(
+        n_requests=8, prompt_range=(4, 16), gen_range=(8, 16),
+        mean_interarrival=1.5, smoke=True, out="results/BENCH_serve.json")
+
     ledger = "results/dryrun.jsonl"
     if os.path.exists(ledger):
         section("§Roofline — 40-cell dry-run table (single-pod)")
@@ -52,6 +58,8 @@ def main() -> None:
         print(roofline.render(roofline.load_ledger(ledger), multi_pod=False))
 
     print(f"\n== benchmarks done in {time.time()-t0:.0f}s")
+    if not serve_ok:
+        raise SystemExit("serve_bench FAILED (see section above)")
 
 
 if __name__ == "__main__":

@@ -121,12 +121,21 @@ def init_train_state(key, cfg: T.ModelConfig, opt_cfg: O.OptimizerConfig):
 # ---------------------------------------------------------------------------
 
 def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
-                      last_only: bool = True):
-    """prefill(params, batch, caches) -> (next_token_logits, caches).
+                      last_only: bool = True, *,
+                      cache_len: Optional[int] = None,
+                      cache_dtype=jnp.float32):
+    """prefill(params, batch[, caches]) -> (next_token_logits, caches).
 
     last_only=False returns the full (B, S, vocab) logits — the serve engine
     right-pads prompts into compile-shape buckets and reads the logits column
     at the true prompt end, so it needs every position.
+
+    cache_len: when set, the step allocates its own batch-1 cache tree of
+    this length INSIDE the compiled function (zeros materialize directly on
+    device) and the `caches` operand disappears — the donation-friendly form
+    the serving engine uses: no host-side template is copied in per
+    admission, and the returned cache buffers can be donated straight into
+    the slab write (CachePool.write_slot).
     """
     # remat exists to trade recompute for backward-pass memory; inference has
     # no backward pass, and the checkpoint wrapper's conditional-update
@@ -134,7 +143,7 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
     # (~3.5 TB/step on nemotron decode). Always off for serving.
     cfg = dataclasses.replace(cfg, remat=False)
 
-    def prefill(params, batch, caches):
+    def body(params, batch, caches):
         enc_out = None
         if cfg.enc_dec:
             enc_out = T.encode(params, batch["frames"], cfg, backend=backend)
@@ -143,22 +152,118 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
             img_embeds=batch.get("img_embeds"), enc_out=enc_out,
             last_only=last_only)
         return logits, caches
+
+    if cache_len is None:
+        def prefill(params, batch, caches):
+            return body(params, batch, caches)
+    else:
+        def prefill(params, batch):
+            return body(params, batch,
+                        T.make_caches(cfg, 1, cache_len, cache_dtype))
     return prefill
 
 
-def make_decode_step(cfg: T.ModelConfig, backend: str = "ref"):
-    """decode(params, caches, token, index) -> (logits, caches).
+def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
+                     n_steps: Optional[int] = None):
+    """Compiled slab decode. Two forms:
 
+    n_steps=None (legacy, lock-step launch path):
+        decode(params, caches, token, index) -> (logits, caches)
     token: (B, 1) int32; index: scalar int32 count of tokens already cached
     (lock-step batch), or an int32 (B,) vector of PER-SLOT counts — the
     continuous-batching slab decode, where each cache row advances on its
     own clock (serve.engine). One compiled step serves both regimes; the
     vector form gathers/scatters per-slot cache offsets (models.attention).
+
+    n_steps=K (device-resident loop, serve.engine):
+        decode(params, caches, state) -> (tok_block, caches, state)
+    runs K micro-steps in ONE dispatch via `lax.scan`, with sampling fused on
+    device (T.sample_tokens — per-slot temperature, threaded jax.random key)
+    and per-slot EOS / length masking, so only the (K, B) int32 `tok_block`
+    ever crosses to the host. `state` is the device-resident per-slot loop
+    state (see `make_decode_state`); callers donate both `caches` and
+    `state`, so the KV slab updates in place instead of being copied per
+    token. The rng key is split once per MICRO-step (not per dispatch),
+    which makes sampled sequences identical for any K grouping of the same
+    steps. Slots that finish mid-block (EOS or length) freeze their token /
+    index / rng-free state; the host catches up from the synced block and
+    frees them retroactively.
     """
     cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
 
-    def decode(params, caches, token, index):
-        logits, _, caches = T.forward(
-            params, token, cfg, backend=backend, caches=caches, index=index)
-        return logits, caches
+    if n_steps is None:
+        def decode(params, caches, token, index):
+            logits, _, caches = T.forward(
+                params, token, cfg, backend=backend, caches=caches,
+                index=index)
+            return logits, caches
+        return decode
+
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+
+    def decode(params, caches, state):
+        def micro(carry, _):
+            caches, st = carry
+            logits, _, caches = T.forward(
+                params, st["tokens"][:, None], cfg, backend=backend,
+                caches=caches, index=st["index"])
+            key, sub = jax.random.split(st["key"])
+            tok = T.sample_tokens(logits[:, -1], sub, st["temperature"])
+            active = st["active"]
+            tok = jnp.where(active, tok, st["tokens"])
+            remaining = jnp.where(active, st["remaining"] - 1,
+                                  st["remaining"])
+            hit_eos = active & (st["eos"] >= 0) & (tok == st["eos"])
+            st = {
+                "tokens": tok,
+                "index": jnp.where(active, st["index"] + 1, st["index"]),
+                "key": key,
+                "temperature": st["temperature"],
+                "eos": st["eos"],
+                "remaining": remaining,
+                "active": active & (remaining > 0) & ~hit_eos,
+            }
+            return (caches, st), tok
+
+        (caches, state), tok_block = jax.lax.scan(
+            micro, (caches, state), None, length=n_steps)
+        return tok_block, caches, state
+
     return decode
+
+
+def make_decode_state(n_slots: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Device-resident per-slot loop state for the fused decode step.
+
+    tokens/index: the (B,) feedback loop that never leaves the device;
+    temperature/eos/remaining/active: per-slot sampling + lifecycle vectors,
+    written only at admission; key: the threaded jax.random key.
+    """
+    return {
+        "tokens": jnp.zeros((n_slots,), jnp.int32),
+        "index": jnp.zeros((n_slots,), jnp.int32),
+        "key": jax.random.PRNGKey(seed),
+        "temperature": jnp.zeros((n_slots,), jnp.float32),
+        "eos": jnp.full((n_slots,), -1, jnp.int32),
+        "remaining": jnp.zeros((n_slots,), jnp.int32),
+        "active": jnp.zeros((n_slots,), bool),
+    }
+
+
+def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
+                 temperature, eos, remaining) -> Dict[str, jnp.ndarray]:
+    """Write one admitted request's row into the device decode state.
+
+    Pure (jit with donated `state` by the engine): slot may be a traced
+    int32. eos < 0 means no EOS; remaining <= 0 installs an inactive row
+    (request finished at prefill)."""
+    return {
+        "tokens": state["tokens"].at[slot].set(token),
+        "index": state["index"].at[slot].set(index),
+        "key": state["key"],
+        "temperature": state["temperature"].at[slot].set(temperature),
+        "eos": state["eos"].at[slot].set(eos),
+        "remaining": state["remaining"].at[slot].set(remaining),
+        "active": state["active"].at[slot].set(remaining > 0),
+    }

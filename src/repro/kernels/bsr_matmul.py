@@ -54,6 +54,11 @@ def bsr_matmul(
 ) -> jnp.ndarray:
     m, n = x.shape
     n_pb, nnz, bk, bn = blocks.shape
+    # skinny-m path: decode runs at m = n_slots; pad to a sublane-aligned
+    # row block instead of rejecting, and slice the pad rows off at the end.
+    bm = _compat.skinny_bm(m, bm, x.dtype)
+    x, m_orig = _compat.pad_rows(x, bm, "bsr_matmul")
+    m = x.shape[0]
     if m % bm:
         raise ValueError(f"m={m} not divisible by bm={bm}")
     if n % bk:
@@ -73,7 +78,7 @@ def bsr_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     kernel = functools.partial(_bsr_kernel, nnz=nnz)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n_pb * bn), x.dtype),
@@ -81,3 +86,4 @@ def bsr_matmul(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(indices, jnp.int32), x, blocks)
+    return out if m == m_orig else out[:m_orig]

@@ -47,12 +47,18 @@ def dense_matmul(
     m, n = x.shape
     n2, p = w.shape
     assert n == n2, (x.shape, w.shape)
+    # skinny-m path (decode: m = n_slots): adapt the row block to a
+    # sublane-aligned size and zero-pad m up to it; the pad rows cost one
+    # sublane of MXU work and are sliced off below.
+    bm = _compat.skinny_bm(m, bm, x.dtype)
+    x, m_orig = _compat.pad_rows(x, bm, "dense_matmul")
+    m = x.shape[0]
     for name, dim, b in (("m", m, bm), ("n", n, bk), ("p", p, bn)):
         if dim % b:
             raise ValueError(f"{name}={dim} not divisible by its block {b}")
     grid = (m // bm, p // bn, n // bk)
     kernel = functools.partial(_mm_kernel, n_kb=n // bk)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -66,3 +72,4 @@ def dense_matmul(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)
+    return out if m == m_orig else out[:m_orig]

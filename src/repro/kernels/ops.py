@@ -7,6 +7,13 @@ Backends:
   'interpret' Pallas kernel body executed step-by-step on CPU — used by the
               kernel test suite to validate the TPU code path.
   'auto'      'pallas' on TPU, 'ref' elsewhere.
+
+Skinny-m: every GEMM accepts any row count m >= 1. Decode batches are
+m = n_slots (a handful of rows); the kernels adapt their row block to a
+sublane-aligned size, zero-pad m up to it and slice the result back
+(pallas_compat.skinny_bm / pad_rows). `SKINNY_M_EVENTS` (re-exported here)
+records each padded dispatch at trace time so serving benchmarks can assert
+the decode GEMMs really run the packed Pallas path at slab width.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ from repro.kernels.quant_matmul import (
     bsr_quant_matmul as _bsr_quant_pallas,
 )
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.pallas_compat import SKINNY_M_EVENTS  # noqa: F401 (re-export)
 
 VALID_BACKENDS = ("auto", "ref", "pallas", "interpret")
 
@@ -55,7 +63,10 @@ def matmul(x, w, *, backend: str = "auto", bm: int = 128, bk: int = 128,
         return _ref.dense_matmul_ref(x, w)
     m, n = x.shape
     p = w.shape[1]
-    bm, bk, bn = _fit_block(bm, m), _fit_block(bk, n), _fit_block(bn, p)
+    # bm is NOT fitted to m: the kernel's skinny-m path pads the row dim to a
+    # sublane-aligned block (fitting bm to e.g. m=4 would force sub-sublane
+    # tiles that the TPU cannot lay out).
+    bk, bn = _fit_block(bk, n), _fit_block(bn, p)
     return _dense_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
 
 
@@ -64,8 +75,18 @@ def bsr_matmul(x, blocks, indices, *, backend: str = "auto", bm: int = 128):
     b = resolve_backend(backend)
     if b == "ref":
         return _ref.bsr_matmul_scan_ref(x, blocks, indices)
-    return _bsr_pallas(x, blocks, indices, bm=_fit_block(bm, x.shape[0]),
+    return _bsr_pallas(x, blocks, indices, bm=bm,
                        interpret=(b == "interpret"))
+
+
+def _fit_quant_blocks(qt, bk: int, bn: int):
+    """Fit k/n blocks to the tensor (small smoke models have n < 128).
+
+    The fitted bk is automatically a multiple of the sub-byte packing
+    factor: pack_codes requires n % vpb == 0 and vpb is a power of two, so
+    the largest power-of-two divisor of n is >= vpb."""
+    n, p = qt.shape
+    return _fit_block(bk, n), _fit_block(bn, p)
 
 
 def quant_matmul(x, qt: qz.QuantizedTensor, *, backend: str = "auto",
@@ -74,6 +95,7 @@ def quant_matmul(x, qt: qz.QuantizedTensor, *, backend: str = "auto",
     b = resolve_backend(backend)
     if b == "ref":
         return _ref.quant_matmul_ref(x, qt)
+    bk, bn = _fit_quant_blocks(qt, bk, bn)
     return _quant_pallas(x, qt, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
 
 
@@ -82,6 +104,7 @@ def quant_matmul_w8a8(x, qt: qz.QuantizedTensor, *, backend: str = "auto",
     b = resolve_backend(backend)
     if b == "ref":
         return _ref.quant_matmul_w8a8_ref(x, qt)
+    bk, bn = _fit_quant_blocks(qt, bk, bn)
     return _w8a8_pallas(x, qt, bm=bm, bk=bk, bn=bn, interpret=(b == "interpret"))
 
 

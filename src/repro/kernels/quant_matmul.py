@@ -85,10 +85,17 @@ def quant_matmul(
     vpb = qz.VALUES_PER_BYTE[qt.bits]
     if bk % vpb:
         raise ValueError(f"bk={bk} must be divisible by values-per-byte={vpb}")
+    for name, dim, b in (("n", n, bk), ("p", p, bn)):
+        if dim % b:
+            raise ValueError(f"{name}={dim} not divisible by its block {b}")
+    # skinny-m path (decode: m = n_slots); pad rows, slice the result back.
+    bm = _compat.skinny_bm(m, bm, x.dtype)
+    x, m_orig = _compat.pad_rows(x, bm, "quant_matmul")
+    m = x.shape[0]
     grid = (m // bm, p // bn, n // bk)
     kernel = functools.partial(_wq_kernel, n_kb=n // bk, bits=qt.bits)
     scale2d = qt.scale.reshape(1, p)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -103,6 +110,7 @@ def quant_matmul(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, qt.data, scale2d)
+    return out if m == m_orig else out[:m_orig]
 
 
 def _w8a8_kernel(xq_ref, xs_ref, w_ref, s_ref, o_ref, acc_ref, *, n_kb: int):
@@ -138,10 +146,20 @@ def quant_matmul_w8a8(
     assert qt.bits == 8
     m, n = x.shape
     _, p = qt.shape
+    for name, dim, b in (("n", n, bk), ("p", p, bn)):
+        if dim % b:
+            raise ValueError(f"{name}={dim} not divisible by its block {b}")
     xq, xs = qz.quantize_activations_int8(x)
+    # skinny-m path: pad AFTER activation quantization (an all-zero pad row
+    # would otherwise hit the per-row scale computation); int8 sublane is 32.
+    bm = _compat.skinny_bm(m, bm, xq.dtype)
+    xq, m_orig = _compat.pad_rows(xq, bm, "quant_matmul_w8a8")
+    if xq.shape[0] != m:
+        xs = jnp.pad(xs, ((0, xq.shape[0] - m), (0, 0)))
+    m = xq.shape[0]
     grid = (m // bm, p // bn, n // bk)
     kernel = functools.partial(_w8a8_kernel, n_kb=n // bk)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -157,6 +175,7 @@ def quant_matmul_w8a8(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xq, xs, qt.data, qt.scale.reshape(1, p))
+    return out if m == m_orig else out[:m_orig]
 
 
 def _bsr_wq_kernel(idx_ref, x_ref, b_ref, s_ref, o_ref, acc_ref,
@@ -197,6 +216,12 @@ def bsr_quant_matmul(
     n_pb, nnz, bkp, bn = qblocks.shape
     vpb = qz.VALUES_PER_BYTE[bits]
     bk = bkp * vpb
+    if n % bk:
+        raise ValueError(f"n={n} not divisible by block k-extent {bk}")
+    # skinny-m path (decode: m = n_slots); pad rows, slice the result back.
+    bm = _compat.skinny_bm(m, bm, x.dtype)
+    x, m_orig = _compat.pad_rows(x, bm, "bsr_quant_matmul")
+    m = x.shape[0]
     grid = (m // bm, n_pb, nnz)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -210,7 +235,7 @@ def bsr_quant_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     kernel = functools.partial(_bsr_wq_kernel, nnz=nnz, bits=bits)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n_pb * bn), x.dtype),
@@ -218,3 +243,4 @@ def bsr_quant_matmul(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(indices, jnp.int32), x, qblocks, scales)
+    return out if m == m_orig else out[:m_orig]

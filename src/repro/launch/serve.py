@@ -42,6 +42,12 @@ def main() -> None:
                     help="lock-step drain-then-refill baseline scheduler")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="K micro-steps per device-resident decode dispatch "
+                         "(throughput up, admission latency up)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="PR-1 host decode loop (per-step logits pull + "
+                         "numpy sampling) instead of the device-resident one")
     args = ap.parse_args()
 
     spec = KratosSpec(sparsity=args.sparsity,
@@ -59,7 +65,9 @@ def main() -> None:
                                + args.gen + 8)
     engine = InferenceEngine(
         model,
-        EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed),
+        EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
+                     device_loop=not args.host_loop,
+                     decode_chunk=args.decode_chunk),
         scheduler=StaticScheduler() if args.static else None)
 
     rng = np.random.default_rng(args.seed)

@@ -201,10 +201,13 @@ def _positions_for(index, s: int) -> jnp.ndarray:
     """Absolute positions for a length-s segment starting at `index`.
 
     index: None (from 0) | scalar (shared decode clock) | (B,) per-slot
-    clocks (continuous batching). Returns (S,) or (B, S)."""
+    clocks (continuous batching). The vector form is also a `lax.scan` carry
+    in the multi-step device-resident decode (distributed.steps), so it must
+    stay int32 — a weak-typed python int carry would change dtype across scan
+    iterations. Returns (S,) or (B, S) int32."""
     if index is None:
         return jnp.arange(s)
-    index = jnp.asarray(index)
+    index = jnp.asarray(index, jnp.int32)
     if index.ndim == 0:
         return index + jnp.arange(s)
     return index[:, None] + jnp.arange(s)[None, :]

@@ -545,6 +545,32 @@ def make_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Sampling (device-side; fused into the serving decode step)
+# ---------------------------------------------------------------------------
+
+def sample_tokens(logits: jnp.ndarray, key, temperature: jnp.ndarray,
+                  ) -> jnp.ndarray:
+    """Per-row Gumbel-max / greedy sampling, fully on device.
+
+    logits: (B, vocab); temperature: (B,) float32 per-slot vector (<= 0 means
+    greedy argmax for that row — no rng consumed semantics: the key is split
+    by the caller per micro-step regardless, which is what makes K-step decode
+    blocks reproducible for any K). Returns (B,) int32 token ids.
+
+    Gumbel-max sampling (argmax(logits/T + G)) is exactly categorical
+    sampling from softmax(logits/T), so the full-vocab softmax never needs to
+    be materialized and only the sampled ids ever cross to the host.
+    """
+    logits = logits.astype(jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    safe_t = jnp.maximum(temperature, 1e-6)[:, None]
+    scores = jnp.where((temperature > 0.0)[:, None],
+                       logits / safe_t + g, logits)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Losses
 # ---------------------------------------------------------------------------
 

@@ -6,21 +6,32 @@ inference time: models are loaded through a registry that calls
 and every decode step dispatches through `kratos.apply_packed` — the packed
 buffers, not the dense training weights, are what the hot path reads.
 
+The decode loop is DEVICE-RESIDENT (PR 2): sampling is fused into the
+compiled step (on-device argmax / per-slot-temperature Gumbel with a
+threaded jax.random key), the token/index/lifecycle state is a donated
+device tree, the KV slab is donated so it updates in place, and
+`decode_chunk` (K) micro-steps run per dispatch under one lax.scan — only a
+(K, n_slots) int32 token block ever crosses to the host. The decode GEMMs
+run at m = n_slots through the kernels' skinny-m path (sublane padding), so
+the packed sparse/quant Pallas kernels serve the hot loop, not just prefill.
+
 Layout:
 
   registry.py    named packed-model store keyed by (arch, KratosSpec);
                  `pack_model_params` re-points a training parameter tree at
                  `PackedLinear` serving buffers.
   cache_pool.py  slab-allocated KV-cache pool: one `T.make_caches` slab of
-                 `n_slots` rows, per-request slot assignment / LIFO reuse.
+                 `n_slots` rows, per-request slot assignment / LIFO reuse;
+                 slot installs donate the slab (in-place row writes).
   scheduler.py   request admission policy: `ContinuousScheduler` (join the
                  decode batch whenever a slot frees) vs `StaticScheduler`
                  (drain-then-refill lock-step baseline).
   engine.py      the request lifecycle + step loop: per-request prefill into
-                 a slot, one slab decode per step with PER-SLOT cache
-                 clocks, streaming token callbacks.
-  metrics.py     tok/s, p50/p99 latency, time-to-first-token, batch
-                 occupancy.
+                 a slot, K-micro-step slab decode dispatches with PER-SLOT
+                 cache clocks and on-device EOS/length masking, streaming
+                 token callbacks replayed from the synced block.
+  metrics.py     tok/s, tokens/dispatch, host syncs per decoded token,
+                 p50/p99 latency, time-to-first-token, batch occupancy.
 
 Quickstart:
 

@@ -1,23 +1,46 @@
-"""Continuous-batching inference engine.
+"""Continuous-batching inference engine with a device-resident decode loop.
 
 One engine owns: a packed model (serve.registry), a fixed-slot KV slab
 (serve.cache_pool), an admission policy (serve.scheduler) and three compiled
 functions — per-request prefill (batch 1), and ONE slab decode step reused
 every step of the engine's life.
 
+Device-resident decode (default, `EngineConfig.device_loop=True`): between
+host synchronizations nothing leaves the device. Sampling is fused into the
+compiled decode step (argmax + per-slot-temperature Gumbel with a threaded
+`jax.random` key — distributed.steps / transformer.sample_tokens), the
+token/index/lifecycle state lives in a donated device tree
+(`steps.make_decode_state`), and the KV slab is donated into every dispatch
+so it updates in place. A dispatch runs `decode_chunk` (K) micro-steps under
+one `lax.scan` with on-device EOS/length masking; the ONLY thing pulled back
+is the (K, n_slots) int32 token block — not (n_slots, vocab) logits — so
+host syncs per decoded token drop from 3/step (logits pull + token and index
+uploads, the PR-1 loop kept as `device_loop=False`) to 1 per K-step
+dispatch. Host-side emission catches up from the synced block: streaming
+callbacks fire in micro-step order and slots that finished mid-block are
+freed retroactively.
+
+The `decode_chunk` knob is a latency/throughput trade: larger K amortizes
+dispatch + sync overhead over more tokens but coarsens the admission clock
+(new requests join only at block boundaries) and wastes tail micro-steps
+when a request finishes mid-block. K=1 is latency-optimal and keeps PR-1
+admission granularity; benchmarks run K=4.
+
 Step loop (`step()`):
 
-  1. admission — the scheduler picks arrived requests for free slots; each
-     admitted request is prefilled alone (batch 1) and its cache written
-     into its slot. Its first token is sampled from the prefill logits.
-  2. slab decode — one `make_decode_step` call over ALL slots with the
-     per-slot position vector (models.attention gathers each row's cache
-     clock); idle slots decode garbage that per-slot validity masks keep
-     inert, so the compiled shape never changes and requests join/leave the
-     batch with zero recompiles.
-  3. lifecycle — sampled tokens are appended per active request (streaming
-     via `Request.on_token`), finished requests free their slots, and the
-     freed slots are admissible on the very next step.
+  1. admission — the scheduler picks arrived requests for free slots (the
+     waiting deque is re-partitioned in ONE pass); each admitted request is
+     prefilled alone (batch 1, caches allocated inside the compiled step)
+     and its cache donated into its slab row. Its first token is sampled
+     on device from the prefill logits and its per-slot row (token, index,
+     temperature, EOS, remaining budget) is installed into the device state.
+  2. slab decode — one dispatch over ALL slots with the per-slot position
+     vector (models.attention gathers each row's cache clock); idle slots
+     decode garbage that per-slot validity masks keep inert, so the compiled
+     shape never changes and requests join/leave with zero recompiles.
+  3. lifecycle — the synced token block is emitted per request in micro-step
+     order (streaming via `Request.on_token`), finished requests free their
+     slots, and freed slots are admissible on the very next step.
 
 Prefill compile-shape policy: prompts are right-padded to power-of-two
 buckets (full-logits prefill, read at the true prompt end; the padded cache
@@ -30,7 +53,11 @@ length — correctness over compile reuse.
 Determinism contract: with temperature=0 every request's output is
 independent of what else shares the slab (batch-invariance), EXCEPT
 capacity-routed MoE archs where expert-capacity contention is inherently
-batch-dependent (true of the lock-step baseline too).
+batch-dependent (true of the lock-step baseline too). Greedy outputs are
+identical between the device loop (any K) and the host loop. With
+temperature>0 the device loop samples with jax.random (the host loop keeps
+its numpy rng): one rng split per MICRO-step makes a single request's
+sampled sequence reproducible for any K grouping of the same steps.
 """
 
 from __future__ import annotations
@@ -44,7 +71,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed import steps as ST
-from repro.serve.cache_pool import CachePool
+from repro.models import transformer as T
+from repro.serve.cache_pool import CachePool, quiet_donation
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import PackedModel
 from repro.serve.scheduler import (ContinuousScheduler, Request,
@@ -59,7 +87,9 @@ class EngineConfig:
     cache_dtype: str = "float32"
     prefill_buckets: bool = True       # pow2 right-padding (where exact)
     bucket_min: int = 16
-    seed: int = 0                      # sampling rng (temperature > 0)
+    seed: int = 0                      # sampling rng
+    device_loop: bool = True           # fused on-device sampling + state
+    decode_chunk: int = 1              # K micro-steps per dispatch (device)
 
 
 class InferenceEngine:
@@ -68,6 +98,12 @@ class InferenceEngine:
     def __init__(self, model: PackedModel, cfg: EngineConfig = EngineConfig(),
                  scheduler: Optional[SchedulerBase] = None,
                  metrics: Optional[ServeMetrics] = None):
+        if cfg.decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got "
+                             f"{cfg.decode_chunk}")
+        if cfg.decode_chunk > 1 and not cfg.device_loop:
+            raise ValueError("decode_chunk > 1 requires device_loop=True "
+                             "(the host loop samples every micro-step)")
         self.model = model
         self.cfg = cfg
         mcfg = model.cfg
@@ -75,14 +111,30 @@ class InferenceEngine:
         self.metrics = metrics or ServeMetrics()
         self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
                               jnp.dtype(cfg.cache_dtype))
+        # device loop: prefill allocates its batch-1 caches inside the
+        # compiled step (no host template copied in); host loop (PR-1
+        # comparison baseline) keeps the template-operand form.
+        pkw = dict(cache_len=cfg.max_len,
+                   cache_dtype=jnp.dtype(cfg.cache_dtype)) \
+            if cfg.device_loop else {}
         self._prefill_last = jax.jit(
-            ST.make_prefill_step(mcfg, cfg.backend, last_only=True))
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=True, **pkw))
         self._prefill_full = jax.jit(
-            ST.make_prefill_step(mcfg, cfg.backend, last_only=False))
-        self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=False, **pkw))
+        if cfg.device_loop:
+            self._decode = jax.jit(
+                ST.make_decode_step(mcfg, cfg.backend,
+                                    n_steps=cfg.decode_chunk),
+                donate_argnums=(1, 2))   # slab + state update in place
+            self._install = jax.jit(ST.install_slot, donate_argnums=(0,))
+            self._state = ST.make_decode_state(cfg.n_slots, cfg.seed)
+            self._sample_first = jax.jit(T.sample_tokens)
+            self._first_key = jax.random.PRNGKey(cfg.seed)
+        else:
+            self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+            self._tokens = np.zeros((cfg.n_slots, 1), np.int32)
+            self._indices = np.zeros((cfg.n_slots,), np.int32)
         self._slots: List[Optional[Request]] = [None] * cfg.n_slots
-        self._tokens = np.zeros((cfg.n_slots, 1), np.int32)
-        self._indices = np.zeros((cfg.n_slots,), np.int32)
         self._waiting: collections.deque = collections.deque()
         self._rng = np.random.default_rng(cfg.seed)
         self._next_id = 0
@@ -137,18 +189,27 @@ class InferenceEngine:
         return len(self._waiting)
 
     def step(self) -> None:
-        """One engine step: admissions, then one slab decode."""
+        """One engine step: admissions, then one slab decode dispatch."""
         arrived = [r for r in self._waiting
                    if r.arrival_step <= self.step_count]
-        for r in self.scheduler.admissible(arrived, self.pool.n_active,
-                                           self.pool.n_free):
-            self._waiting.remove(r)
-            self._start(r)
+        admitted = self.scheduler.admissible(arrived, self.pool.n_active,
+                                             self.pool.n_free)
+        if admitted:
+            # single-pass re-partition of the deque: the per-request
+            # deque.remove() of PR 1 was O(waiting) per admission, O(n^2)
+            # per step under bursty arrivals.
+            chosen = {r.id for r in admitted}
+            self._waiting = collections.deque(
+                r for r in self._waiting if r.id not in chosen)
+            for r in admitted:
+                self._start(r)
         if self.pool.n_active:
-            self._decode_step()
+            advanced = self._decode_block() if self.cfg.device_loop \
+                else self._decode_step_host()
         else:
             self.metrics.on_idle_step()
-        self.step_count += 1
+            advanced = 1
+        self.step_count += advanced
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Step until every submitted request completes; returns outputs."""
@@ -173,16 +234,16 @@ class InferenceEngine:
             b *= 2
         return b if b <= self._bucket_cap else s0
 
-    def _sample(self, row: np.ndarray, r: Request) -> int:
+    def _sample_host(self, row: np.ndarray, r: Request) -> int:
         if r.temperature <= 0.0:
             return int(np.argmax(row))
         logits = row.astype(np.float64) / r.temperature
         g = self._rng.gumbel(size=logits.shape)
         return int(np.argmax(logits + g))
 
-    def _emit(self, r: Request, tok: int) -> None:
+    def _emit(self, r: Request, tok: int, step: int) -> None:
         r.generated.append(tok)
-        self.metrics.on_token(r.id, self.step_count)
+        self.metrics.on_token(r.id, step)
         if r.on_token is not None:
             r.on_token(r, tok)
         done = len(r.generated) >= r.max_new_tokens \
@@ -191,7 +252,7 @@ class InferenceEngine:
             r.state = "done"
             self.pool.free(r.slot)
             self._slots[r.slot] = None
-            self.metrics.on_finish(r.id, self.step_count)
+            self.metrics.on_finish(r.id, step)
 
     def _start(self, r: Request) -> None:
         slot = self.pool.alloc()
@@ -203,35 +264,76 @@ class InferenceEngine:
         if r.extras:
             batch.update({k: jnp.asarray(v) for k, v in r.extras.items()})
         n_img = self.model.cfg.n_img_tokens
-        if sp == s0:
-            logits, caches = self._prefill_last(
-                self.model.params, batch, self.pool.single_template)
-            last = np.asarray(logits[0, -1])
+        dev = self.cfg.device_loop
+        prefill = self._prefill_last if sp == s0 else self._prefill_full
+        if dev:
+            logits, caches = prefill(self.model.params, batch)
         else:
-            logits, caches = self._prefill_full(
-                self.model.params, batch, self.pool.single_template)
-            last = np.asarray(logits[0, n_img + s0 - 1])
+            logits, caches = prefill(self.model.params, batch,
+                                     self.pool.single_template)
+        # (1, vocab) on device: the true prompt-end column
+        row = logits[:, -1] if sp == s0 else logits[:, n_img + s0 - 1]
         self.pool.write_slot(slot, caches)
         r.state, r.slot = "running", slot
         r.index = n_img + s0
         self._slots[slot] = r
-        self._indices[slot] = r.index
         self.metrics.on_start(r.id, self.step_count)
-        tok = self._sample(last, r)
-        self._tokens[slot, 0] = tok
-        self._emit(r, tok)            # may finish (max_new_tokens == 1)
+        if dev:
+            key = jax.random.fold_in(self._first_key, r.id)
+            temp = jnp.full((1,), r.temperature, jnp.float32)
+            tok = int(self._sample_first(row, key, temp)[0])
+            self.metrics.on_host_sync("prefill")     # the one int32 pulled
+            eos = -1 if r.eos_id is None else int(r.eos_id)
+            rem = 0 if (r.eos_id is not None and tok == r.eos_id) \
+                else r.max_new_tokens - 1
+            with quiet_donation():
+                self._state = self._install(
+                    self._state, slot, tok, r.index, r.temperature, eos, rem)
+        else:
+            tok = self._sample_host(np.asarray(row[0]), r)
+            self.metrics.on_host_sync("prefill")
+            self._tokens[slot, 0] = tok
+            self._indices[slot] = r.index
+        self._emit(r, tok, self.step_count)  # may finish (max_new_tokens == 1)
 
-    def _decode_step(self) -> None:
+    def _decode_block(self) -> int:
+        """Device-resident path: ONE dispatch = K fused micro-steps; sync a
+        (K, B) int32 token block and catch host bookkeeping up to it."""
+        k = self.cfg.decode_chunk
+        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots,
+                                    micro_steps=k)
+        with quiet_donation():
+            tok_block, self.pool.caches, self._state = self._decode(
+                self.model.params, self.pool.caches, self._state)
+        block = np.asarray(tok_block)                # the ONLY decode sync
+        self.metrics.on_host_sync("decode")
+        for j in range(k):
+            step = self.step_count + j
+            for slot in range(self.cfg.n_slots):
+                r = self._slots[slot]
+                if r is None:
+                    continue
+                r.index += 1
+                self._emit(r, int(block[j, slot]), step)
+        return k
+
+    def _decode_step_host(self) -> int:
+        """PR-1 host loop: full-vocab logits pulled, numpy sampling, token +
+        index vectors re-uploaded every step. Kept as the measured baseline
+        (serve_bench 'host' mode) and as the numpy-rng sampling reference."""
         self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots)
         logits, self.pool.caches = self._decode(
             self.model.params, self.pool.caches,
             jnp.asarray(self._tokens), jnp.asarray(self._indices))
         rows = np.asarray(logits[:, -1])
+        # logits pull + token and index uploads: 3 crossings per step
+        self.metrics.on_host_sync("decode", 3)
         for slot, r in enumerate(self._slots):
             if r is None:
                 continue
             r.index += 1
             self._indices[slot] = r.index
-            tok = self._sample(rows[slot], r)
+            tok = self._sample_host(rows[slot], r)
             self._tokens[slot, 0] = tok
-            self._emit(r, tok)
+            self._emit(r, tok, self.step_count)
+        return 1

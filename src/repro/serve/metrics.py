@@ -5,8 +5,19 @@ Everything is recorded in two clocks:
   * wall seconds — what an operator sees (includes jit compiles, host
     sampling, python overhead);
   * engine steps — the deterministic clock the scheduler runs on (one slab
-    decode per step). Step-based numbers are what benchmarks compare across
-    scheduling policies, since they are immune to compile-time noise.
+    decode micro-step per step). Step-based numbers are what benchmarks
+    compare across scheduling policies, since they are immune to
+    compile-time noise.
+
+Device-loop accounting (PR 2): `decode_steps` counts DISPATCHES (one
+compiled call, K micro-steps in multi-step mode), so tokens_per_step is
+"tokens per launched step" — the quantity the device-resident loop improves.
+`on_host_sync` counts host<->device crossings on the serving path, split by
+kind: the legacy host loop costs 3 per step (logits pull + token and index
+uploads); the fused loop costs 1 per K-step dispatch (the (K, B) int32 token
+block). `host_syncs_per_token` in the report divides decode-kind syncs by
+DECODED tokens (tokens_generated minus the per-request first tokens, which
+come from prefill).
 """
 
 from __future__ import annotations
@@ -44,11 +55,13 @@ class ServeMetrics:
 
     def __init__(self) -> None:
         self.t0 = time.time()
-        self.decode_steps = 0
+        self.decode_steps = 0                 # dispatches (K micro-steps each)
+        self.micro_steps = 0                  # slab forwards actually run
         self.idle_steps = 0
         self.prefills = 0
         self.tokens_generated = 0
-        self.occupancy: List[float] = []      # active / n_slots per decode step
+        self.host_syncs: Dict[str, int] = {"decode": 0, "prefill": 0}
+        self.occupancy: List[float] = []      # active / n_slots per dispatch
         self.records: Dict[int, RequestRecord] = {}
 
     # -- recording hooks (called by the engine) -----------------------------
@@ -76,12 +89,19 @@ class ServeMetrics:
         rec.finish_step = step
         rec.finish_time = time.time()
 
-    def on_decode_step(self, n_active: int, n_slots: int) -> None:
+    def on_decode_step(self, n_active: int, n_slots: int,
+                       micro_steps: int = 1) -> None:
         self.decode_steps += 1
+        self.micro_steps += micro_steps
         self.occupancy.append(n_active / max(1, n_slots))
 
     def on_idle_step(self) -> None:
         self.idle_steps += 1
+
+    def on_host_sync(self, kind: str, n: int = 1) -> None:
+        """Record `n` host<->device crossings of the given kind
+        ('decode' | 'prefill')."""
+        self.host_syncs[kind] = self.host_syncs.get(kind, 0) + n
 
     # -- report -------------------------------------------------------------
 
@@ -92,11 +112,17 @@ class ServeMetrics:
         ttft_steps = [float(r.first_token_step - r.arrival_step)
                       for r in done if r.first_token_step >= 0]
         lat_wall = [r.finish_time - r.submit_time for r in done]
+        decoded = max(0, self.tokens_generated - self.prefills)
         return {
             "requests_completed": float(len(done)),
             "tokens_generated": float(self.tokens_generated),
             "decode_steps": float(self.decode_steps),
+            "micro_steps": float(self.micro_steps),
             "idle_steps": float(self.idle_steps),
+            "host_syncs_decode": float(self.host_syncs.get("decode", 0)),
+            "host_syncs_prefill": float(self.host_syncs.get("prefill", 0)),
+            "host_syncs_per_token": self.host_syncs.get("decode", 0)
+            / max(1, decoded),
             "wall_seconds": elapsed,
             "tok_per_s": self.tokens_generated / elapsed,
             "tokens_per_step": self.tokens_generated
@@ -117,6 +143,7 @@ class ServeMetrics:
                 f"{int(r['tokens_generated'])} toks in {r['wall_seconds']:.2f}s"
                 f" | {r['tok_per_s']:.1f} tok/s wall, "
                 f"{r['tokens_per_step']:.2f} tok/step"
+                f" | {r['host_syncs_per_token']:.2f} syncs/tok"
                 f" | occupancy {r['mean_occupancy']:.2f}"
                 f" | latency p50/p99 {r['latency_steps_p50']:.0f}/"
                 f"{r['latency_steps_p99']:.0f} steps"

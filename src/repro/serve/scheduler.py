@@ -21,6 +21,13 @@ admissions (each one a prefill) may happen before a decode step — new
 arrivals must not starve in-flight decodes (head-of-line blocking the other
 way). The default of 1 interleaves one prefill between decode steps, the
 standard continuous-batching compromise.
+
+Contract with the engine: `admissible` returns a SUBSET of `arrived` in
+arrival order and never mutates it; the engine removes the admitted set from
+its waiting deque in one pass (no per-request deque.remove). With the
+multi-step device loop (EngineConfig.decode_chunk=K) the admission clock
+ticks once per K-token decode block, so `max_prefills_per_step` bounds
+prefills per BLOCK — the knob's meaning scales with K.
 """
 
 from __future__ import annotations

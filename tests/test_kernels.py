@@ -128,6 +128,110 @@ def test_bsr_quant_matmul(bits, sparsity):
 
 
 # ---------------------------------------------------------------------------
+# skinny-m path: decode-shaped GEMMs (m = n_slots, far below one MXU tile)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import pallas_compat as PC
+
+
+@pytest.mark.parametrize("m", [1, 3, 4, 5, 13])
+def test_dense_matmul_skinny_m(m):
+    """Row counts that divide no block: padded to the sublane multiple,
+    computed, sliced back — bitwise-equal to the oracle."""
+    x, w = rand(20, (m, 64)), rand(21, (64, 32))
+    PC.SKINNY_M_EVENTS.clear()
+    got = ops.matmul(x, w, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.dense_matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+    assert got.shape == (m, 32)
+    assert any(e[0] == "dense_matmul" and e[1] == m
+               for e in PC.SKINNY_M_EVENTS)
+    PC.SKINNY_M_EVENTS.clear()
+
+
+@pytest.mark.parametrize("m", [1, 4])
+def test_bsr_matmul_skinny_m(m):
+    plan = sp.make_plan(64, 48, bk=8, bn=8, sparsity=0.5, seed=3)
+    w = rand(22, (64, 48)) * jnp.asarray(sp.plan_mask(plan), jnp.float32)
+    x = rand(23, (m, 64))
+    blocks = sp.pack_blocks(w, plan)
+    got = ops.bsr_matmul(x, blocks, jnp.asarray(plan.indices),
+                         backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_matmul_skinny_m(bits):
+    w, x = rand(24, (64, 32), scale=0.5), rand(25, (4, 64))
+    qt = qz.quantize(w, bits)
+    got = ops.quant_matmul(x, qt, backend="interpret", bk=16, bn=16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.quant_matmul_ref(x, qt)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_w8a8_skinny_m():
+    """w8a8 pads AFTER per-row activation quantization (zero pad rows would
+    poison the row-scale), to the int8 sublane multiple of 32."""
+    w, x = rand(26, (64, 32), scale=0.5), rand(27, (4, 64))
+    qt = qz.quantize(w, 8)
+    PC.SKINNY_M_EVENTS.clear()
+    got = ops.quant_matmul_w8a8(x, qt, backend="interpret", bk=16, bn=16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.quant_matmul_w8a8_ref(x, qt)),
+                               rtol=1e-4, atol=1e-4)
+    assert any(e[0] == "quant_matmul_w8a8" and e[2] == 32
+               for e in PC.SKINNY_M_EVENTS)
+    PC.SKINNY_M_EVENTS.clear()
+
+
+def test_bsr_quant_matmul_skinny_m():
+    bits, m = 4, 4
+    plan = sp.make_plan(64, 32, bk=16, bn=16, sparsity=0.5, seed=9)
+    w = rand(28, (64, 32), scale=0.5)
+    x = rand(29, (m, 64))
+    scale = qz.compute_scale(w, bits)
+    codes = qz.quantize_values(w, scale, bits)
+    cblocks = sp.pack_blocks(codes, plan)
+    n_pb, nnz, bk, bn = cblocks.shape
+    vpb = qz.VALUES_PER_BYTE[bits]
+    packed = jax.vmap(lambda b: qz.pack_codes(b, bits))(
+        cblocks.reshape(n_pb * nnz, bk, bn)).reshape(n_pb, nnz, bk // vpb, bn)
+    scales = jnp.asarray(scale, jnp.float32).reshape(n_pb, bn)
+    got = ops.bsr_quant_matmul(x, packed, scales, jnp.asarray(plan.indices),
+                               bits, backend="interpret")
+    want = R.bsr_quant_matmul_ref(x, packed, scales, plan.indices, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_skinny_bm_sublane_alignment():
+    """The adaptive row block respects the per-dtype sublane minimum and
+    never pads when an exact sublane-aligned grid exists."""
+    assert PC.skinny_bm(4, 128, jnp.float32) == 8
+    assert PC.skinny_bm(4, 128, jnp.bfloat16) == 16
+    assert PC.skinny_bm(4, 128, jnp.int8) == 32
+    assert PC.skinny_bm(64, 128, jnp.float32) == 64    # exact, no pad
+    assert PC.skinny_bm(200, 128, jnp.float32) == 8    # exact grid: 25 x 8
+    assert PC.skinny_bm(16, 8, jnp.float32) == 8       # divisible bm wins
+    assert PC.skinny_bm(4, 8, jnp.bfloat16) == 16      # pad path clamps up
+    assert PC.skinny_bm(12, 128, jnp.float32) == 16    # 12 -> one 16-row pad
+
+
+def test_dense_matmul_large_m_keeps_exact_grid():
+    """m=200 picks the exact 8-row grid — no pad rows, no skinny event."""
+    x, w = rand(30, (200, 64)), rand(31, (64, 32))
+    PC.SKINNY_M_EVENTS.clear()
+    got = ops.matmul(x, w, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.dense_matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+    assert not PC.SKINNY_M_EVENTS
+
+
+# ---------------------------------------------------------------------------
 # flash attention: causal / window / softcap / GQA
 # ---------------------------------------------------------------------------
 
