@@ -28,9 +28,20 @@ decoded token alongside. `--out` writes the records as JSON
 ({arch, spec, mode, tokens_per_step, wall_tok_s, host_syncs_per_token, ...})
 so every future PR has a perf baseline to diff against.
 
+Mesh / router modes (PR 3): `--mesh data,model` adds a 'sharded' mode —
+the same trace through `serve.ShardedBackend` on a local mesh of that
+shape, gated on emitting exactly the tokens the local device loop emits
+(placement must not change outputs). `--replicas N` adds a router
+comparison: ONE dense synthetic trace replayed against a single engine and
+against `serve.ReplicaRouter` over N replicas (each on its own
+data-submesh when `--mesh` is given), gated on aggregate
+tokens/router-step >= 1.5x the single replica's tokens/step. Every JSON
+record carries `mesh_shape` and `n_replicas` so the CI artifact
+distinguishes placements.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--arch ...]
       [--requests N] [--slots K] [--seed S] [--decode-chunk K]
-      [--out results/BENCH_serve.json]
+      [--mesh D,M] [--replicas N] [--out results/BENCH_serve.json]
 """
 
 from __future__ import annotations
@@ -93,16 +104,48 @@ class PackedRouteCounter:
 
 
 def run_one(model, trace, n_slots: int, max_len: int, scheduler, *,
-            device_loop: bool = True, decode_chunk: int = 1):
+            device_loop: bool = True, decode_chunk: int = 1, backend=None):
     eng = InferenceEngine(
         model, EngineConfig(n_slots=n_slots, max_len=max_len,
                             device_loop=device_loop,
                             decode_chunk=decode_chunk),
-        scheduler=scheduler)
+        scheduler=scheduler, backend=backend)
     for arrival, prompt, gen in trace:
         eng.submit(prompt, gen, arrival_step=arrival)
     eng.run()
     return eng.metrics.report()
+
+
+def run_router(model, trace, n_slots: int, max_len: int, n_replicas: int,
+               decode_chunk: int, mesh_shape=None):
+    """The SAME trace through a single engine and through the router over
+    n_replicas engines; returns (single_report, router_report). With a mesh
+    shape, each replica owns a disjoint data-submesh (replica_meshes);
+    max_waiting = n_slots bounds each replica's deque so overload exercises
+    the spill-over path instead of queueing unboundedly."""
+    from repro.serve import ReplicaRouter, ShardedBackend
+
+    def mk_backend(i):
+        if mesh_shape is None:
+            return None
+        return ShardedBackend(mesh=mk_backend.meshes[i])
+
+    if mesh_shape is not None:
+        from repro.launch import mesh as M
+        mk_backend.meshes = M.replica_meshes(*mesh_shape, n_replicas)
+
+    single = run_one(model, trace, n_slots, max_len, None,
+                     decode_chunk=decode_chunk,
+                     backend=mk_backend(0) if mesh_shape else None)
+    cfg = EngineConfig(n_slots=n_slots, max_len=max_len,
+                       decode_chunk=decode_chunk, max_waiting=n_slots)
+    router = ReplicaRouter.build(model, cfg, n_replicas,
+                                 backend_factory=mk_backend
+                                 if mesh_shape else None)
+    for arrival, prompt, gen in trace:
+        router.submit(prompt, gen, arrival_step=arrival)
+    router.run()
+    return single, router.report()
 
 
 def skinny_decode_trace(model, n_slots: int, max_len: int,
@@ -132,6 +175,7 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
         n_slots: int = 4, mean_interarrival: float = 2.0,
         prompt_range=(4, 24), gen_range=(8, 24), seed: int = 0,
         smoke: bool = False, decode_chunk: int = 4,
+        n_replicas: int = 1, mesh_shape=None,
         out: str = "") -> bool:
     registry = ModelRegistry()
     csv = CSV(["spec", "mode", "toks", "dispatches", "tok_per_step",
@@ -141,25 +185,52 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
     specs = [(n, s) for n, s in SPECS if not smoke or n in SMOKE_SPECS]
     ok = True
     records = []
+    mesh_list = list(mesh_shape) if mesh_shape else [1, 1]
+
+    def record(spec_name, mode_name, rep, k, **extra):
+        records.append({
+            "arch": arch, "spec": spec_name, "mode": mode_name,
+            "decode_chunk": k,
+            # per-record placement: only sharded/router modes ran on the
+            # mesh; host/device/static are the local-placement baselines
+            "mesh_shape": mesh_list if mode_name in ("sharded", "router")
+            else [1, 1],
+            "n_replicas": extra.pop("n_replicas", 1),
+            "tokens_per_step": rep.get("tokens_per_step", 0.0),
+            "wall_tok_s": rep["tok_per_s"],
+            "host_syncs_per_token": rep["host_syncs_per_token"],
+            "host_syncs_per_dispatch": rep["host_syncs_decode"]
+            / max(1.0, rep["decode_steps"]),
+            "mean_occupancy": rep["mean_occupancy"],
+            "latency_steps_p50": rep["latency_steps_p50"],
+            **extra})
+
     for spec_name, spec in specs:
         model = registry.load(arch, spec, seed=seed)
         cfg = model.cfg
         trace = poisson_trace(n_requests, mean_interarrival, prompt_range,
                               gen_range, cfg.vocab, seed)
         max_len = cfg.n_img_tokens + prompt_range[1] + gen_range[1] + 8
-        modes = (
+        modes = [
             ("host", dict(scheduler=None, device_loop=False, decode_chunk=1)),
             ("device", dict(scheduler=None, device_loop=True,
                             decode_chunk=decode_chunk)),
             ("static", dict(scheduler=StaticScheduler(), device_loop=True,
                             decode_chunk=decode_chunk)),
-        )
+        ]
+        if mesh_shape is not None:
+            from repro.serve import ShardedBackend
+            modes.append(("sharded", dict(
+                scheduler=None, device_loop=True, decode_chunk=decode_chunk,
+                backend=lambda: ShardedBackend(mesh_shape=mesh_shape))))
         results = {}
         for mode_name, kw in modes:
+            bk = kw.get("backend")
             with PackedRouteCounter() as counter:
                 rep = run_one(model, trace, n_slots, max_len, kw["scheduler"],
                               device_loop=kw["device_loop"],
-                              decode_chunk=kw["decode_chunk"])
+                              decode_chunk=kw["decode_chunk"],
+                              backend=bk() if bk else None)
             results[mode_name] = rep
             csv.row(spec_name, mode_name, int(rep["tokens_generated"]),
                     int(rep["decode_steps"]), rep["tokens_per_step"],
@@ -167,21 +238,24 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
                     rep["host_syncs_per_token"],
                     rep["latency_steps_p50"], rep["latency_steps_p99"],
                     model.packed_bytes / 1e6, model.compression, counter.hits)
-            records.append({
-                "arch": arch, "spec": spec_name, "mode": mode_name,
-                "decode_chunk": kw["decode_chunk"],
-                "tokens_per_step": rep["tokens_per_step"],
-                "wall_tok_s": rep["tok_per_s"],
-                "host_syncs_per_token": rep["host_syncs_per_token"],
-                "host_syncs_per_dispatch": rep["host_syncs_decode"]
-                / max(1.0, rep["decode_steps"]),
-                "mean_occupancy": rep["mean_occupancy"],
-                "latency_steps_p50": rep["latency_steps_p50"],
-            })
+            record(spec_name, mode_name, rep, kw["decode_chunk"])
             if counter.hits == 0:
                 print(f"# FAIL {spec_name}/{mode_name}: decode did not "
                       "route through apply_packed")
                 ok = False
+        if mesh_shape is not None:
+            # placement must not change the traffic the trace produces:
+            # the sharded engine emits exactly as many tokens per dispatch
+            # as the local device loop on the same trace (greedy outputs
+            # are token-identical; tested leaf-for-leaf in test_serve_*).
+            dev, shd = results["device"], results["sharded"]
+            win_mesh = (shd["tokens_generated"] == dev["tokens_generated"]
+                        and shd["decode_steps"] == dev["decode_steps"])
+            ok = ok and win_mesh
+            print(f"# {spec_name}: sharded mesh {mesh_list} "
+                  f"{shd['tokens_per_step']:.2f} tok/step over "
+                  f"{int(shd['decode_steps'])} dispatches "
+                  f"[{'PASS' if win_mesh else 'FAIL'}]")
         host, dev, stat = (results[m] for m in ("host", "device", "static"))
         win_sched = dev["tokens_per_step"] >= stat["tokens_per_step"]
         # structural invariant (occupancy-independent): exactly ONE decode
@@ -212,8 +286,11 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
             # through the Pallas skinny-m path at slab width m = n_slots
             skinny = skinny_decode_trace(model, n_slots, max_len,
                                          decode_chunk)
+            # the skinny trace lowers locally (interpret backend), never on
+            # the mesh — same placement rule as record()
             records.append({"arch": arch, "spec": spec_name,
-                            "mode": "skinny_trace", **skinny})
+                            "mode": "skinny_trace", "mesh_shape": [1, 1],
+                            "n_replicas": 1, **skinny})
             win_skinny = (skinny["skinny_m_dispatches"] > 0
                           and skinny["apply_packed_hits"] > 0)
             ok = ok and win_skinny
@@ -221,16 +298,46 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
                   f"{skinny['skinny_m_dispatches']} skinny-m Pallas GEMMs "
                   f"({', '.join(skinny['skinny_kernels'])}) "
                   f"[{'PASS' if win_skinny else 'FAIL'}]")
+    if n_replicas > 1:
+        # router comparison: ONE dense trace (arrivals fast enough that a
+        # single replica saturates) against a single engine and against the
+        # router fleet. tokens/router-step vs tokens/step is the apples-to-
+        # apples clock: one router step = one dispatch round.
+        model = registry.load(arch, specs[0][1], seed=seed)
+        dense = poisson_trace(max(n_requests, 12 * n_replicas), 0.75,
+                              prompt_range, gen_range, model.cfg.vocab, seed)
+        max_len = model.cfg.n_img_tokens + prompt_range[1] + gen_range[1] + 8
+        single, routed = run_router(model, dense, n_slots, max_len,
+                                    n_replicas, decode_chunk,
+                                    mesh_shape=mesh_shape)
+        ratio = routed["tokens_per_router_step"] / \
+            max(1e-9, single["tokens_per_step"])
+        win_router = ratio >= 1.5
+        ok = ok and win_router
+        print(f"# router: {n_replicas} replicas "
+              f"{routed['tokens_per_router_step']:.2f} tok/router-step vs "
+              f"single {single['tokens_per_step']:.2f} tok/step "
+              f"({ratio:.2f}x, spills {int(routed['spills'])}, "
+              f"rebalanced {int(routed['rebalanced'])}) "
+              f"[{'PASS' if win_router else 'FAIL'} >= 1.5x]")
+        record(specs[0][0], "router", routed, decode_chunk,
+               n_replicas=n_replicas,
+               tokens_per_router_step=routed["tokens_per_router_step"],
+               router_vs_single=ratio, spills=routed["spills"],
+               rebalanced=routed["rebalanced"])
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
             json.dump({"arch": arch, "n_slots": n_slots,
                        "decode_chunk": decode_chunk, "smoke": smoke,
+                       "mesh_shape": mesh_list, "n_replicas": n_replicas,
                        "records": records}, f, indent=2)
         print(f"# wrote {out} ({len(records)} records)")
     print(f"# serve_bench: {'PASS' if ok else 'FAIL'} — device loop >= host "
           "loop >= static, 1 decode sync per K-step dispatch, packed + "
-          "skinny-m decode")
+          "skinny-m decode"
+          + (", sharded == device traffic" if mesh_shape else "")
+          + (", router >= 1.5x single" if n_replicas > 1 else ""))
     return ok
 
 
@@ -244,17 +351,30 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--decode-chunk", type=int, default=4,
                     help="K micro-steps per device-loop dispatch")
+    ap.add_argument("--mesh", default="",
+                    help="'data,model': add a ShardedBackend mode on a local "
+                         "mesh of this shape (force CPU devices via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="router comparison: N engine replicas vs a single "
+                         "engine on one dense trace (gate: >= 1.5x)")
     ap.add_argument("--out", default="",
                     help="write result records to this JSON path")
     a = ap.parse_args()
+    mesh_shape = None
+    if a.mesh:
+        from repro.launch.mesh import parse_mesh_arg
+        mesh_shape = parse_mesh_arg(a.mesh)
     if a.smoke:
         ok = run(a.arch, n_requests=a.requests or 8, n_slots=a.slots,
                  prompt_range=(4, 16), gen_range=(8, 16),
                  mean_interarrival=1.5, seed=a.seed, smoke=True,
-                 decode_chunk=a.decode_chunk, out=a.out)
+                 decode_chunk=a.decode_chunk, n_replicas=a.replicas,
+                 mesh_shape=mesh_shape, out=a.out)
     else:
         ok = run(a.arch, n_requests=a.requests or 16, n_slots=a.slots,
-                 seed=a.seed, decode_chunk=a.decode_chunk, out=a.out)
+                 seed=a.seed, decode_chunk=a.decode_chunk,
+                 n_replicas=a.replicas, mesh_shape=mesh_shape, out=a.out)
     sys.exit(0 if ok else 1)
 
 

@@ -1,0 +1,61 @@
+"""Replica-routed serving: one front-end over N engine replicas.
+
+Builds two continuous-batching engine replicas with BOUNDED waiting deques
+(EngineConfig.max_waiting) and drives a bursty trace through
+`serve.ReplicaRouter`: least-loaded admission spreads arrivals, a replica
+whose deque fills REJECTS (counted, raising EngineSaturated) and the router
+spills the request to its sibling or parks it in the overflow deque, and
+the per-step rebalancer moves tail-of-queue requests off a backed-up
+replica. Aggregate metrics pool both replicas (fleet-level p99, not a mean
+of per-replica p99s).
+
+On a multi-device host the same script scales out: give each replica a
+disjoint data-submesh via
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+and ShardedBackend(mesh=launch.mesh.replica_meshes(4, 2, 2)[i]) — greedy
+outputs are identical to the local backend, so the router's routing
+decisions are placement-independent.
+
+  PYTHONPATH=src python examples/serve_router.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.kratos import KratosSpec
+from repro.serve import EngineConfig, ModelRegistry, ReplicaRouter
+
+SPEC = KratosSpec(sparsity=0.5, bits=8, bk=8, bn=8)
+N_REPLICAS, N_SLOTS, MAX_WAITING = 2, 2, 2
+# (prompt_len, gen_len, arrival_step) — a burst at t=0 that MUST spill
+# (> one replica's slots + deque), then a trickle.
+TRACE = [(8, 12, 0), (6, 10, 0), (10, 8, 0), (7, 14, 0), (9, 6, 0),
+         (5, 12, 0), (8, 10, 4), (6, 8, 8)]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    model = ModelRegistry().load("h2o-danube-1.8b", SPEC)
+    router = ReplicaRouter.build(
+        model,
+        EngineConfig(n_slots=N_SLOTS, max_len=48, decode_chunk=2,
+                     max_waiting=MAX_WAITING),
+        N_REPLICAS)
+    reqs = [router.submit(rng.integers(0, model.cfg.vocab, s0), gen,
+                          arrival_step=at) for s0, gen, at in TRACE]
+    router.run()
+    rep = router.report()
+    print(f"router: {router.format_report()}")
+    per_replica = [int(e.metrics.tokens_generated) for e in router.replicas]
+    print(f"tokens per replica: {per_replica} "
+          f"(imbalance {max(per_replica) / max(1, min(per_replica)):.2f}x)")
+    assert all(len(r.generated) == g for r, (_, g, _) in zip(reqs, TRACE))
+    assert rep["requests_completed"] == len(TRACE)
+    print("serve_router OK")
+
+
+if __name__ == "__main__":
+    main()

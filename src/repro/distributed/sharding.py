@@ -199,12 +199,24 @@ def param_shardings(mesh: Mesh, params) -> Any:
 # Cache partition specs
 # ---------------------------------------------------------------------------
 
-def cache_pspecs(caches, mesh: Mesh, batch_size: int) -> Any:
+def cache_pspecs(caches, mesh: Mesh, batch_size: int, *,
+                 slab: bool = False) -> Any:
     """Shard KV caches: batch over ('pod','data') when divisible, else the
     cache *sequence* axis over 'data' (the long_500k single-request cell).
     The 'model' axis lands on kv-heads when divisible, otherwise on the
     cache sequence axis (e.g. kv=8 heads on a model=16 mesh — padding-free
-    vs a 2x-waste uneven head sharding). d_inner (SSM) over 'model'."""
+    vs a 2x-waste uneven head sharding). d_inner (SSM) over 'model'.
+
+    slab=True: the tree is a serving KV slab (serve.cache_pool) whose
+    leading axis is `n_slots`, not a lock-step batch. Two rules change:
+      * non-divisible slot counts REPLICATE instead of falling back to the
+        long-context seq-over-'data' layout — every slot row is scattered at
+        its own dynamic offset each micro-step, so a seq-sharded slab turns
+        each per-slot write into a cross-device exchange;
+      * leaves the name rules don't recognize still shard their leading
+        slot axis like batch (previously they fell through to fully
+        replicated as an "unknown dim").
+    """
     names = mesh.axis_names
     dp_axes = tuple(a for a in ("pod", "data") if a in names)
     dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
@@ -213,10 +225,18 @@ def cache_pspecs(caches, mesh: Mesh, batch_size: int) -> Any:
         b_ax, seq_ax = dp_axes, None
     elif "data" in names and batch_size % mesh.shape["data"] == 0:
         b_ax, seq_ax = "data", None
+    elif slab:
+        b_ax, seq_ax = None, None
     else:
         b_ax, seq_ax = None, "data"
 
     def one(path, leaf):
+        spec = _raw(path, leaf)
+        if hasattr(leaf, "shape"):      # drop non-divisible entries per leaf
+            spec = _sanitize_spec(spec, leaf.shape, mesh)
+        return spec
+
+    def _raw(path, leaf):
         names_ = _path_names(path)
         stacked = any(n == "blocks" for n in names_)
         lead = (None,) if stacked else ()
@@ -244,9 +264,12 @@ def cache_pspecs(caches, mesh: Mesh, batch_size: int) -> Any:
                     return P(*(lead + (b_ax, None, seq_ax, None)))
                 m_batch = tuple(a for a in ("pod", "model") if a in names)
                 mb_n = int(np.prod([mesh.shape[a] for a in m_batch]))
-                if shape[0] % mb_n == 0 and s_n % mesh.shape["data"] == 0:
+                if not slab and shape[0] % mb_n == 0 \
+                        and s_n % mesh.shape["data"] == 0:
                     return P(*(lead + (m_batch, None, "data", None)))
                 return P(*(lead + (b_ax, None, seq_ax, None)))
+            if slab:                        # never seq-shard a slot slab
+                return P(*(lead + (b_ax, None, None, None)))
             m_seq = "model" if seq_ax is None else (seq_ax, "model")
             if s_n % (model_n * (1 if seq_ax is None else mesh.shape["data"])) == 0:
                 return P(*(lead + (b_ax, None, m_seq, None)))
@@ -254,17 +277,24 @@ def cache_pspecs(caches, mesh: Mesh, batch_size: int) -> Any:
         # MLA latent caches: keep seq over 'model' — the per-layer latent
         # gather is tiny (~19 MB: no head axis), while batch-only sharding
         # makes the per-head expansion run unsharded (24 GiB on minicpm3;
-        # measured regression, reverted — §Perf H1 post-mortem).
+        # measured regression, reverted — §Perf H1 post-mortem). Serving
+        # slabs (per-slot dynamic scatters) keep the seq axis whole.
         if leafname == "c_kv":              # (B, S, r) — latent, no head axis
-            m_seq = "model" if seq_ax is None else (seq_ax, "model")
+            m_seq = None if slab else \
+                ("model" if seq_ax is None else (seq_ax, "model"))
             return P(*(lead + (b_ax, m_seq, None)))
         if leafname == "k_rope":            # (B, 1, S, dr)
-            m_seq = "model" if seq_ax is None else (seq_ax, "model")
+            m_seq = None if slab else \
+                ("model" if seq_ax is None else (seq_ax, "model"))
             return P(*(lead + (b_ax, None, m_seq, None)))
         if leafname == "ssm":               # (B, di, st)
             return P(*(lead + (b_ax, "model", None)))
         if leafname == "conv":              # (B, K-1, di)
             return P(*(lead + (b_ax, None, "model")))
+        if slab and nd >= 1 and shape and shape[0] == batch_size:
+            # unknown slab leaf: the leading slot axis still shards like
+            # batch; everything after it stays replicated.
+            return P(*(lead + (b_ax,) + (None,) * (nd - 1)))
         return P(*(lead + (None,) * nd))
 
     return jax.tree_util.tree_map_with_path(one, caches)
@@ -275,7 +305,13 @@ def batch_pspec(mesh: Mesh, batch_size: int) -> P:
     divides the FULL mesh (so downstream reshapes can re-split it over any
     axis subset), a plain 'data' entry when it only divides the data axis,
     replicated otherwise. Multi-dp-axis meshes keep the tuple whenever the
-    dp product divides — 'pod' x 'data' must shard together or not at all."""
+    dp product divides — 'pod' x 'data' must shard together or not at all.
+
+    The serving slab's per-slot vectors (steps.decode_state_pspecs) use
+    this with batch_size = n_slots: the slot axis of the (K, B) token block
+    and every lifecycle vector shards exactly like the slab's leading slot
+    axis, and the replicated fallback keeps non-divisible slot counts legal
+    as donated jit arguments (never an uneven sharding error)."""
     names = mesh.axis_names
     dp_axes = tuple(a for a in ("pod", "data") if a in names)
     dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1

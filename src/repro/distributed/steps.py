@@ -14,7 +14,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
 
+from repro.distributed.sharding import batch_pspec
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.optim import adamw as O
@@ -249,6 +251,21 @@ def make_decode_state(n_slots: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
         "remaining": jnp.zeros((n_slots,), jnp.int32),
         "active": jnp.zeros((n_slots,), bool),
     }
+
+
+def decode_state_pspecs(mesh, n_slots: int) -> Dict[str, PartitionSpec]:
+    """PartitionSpec tree matching `make_decode_state(n_slots)`.
+
+    Every per-slot lifecycle vector is (n_slots,) and shards exactly like
+    the slab's leading slot axis (sharding.batch_pspec — replicated when
+    n_slots doesn't divide the dp axes, so the donated decode step always
+    has a legal placement); the threaded rng key is replicated — each
+    micro-step's split must agree on every device."""
+    slot_spec = batch_pspec(mesh, n_slots)
+    spec = {k: slot_spec for k in ("tokens", "index", "temperature", "eos",
+                                   "remaining", "active")}
+    spec["key"] = PartitionSpec(None)
+    return spec
 
 
 def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,

@@ -13,6 +13,8 @@ Topology targets (TPU v5e-class):
 
 from __future__ import annotations
 
+from typing import List, Tuple
+
 import jax
 
 
@@ -25,6 +27,49 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str) -> Tuple[int, int]:
+    """'2,4' or 'data=2,model=4' -> (data, model). The serving launchers'
+    `--mesh` grammar (CPU runs force devices via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N first)."""
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    if len(parts) != 2:
+        raise ValueError(f"--mesh expects 'data,model', got {spec!r}")
+    vals = {}
+    for i, p in enumerate(parts):
+        if "=" in p:
+            k, v = p.split("=", 1)
+            vals[k.strip()] = int(v)
+        else:
+            vals[("data", "model")[i]] = int(p)
+    if set(vals) != {"data", "model"} or min(vals.values()) < 1:
+        raise ValueError(f"--mesh expects positive data,model sizes, "
+                         f"got {spec!r}")
+    return vals["data"], vals["model"]
+
+
+def replica_meshes(data: int, model: int, n_replicas: int) -> List:
+    """Split a (data, model) device grid into `n_replicas` disjoint
+    submeshes along the DATA axis — one serving-engine replica per
+    data-parallel submesh (serve.router). Each replica keeps the full
+    'model' axis (TP stays intact); the data axis divides evenly or this
+    raises (uneven replicas would skew the router's load signal)."""
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    if data % n_replicas:
+        raise ValueError(f"data axis {data} does not divide into "
+                         f"{n_replicas} replicas")
+    import numpy as np
+    from jax.sharding import Mesh
+    need = data * model
+    devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(f"mesh {data}x{model} needs {need} devices, "
+                         f"have {len(devices)}")
+    grid = np.asarray(devices[:need]).reshape(n_replicas,
+                                              data // n_replicas, model)
+    return [Mesh(grid[i], ("data", "model")) for i in range(n_replicas)]
 
 
 # Hardware constants for the roofline (TPU v5e-class, per chip)

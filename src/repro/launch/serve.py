@@ -3,7 +3,8 @@
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --requests 8 --prompt-len 32 --gen 32 \
       [--sparsity 0.5 --bits 8 --impl tree] [--slots 4] [--static] \
-      [--temperature 0.8]
+      [--temperature 0.8] \
+      [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run]
 
 Loads the reduced config on CPU through the serve registry (weights packed
 once via kratos.pack), submits `--requests` generation requests with a small
@@ -11,6 +12,17 @@ prompt-length jitter, and drives the engine until the trace drains. The
 engine's prefill/decode steps are the SAME `distributed.steps` factories the
 decode_32k / long_500k dry-run cells lower for the production mesh — the
 per-slot-index decode is a strict generalization of the lock-step step.
+
+Mesh serving: `--mesh 2,4` places every replica's params/slab/state over a
+(data=2, model=4) mesh via `serve.ShardedBackend` (force CPU devices first:
+XLA_FLAGS=--xla_force_host_platform_device_count=8). `--replicas N` fronts
+N engines with `serve.ReplicaRouter` — with a mesh, the data axis splits
+into one disjoint submesh per replica (launch.mesh.replica_meshes); without
+one, N LocalBackend replicas share the default device. `--dry-run` prints
+the RESOLVED placement — one line per cache/state leaf with its
+PartitionSpec — plus the loop-aware cost of the lowered sharded decode step
+(analysis.hlo: flops, memory bytes, collective wire bytes) and exits
+without running traffic.
 """
 
 from __future__ import annotations
@@ -20,8 +32,43 @@ import argparse
 import numpy as np
 
 from repro.core.kratos import KratosSpec
-from repro.serve import (EngineConfig, InferenceEngine, ModelRegistry,
+from repro.serve import (EngineConfig, InferenceEngine, LocalBackend,
+                         ModelRegistry, ReplicaRouter, ShardedBackend,
                          StaticScheduler)
+
+
+def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
+    """Print resolved shardings per cache/state/param group + decode cost."""
+    import jax
+    from repro.analysis import hlo as HA
+    from repro.distributed import sharding as SH, steps as ST
+    from repro.launch import mesh as M
+    from repro.models import transformer as T
+
+    mesh = M.make_local_mesh(*mesh_shape)
+    print(f"[dry-run] mesh {dict(mesh.shape)} over {mesh.size} devices")
+    caches = jax.eval_shape(
+        lambda: T.make_caches(model.cfg, cfg.n_slots, cfg.max_len))
+    cache_specs = SH.cache_pspecs(caches, mesh, cfg.n_slots, slab=True)
+    print(f"[dry-run] KV slab leaves ({cfg.n_slots} slots x "
+          f"{cfg.max_len} positions):")
+    for path, spec in jax.tree_util.tree_leaves_with_path(
+            cache_specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec)):
+        print(f"    {jax.tree_util.keystr(path):48s} {spec}")
+    print("[dry-run] decode state vectors:")
+    for k, spec in ST.decode_state_pspecs(mesh, cfg.n_slots).items():
+        print(f"    {k:48s} {spec}")
+    backend = ShardedBackend(mesh=mesh)
+    backend.build(model, cfg)
+    compiled = backend._decode.lower(backend.params, backend.pool.caches,
+                                     backend.state).compile()
+    r = HA.analyze(compiled.as_text())
+    coll = {k: int(v["count"]) for k, v in r["collectives"].items()
+            if v["count"]}
+    print(f"[dry-run] decode step (K={cfg.decode_chunk}): "
+          f"{r['flops']:.3g} flops, {r['bytes']:.3g} B touched, "
+          f"{r['wire_bytes']:.3g} B wire, collectives {coll or 'none'}")
 
 
 def main() -> None:
@@ -48,7 +95,21 @@ def main() -> None:
     ap.add_argument("--host-loop", action="store_true",
                     help="PR-1 host decode loop (per-step logits pull + "
                          "numpy sampling) instead of the device-resident one")
+    ap.add_argument("--mesh", default="",
+                    help="'data,model' sizes: serve through ShardedBackend "
+                         "on a local mesh of that shape")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N engine replicas with the ReplicaRouter "
+                         "(with --mesh, one data-submesh per replica)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound each replica's waiting deque (0 = unbounded);"
+                         " rejections spill across replicas")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print resolved cache/state shardings + decode cost "
+                         "for --mesh and exit (no traffic)")
     args = ap.parse_args()
+
+    from repro.launch import mesh as M
 
     spec = KratosSpec(sparsity=args.sparsity,
                       bits=args.bits or None,
@@ -63,23 +124,68 @@ def main() -> None:
 
     max_len = args.max_len or (model.cfg.n_img_tokens + args.prompt_len
                                + args.gen + 8)
-    engine = InferenceEngine(
-        model,
-        EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
-                     device_loop=not args.host_loop,
-                     decode_chunk=args.decode_chunk),
-        scheduler=StaticScheduler() if args.static else None)
+    cfg = EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
+                       device_loop=not args.host_loop,
+                       decode_chunk=args.decode_chunk,
+                       max_waiting=args.max_waiting or None)
+    mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
+
+    if args.dry_run:
+        if mesh_shape is None:
+            raise SystemExit("--dry-run needs --mesh data,model")
+        _dry_run(model, cfg, mesh_shape)
+        return
+
+    def backend_for(i: int):
+        if mesh_shape is None:
+            return LocalBackend()
+        if args.replicas > 1:
+            meshes = backend_for.meshes
+            return ShardedBackend(mesh=meshes[i])
+        return ShardedBackend(mesh_shape=mesh_shape)
+
+    if mesh_shape is not None and args.replicas > 1:
+        backend_for.meshes = M.replica_meshes(*mesh_shape, args.replicas)
 
     rng = np.random.default_rng(args.seed)
-    reqs = []
-    for i in range(args.requests):
-        s0 = max(1, args.prompt_len + int(rng.integers(-4, 5)))
-        prompt = rng.integers(0, model.cfg.vocab, s0)
-        reqs.append(engine.submit(prompt, args.gen, arrival_step=i,
-                                  temperature=args.temperature))
-    engine.run()
-    print(f"[serve] scheduler={engine.scheduler.name} "
-          f"{engine.metrics.format_report()}")
+
+    def trace():
+        for i in range(args.requests):
+            s0 = max(1, args.prompt_len + int(rng.integers(-4, 5)))
+            yield rng.integers(0, model.cfg.vocab, s0), args.gen, i
+
+    if args.replicas > 1:
+        router = ReplicaRouter.build(
+            model, cfg, args.replicas,
+            backend_factory=backend_for,
+            scheduler_factory=(lambda i: StaticScheduler()) if args.static
+            else None)
+        reqs = [router.submit(p, g, arrival_step=at,
+                              temperature=args.temperature)
+                for p, g, at in trace()]
+        router.run()
+        print(f"[serve] router {router.format_report()}")
+    else:
+        from repro.serve import EngineSaturated
+        engine = InferenceEngine(
+            model, cfg,
+            scheduler=StaticScheduler() if args.static else None,
+            backend=backend_for(0))
+        reqs = []
+        for p, g, at in trace():
+            # bounded deque + upfront trace submission: back off like a
+            # client would — step the engine until the submit is accepted
+            while True:
+                try:
+                    reqs.append(engine.submit(p, g, arrival_step=at,
+                                              temperature=args.temperature))
+                    break
+                except EngineSaturated:
+                    engine.step()
+        engine.run()
+        print(f"[serve] scheduler={engine.scheduler.name} "
+              f"backend={engine.backend.name} "
+              f"{engine.metrics.format_report()}")
     for r in reqs[:2]:
         print(f"  req{r.id}: {np.asarray(r.generated)[:16]} ...")
 

@@ -15,23 +15,45 @@ device tree, the KV slab is donated so it updates in place, and
 run at m = n_slots through the kernels' skinny-m path (sublane padding), so
 the packed sparse/quant Pallas kernels serve the hot loop, not just prefill.
 
+Placement is a BACKEND, not an engine concern (PR 3): the engine holds pure
+request lifecycle; `serve.backend.ExecutionBackend` owns where the params /
+KV slab / loop state live and how the steps are jitted. `LocalBackend` is
+the single-device path above; `ShardedBackend` runs the SAME donated decode
+step SPMD over a (data, model) mesh — params placed by the FSDP x TP name
+rules, the slab's slot axis sharded like batch, the per-slot state vectors
+sharded by `steps.decode_state_pspecs` — with greedy outputs token-identical
+to the local path. `serve.router.ReplicaRouter` fronts N engine replicas
+(least-loaded admission off the shared `scheduler.replica_load` signal,
+spill-over on `EngineSaturated` bounded-queue rejections, waiting-queue
+rebalance, aggregated metrics).
+
 Layout:
 
   registry.py    named packed-model store keyed by (arch, KratosSpec);
                  `pack_model_params` re-points a training parameter tree at
-                 `PackedLinear` serving buffers.
+                 `PackedLinear` serving buffers; `PackedModel.pspecs(mesh)`
+                 resolves the artifact's parameter placement.
   cache_pool.py  slab-allocated KV-cache pool: one `T.make_caches` slab of
                  `n_slots` rows, per-request slot assignment / LIFO reuse;
-                 slot installs donate the slab (in-place row writes).
+                 slot installs donate the slab (in-place row writes);
+                 `mesh=` places the slab via cache_pspecs(slab=True).
   scheduler.py   request admission policy: `ContinuousScheduler` (join the
                  decode batch whenever a slot frees) vs `StaticScheduler`
-                 (drain-then-refill lock-step baseline).
+                 (drain-then-refill lock-step baseline); `replica_load` is
+                 the router's least-loaded signal.
+  backend.py     execution backends: LocalBackend (jax-default placement),
+                 ShardedBackend (mesh placement, sharded donated decode).
   engine.py      the request lifecycle + step loop: per-request prefill into
                  a slot, K-micro-step slab decode dispatches with PER-SLOT
                  cache clocks and on-device EOS/length masking, streaming
-                 token callbacks replayed from the synced block.
+                 token callbacks replayed from the synced block; bounded
+                 waiting deque (`max_waiting`) raising `EngineSaturated`.
+  router.py      `ReplicaRouter`: least-loaded/deficit admission across N
+                 engine replicas, overflow hold + drain, queue rebalance,
+                 aggregate metrics (tokens_per_router_step).
   metrics.py     tok/s, tokens/dispatch, host syncs per decoded token,
-                 p50/p99 latency, time-to-first-token, batch occupancy.
+                 p50/p99 latency, time-to-first-token, batch occupancy,
+                 rejections; `ServeMetrics.aggregate` pools replicas.
 
 Quickstart:
 
@@ -47,15 +69,21 @@ Quickstart:
     print(req.generated, eng.metrics.report())
 """
 
+from repro.serve.backend import (ExecutionBackend, LocalBackend,
+                                 ShardedBackend)
 from repro.serve.cache_pool import CachePool, PoolExhausted
-from repro.serve.engine import EngineConfig, InferenceEngine
+from repro.serve.engine import (EngineConfig, EngineSaturated,
+                                InferenceEngine)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
+from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import (ContinuousScheduler, Request,
-                                   StaticScheduler)
+                                   StaticScheduler, replica_load)
 
 __all__ = [
-    "CachePool", "PoolExhausted", "EngineConfig", "InferenceEngine",
-    "ServeMetrics", "ModelRegistry", "PackedModel", "pack_model_params",
-    "ContinuousScheduler", "StaticScheduler", "Request",
+    "CachePool", "PoolExhausted", "EngineConfig", "EngineSaturated",
+    "InferenceEngine", "ExecutionBackend", "LocalBackend", "ShardedBackend",
+    "ReplicaRouter", "ServeMetrics", "ModelRegistry", "PackedModel",
+    "pack_model_params", "ContinuousScheduler", "StaticScheduler", "Request",
+    "replica_load",
 ]

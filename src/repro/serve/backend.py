@@ -1,0 +1,279 @@
+"""Execution backends: WHERE the serving steps run is not the engine's job.
+
+The engine (serve.engine) owns request lifecycle — admission, emission,
+streaming, slot bookkeeping. Everything about device placement lives here:
+which devices hold the params / KV slab / decode state, how the compiled
+prefill / decode / install steps are jitted, and what crosses the host
+boundary. Swapping `LocalBackend` for `ShardedBackend` changes nothing
+about the engine's step loop or its outputs (greedy decode is
+token-identical), only the placement of the SPMD program underneath it.
+
+  LocalBackend     single-device (or jax-default) placement — exactly the
+                   PR-2 device-resident loop, plus the PR-1 host loop
+                   (`EngineConfig.device_loop=False`) kept as the measured
+                   baseline.
+
+  ShardedBackend   the production-mesh form: params placed by
+                   `sharding.param_shardings` (FSDP x TP where divisible;
+                   PackedLinear serving buffers replicate — the packed
+                   kernel contract stays intact while the fabric around it
+                   scales out), the KV slab placed by
+                   `sharding.cache_pspecs(..., slab=True)` (leading slot
+                   axis sharded like batch), the per-slot loop state by
+                   `steps.decode_state_pspecs`, and the decode step jitted
+                   with explicit in/out NamedShardings so DONATION STILL
+                   ALIASES: out_shardings pin the slab/state placement to
+                   the donated inputs' placement, otherwise XLA would have
+                   to copy into a re-placed output. All traces run under
+                   `sharding.use_mesh` so model-internal logical-axis
+                   constraints resolve against this backend's mesh.
+
+Contract shared by all backends (what the engine calls):
+
+  build(model, cfg)                 compile steps, allocate pool/state
+  prefill(batch, exact)             -> (logits, batch-1 caches), on device
+  write_slot(slot, caches)          install a prefilled row into the slab
+  first_token(row, rid, temp)       sample the prefill token (device loop)
+  install(slot, tok, idx, ...)      write the slot's row of the loop state
+  decode_block()                    ONE donated dispatch, K micro-steps;
+                                    returns the synced (K, B) int32 block
+  decode_host(tokens, indices)      PR-1 host-loop step (LocalBackend only)
+  describe()                        placement facts for metrics/benchmarks
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import steps as ST
+from repro.models import transformer as T
+from repro.serve.cache_pool import CachePool, quiet_donation
+
+
+class ExecutionBackend:
+    """Placement + compiled-step owner behind an InferenceEngine."""
+
+    name = "base"
+
+    def __init__(self) -> None:
+        self.pool: Optional[CachePool] = None
+        self.params: Any = None
+        self.state: Any = None                 # device-resident loop state
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def build(self, model, cfg) -> None:
+        raise NotImplementedError
+
+    # -- admission / prefill ------------------------------------------------
+
+    def prefill(self, batch: Dict[str, Any], exact: bool):
+        raise NotImplementedError
+
+    def write_slot(self, slot: int, caches) -> None:
+        self.pool.write_slot(slot, caches)
+
+    def first_token(self, row, rid: int, temperature: float) -> int:
+        raise NotImplementedError
+
+    def install(self, slot: int, token: int, index: int, temperature: float,
+                eos: int, remaining: int) -> None:
+        raise NotImplementedError
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_block(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def decode_host(self, tokens: np.ndarray, indices: np.ndarray):
+        raise NotImplementedError(
+            f"{self.name} backend has no host decode loop "
+            "(EngineConfig.device_loop=False is a LocalBackend baseline)")
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> Dict[str, Any]:
+        return {"backend": self.name, "mesh_shape": [1, 1]}
+
+
+class LocalBackend(ExecutionBackend):
+    """jax-default placement: the PR-2 loop (and the PR-1 host baseline)."""
+
+    name = "local"
+
+    def build(self, model, cfg) -> None:
+        self.model, self.cfg = model, cfg
+        self.params = model.params
+        mcfg = model.cfg
+        self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
+                              jnp.dtype(cfg.cache_dtype))
+        # device loop: prefill allocates its batch-1 caches inside the
+        # compiled step (no host template copied in); host loop (PR-1
+        # comparison baseline) keeps the template-operand form.
+        pkw = dict(cache_len=cfg.max_len,
+                   cache_dtype=jnp.dtype(cfg.cache_dtype)) \
+            if cfg.device_loop else {}
+        self._prefill_last = jax.jit(
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=True, **pkw))
+        self._prefill_full = jax.jit(
+            ST.make_prefill_step(mcfg, cfg.backend, last_only=False, **pkw))
+        if cfg.device_loop:
+            self._decode = jax.jit(
+                ST.make_decode_step(mcfg, cfg.backend,
+                                    n_steps=cfg.decode_chunk),
+                donate_argnums=(1, 2))   # slab + state update in place
+            self._install = jax.jit(ST.install_slot, donate_argnums=(0,))
+            self.state = ST.make_decode_state(cfg.n_slots, cfg.seed)
+            self._sample_first = jax.jit(T.sample_tokens)
+            self._first_key = jax.random.PRNGKey(cfg.seed)
+        else:
+            self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+
+    def prefill(self, batch, exact):
+        fn = self._prefill_last if exact else self._prefill_full
+        if self.cfg.device_loop:
+            return fn(self.params, batch)
+        return fn(self.params, batch, self.pool.single_template)
+
+    def first_token(self, row, rid, temperature):
+        key = jax.random.fold_in(self._first_key, rid)
+        temp = jnp.full((1,), temperature, jnp.float32)
+        return int(self._sample_first(row, key, temp)[0])
+
+    def install(self, slot, token, index, temperature, eos, remaining):
+        with quiet_donation():
+            self.state = self._install(self.state, slot, token, index,
+                                       temperature, eos, remaining)
+
+    def decode_block(self):
+        with quiet_donation():
+            tok_block, self.pool.caches, self.state = self._decode(
+                self.params, self.pool.caches, self.state)
+        return np.asarray(tok_block)             # the ONLY decode sync
+
+    def decode_host(self, tokens, indices):
+        logits, self.pool.caches = self._decode(
+            self.params, self.pool.caches,
+            jnp.asarray(tokens), jnp.asarray(indices))
+        return np.asarray(logits[:, -1])
+
+
+class ShardedBackend(ExecutionBackend):
+    """Mesh placement: the donated decode step runs SPMD over (data, model).
+
+    mesh: an explicit `jax.sharding.Mesh` with ('data', 'model') axes (a
+    replica submesh from `launch.mesh.replica_meshes`, or the production
+    mesh itself). mesh_shape: build a local (data, model) mesh over the
+    visible devices instead. Greedy decode is token-identical to
+    LocalBackend — the step is the same pure function; only its
+    partitioning changes.
+    """
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, *,
+                 mesh_shape: Optional[Tuple[int, int]] = None):
+        super().__init__()
+        if mesh is not None and mesh_shape is not None:
+            raise ValueError("pass mesh OR mesh_shape, not both")
+        self._mesh = mesh
+        self._mesh_shape = mesh_shape
+
+    def build(self, model, cfg) -> None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed import sharding as SH
+        from repro.launch import mesh as M
+
+        if not cfg.device_loop:
+            raise ValueError("ShardedBackend requires device_loop=True: the "
+                             "host loop pulls full-vocab logits every step, "
+                             "which is exactly the cross-boundary traffic a "
+                             "mesh placement must avoid")
+        self.model, self.cfg = model, cfg
+        mcfg = model.cfg
+        if self._mesh is None:
+            shape = self._mesh_shape or (len(jax.devices()), 1)
+            self._mesh = M.make_local_mesh(*shape)
+        mesh = self.mesh = self._mesh
+        self._ctx = lambda: SH.use_mesh(mesh)
+        with self._ctx():
+            # params: FSDP x TP name rules; PackedLinear buffers fall
+            # through the rules and replicate — the packed-kernel contract
+            # (gathered blocks, bit-packed codes) is placement-opaque.
+            self.param_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), model.pspecs(mesh))
+            self.params = jax.device_put(model.params, self.param_shardings)
+            self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
+                                  jnp.dtype(cfg.cache_dtype), mesh=mesh)
+            state_specs = ST.decode_state_pspecs(mesh, cfg.n_slots)
+            self.state_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), state_specs)
+            self.state = jax.device_put(
+                ST.make_decode_state(cfg.n_slots, cfg.seed),
+                self.state_shardings)
+            slot_spec = SH.batch_pspec(mesh, cfg.n_slots)
+            tok_sharding = NamedSharding(mesh, P(None, *tuple(slot_spec)))
+            # donation + sharding: out_shardings for (slab, state) must
+            # equal the donated inputs' shardings or the aliasing is lost
+            # (XLA would copy into the re-placed output buffer).
+            self._decode = jax.jit(
+                ST.make_decode_step(mcfg, cfg.backend,
+                                    n_steps=cfg.decode_chunk),
+                donate_argnums=(1, 2),
+                in_shardings=(self.param_shardings, self.pool.shardings,
+                              self.state_shardings),
+                out_shardings=(tok_sharding, self.pool.shardings,
+                               self.state_shardings))
+            self._install = jax.jit(ST.install_slot, donate_argnums=(0,),
+                                    out_shardings=self.state_shardings)
+            # batch-1 prefill: nothing to shard on the request axis; params
+            # are committed so XLA propagates their placement through the
+            # compiled step. Caches allocate inside the jit (donation form).
+            pkw = dict(cache_len=cfg.max_len,
+                       cache_dtype=jnp.dtype(cfg.cache_dtype))
+            self._prefill_last = jax.jit(
+                ST.make_prefill_step(mcfg, cfg.backend, last_only=True,
+                                     **pkw))
+            self._prefill_full = jax.jit(
+                ST.make_prefill_step(mcfg, cfg.backend, last_only=False,
+                                     **pkw))
+            self._sample_first = jax.jit(T.sample_tokens)
+            self._first_key = jax.random.PRNGKey(cfg.seed)
+
+    def prefill(self, batch, exact):
+        fn = self._prefill_last if exact else self._prefill_full
+        with self._ctx():
+            return fn(self.params, batch)
+
+    def write_slot(self, slot, caches):
+        with self._ctx():
+            self.pool.write_slot(slot, caches)
+
+    def first_token(self, row, rid, temperature):
+        key = jax.random.fold_in(self._first_key, rid)
+        temp = jnp.full((1,), temperature, jnp.float32)
+        with self._ctx():
+            return int(self._sample_first(row, key, temp)[0])
+
+    def install(self, slot, token, index, temperature, eos, remaining):
+        with self._ctx(), quiet_donation():
+            self.state = self._install(self.state, slot, token, index,
+                                       temperature, eos, remaining)
+
+    def decode_block(self):
+        with self._ctx(), quiet_donation():
+            tok_block, self.pool.caches, self.state = self._decode(
+                self.params, self.pool.caches, self.state)
+        return np.asarray(tok_block)             # the ONLY decode sync
+
+    def describe(self):
+        return {"backend": self.name,
+                "mesh_shape": [int(self.mesh.shape[a])
+                               for a in self.mesh.axis_names],
+                "mesh_axes": list(self.mesh.axis_names),
+                "n_devices": int(self.mesh.size)}

@@ -19,6 +19,14 @@ slot install is an in-place row write — the slab is never copied per
 admission, and the prefill's cache output buffers are recycled. On CPU, XLA
 has no donation and falls back to a copy (the warning is filtered: it is the
 expected, documented fallback, not a bug).
+
+Mesh placement: constructed with `mesh=`, the pool resolves one
+`NamedSharding` per cache leaf via `sharding.cache_pspecs(..., slab=True)`
+(leading slot axis sharded like batch, replicated fallback), places the slab
+with `device_put`, and pins the slot-install's `out_shardings` to the same
+tree so donation keeps aliasing the sharded buffers (an output that changed
+placement could not reuse the donated slab). `shardings` is exposed for the
+execution backend to reuse as the decode step's cache in/out shardings.
 """
 
 from __future__ import annotations
@@ -68,19 +76,31 @@ class CachePool:
     """Fixed-slot KV pool; slots are reused LIFO (hot rows stay hot)."""
 
     def __init__(self, cfg: T.ModelConfig, n_slots: int, max_len: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, *, mesh=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.dtype = dtype
+        self.mesh = mesh
         self.caches = T.make_caches(cfg, n_slots, max_len, dtype)
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self.shardings = None
         # donate slab AND single: the slot install updates the slab row in
         # place and recycles the prefill's output buffers (no per-admission
         # slab copy; see module docstring).
-        self._write = jax.jit(_write_tree, donate_argnums=(0, 1))
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed import sharding as SH
+            pspecs = SH.cache_pspecs(self.caches, mesh, n_slots, slab=True)
+            self.shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pspecs)
+            self.caches = jax.device_put(self.caches, self.shardings)
+            self._write = jax.jit(_write_tree, donate_argnums=(0, 1),
+                                  out_shardings=self.shardings)
+        else:
+            self._write = jax.jit(_write_tree, donate_argnums=(0, 1))
         self._single_template = None
 
     @property

@@ -1,9 +1,14 @@
-"""Continuous-batching inference engine with a device-resident decode loop.
+"""Continuous-batching inference engine: pure request lifecycle.
 
-One engine owns: a packed model (serve.registry), a fixed-slot KV slab
-(serve.cache_pool), an admission policy (serve.scheduler) and three compiled
-functions — per-request prefill (batch 1), and ONE slab decode step reused
-every step of the engine's life.
+One engine owns: a packed model (serve.registry), an admission policy
+(serve.scheduler), metrics, and an EXECUTION BACKEND (serve.backend) that
+owns everything about placement — the KV slab, the device-resident loop
+state, and the compiled prefill/decode/install steps. The engine never
+touches a compiled function or a device buffer directly: it decides WHICH
+request runs WHEN; the backend decides WHERE the step executes
+(`LocalBackend` = jax-default placement, `ShardedBackend` = SPMD over a
+(data, model) mesh with the slab's slot axis sharded like batch). Greedy
+outputs are identical across backends and across decode chunk sizes.
 
 Device-resident decode (default, `EngineConfig.device_loop=True`): between
 host synchronizations nothing leaves the device. Sampling is fused into the
@@ -42,6 +47,12 @@ Step loop (`step()`):
      order (streaming via `Request.on_token`), finished requests free their
      slots, and freed slots are admissible on the very next step.
 
+Backpressure: `EngineConfig.max_waiting` bounds the waiting deque. A submit
+over the bound raises `EngineSaturated` (counted in metrics as `rejected`)
+instead of queueing unboundedly — the rejection is the signal the replica
+router (serve.router) uses to spill traffic to a sibling engine. The
+default (None) keeps the open-ended queue for single-engine use.
+
 Prefill compile-shape policy: prompts are right-padded to power-of-two
 buckets (full-logits prefill, read at the true prompt end; the padded cache
 tail is never valid under the per-slot masks) so a mixed-length trace
@@ -54,9 +65,9 @@ Determinism contract: with temperature=0 every request's output is
 independent of what else shares the slab (batch-invariance), EXCEPT
 capacity-routed MoE archs where expert-capacity contention is inherently
 batch-dependent (true of the lock-step baseline too). Greedy outputs are
-identical between the device loop (any K) and the host loop. With
-temperature>0 the device loop samples with jax.random (the host loop keeps
-its numpy rng): one rng split per MICRO-step makes a single request's
+identical between the device loop (any K, any backend) and the host loop.
+With temperature>0 the device loop samples with jax.random (the host loop
+keeps its numpy rng): one rng split per MICRO-step makes a single request's
 sampled sequence reproducible for any K grouping of the same steps.
 """
 
@@ -66,17 +77,18 @@ import collections
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed import steps as ST
-from repro.models import transformer as T
-from repro.serve.cache_pool import CachePool, quiet_donation
+from repro.serve.backend import ExecutionBackend, LocalBackend
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import PackedModel
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    SchedulerBase)
+
+
+class EngineSaturated(RuntimeError):
+    """The bounded waiting deque is full: admission must spill or retry."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +102,7 @@ class EngineConfig:
     seed: int = 0                      # sampling rng
     device_loop: bool = True           # fused on-device sampling + state
     decode_chunk: int = 1              # K micro-steps per dispatch (device)
+    max_waiting: Optional[int] = None  # waiting-deque bound (None = open)
 
 
 class InferenceEngine:
@@ -97,41 +110,26 @@ class InferenceEngine:
 
     def __init__(self, model: PackedModel, cfg: EngineConfig = EngineConfig(),
                  scheduler: Optional[SchedulerBase] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 backend: Optional[ExecutionBackend] = None):
         if cfg.decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got "
                              f"{cfg.decode_chunk}")
         if cfg.decode_chunk > 1 and not cfg.device_loop:
             raise ValueError("decode_chunk > 1 requires device_loop=True "
                              "(the host loop samples every micro-step)")
+        if cfg.max_waiting is not None and cfg.max_waiting < 0:
+            raise ValueError(f"max_waiting must be >= 0 or None, got "
+                             f"{cfg.max_waiting}")
         self.model = model
         self.cfg = cfg
         mcfg = model.cfg
         self.scheduler = scheduler or ContinuousScheduler()
         self.metrics = metrics or ServeMetrics()
-        self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
-                              jnp.dtype(cfg.cache_dtype))
-        # device loop: prefill allocates its batch-1 caches inside the
-        # compiled step (no host template copied in); host loop (PR-1
-        # comparison baseline) keeps the template-operand form.
-        pkw = dict(cache_len=cfg.max_len,
-                   cache_dtype=jnp.dtype(cfg.cache_dtype)) \
-            if cfg.device_loop else {}
-        self._prefill_last = jax.jit(
-            ST.make_prefill_step(mcfg, cfg.backend, last_only=True, **pkw))
-        self._prefill_full = jax.jit(
-            ST.make_prefill_step(mcfg, cfg.backend, last_only=False, **pkw))
-        if cfg.device_loop:
-            self._decode = jax.jit(
-                ST.make_decode_step(mcfg, cfg.backend,
-                                    n_steps=cfg.decode_chunk),
-                donate_argnums=(1, 2))   # slab + state update in place
-            self._install = jax.jit(ST.install_slot, donate_argnums=(0,))
-            self._state = ST.make_decode_state(cfg.n_slots, cfg.seed)
-            self._sample_first = jax.jit(T.sample_tokens)
-            self._first_key = jax.random.PRNGKey(cfg.seed)
-        else:
-            self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+        self.backend = backend or LocalBackend()
+        self.backend.build(model, cfg)
+        self.pool = self.backend.pool
+        if not cfg.device_loop:
             self._tokens = np.zeros((cfg.n_slots, 1), np.int32)
             self._indices = np.zeros((cfg.n_slots,), np.int32)
         self._slots: List[Optional[Request]] = [None] * cfg.n_slots
@@ -162,23 +160,51 @@ class InferenceEngine:
                extras: Optional[Dict[str, Any]] = None,
                on_token=None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        need = self.model.cfg.n_img_tokens + len(prompt) + max_new_tokens
-        if self._len_bounded and need > self.cfg.max_len:
-            raise ValueError(
-                f"request needs {need} cache positions "
-                f"(img + prompt {len(prompt)} + gen {max_new_tokens}) but "
-                f"max_len={self.cfg.max_len}")
-        r = Request(id=self._next_id, prompt=prompt,
+        r = Request(id=-1, prompt=prompt,
                     max_new_tokens=max_new_tokens, arrival_step=arrival_step,
                     temperature=temperature, eos_id=eos_id, extras=extras,
                     on_token=on_token)
+        return self.adopt(r)
+
+    def adopt(self, r: Request) -> Request:
+        """Validate + enqueue a Request object (fresh submit, or a waiting
+        request moved here by the replica router's rebalancer). Raises
+        EngineSaturated when the bounded waiting deque is full — counted as
+        a rejection; the router spills the request to a sibling replica."""
+        if r.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = self.model.cfg.n_img_tokens + len(r.prompt) + r.max_new_tokens
+        if self._len_bounded and need > self.cfg.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions "
+                f"(img + prompt {len(r.prompt)} + gen {r.max_new_tokens}) "
+                f"but max_len={self.cfg.max_len}")
+        if self.cfg.max_waiting is not None \
+                and len(self._waiting) >= self.cfg.max_waiting:
+            self.metrics.on_reject()
+            raise EngineSaturated(
+                f"waiting deque at max_waiting={self.cfg.max_waiting}")
+        r.id = self._next_id
         self._next_id += 1
         self.requests[r.id] = r
         self._waiting.append(r)
-        self.metrics.on_submit(r.id, arrival_step, len(prompt))
+        self.metrics.on_submit(r.id, r.arrival_step, len(r.prompt))
         return r
+
+    def steal_waiting(self, n: int) -> List[Request]:
+        """Pop up to `n` waiting (never started) requests off the TAIL of
+        the deque — the most recently queued, i.e. the ones that would wait
+        longest here — de-registering them from this engine. The router
+        re-`adopt`s them into an underloaded replica; the Request objects
+        (the caller's handles) survive the move."""
+        out: List[Request] = []
+        while self._waiting and len(out) < n:
+            r = self._waiting.pop()
+            del self.requests[r.id]
+            self.metrics.records.pop(r.id, None)
+            r.id = -1
+            out.append(r)
+        return out[::-1]                # preserve relative arrival order
 
     @property
     def n_active(self) -> int:
@@ -264,31 +290,21 @@ class InferenceEngine:
         if r.extras:
             batch.update({k: jnp.asarray(v) for k, v in r.extras.items()})
         n_img = self.model.cfg.n_img_tokens
-        dev = self.cfg.device_loop
-        prefill = self._prefill_last if sp == s0 else self._prefill_full
-        if dev:
-            logits, caches = prefill(self.model.params, batch)
-        else:
-            logits, caches = prefill(self.model.params, batch,
-                                     self.pool.single_template)
+        logits, caches = self.backend.prefill(batch, exact=sp == s0)
         # (1, vocab) on device: the true prompt-end column
         row = logits[:, -1] if sp == s0 else logits[:, n_img + s0 - 1]
-        self.pool.write_slot(slot, caches)
+        self.backend.write_slot(slot, caches)
         r.state, r.slot = "running", slot
         r.index = n_img + s0
         self._slots[slot] = r
         self.metrics.on_start(r.id, self.step_count)
-        if dev:
-            key = jax.random.fold_in(self._first_key, r.id)
-            temp = jnp.full((1,), r.temperature, jnp.float32)
-            tok = int(self._sample_first(row, key, temp)[0])
+        if self.cfg.device_loop:
+            tok = self.backend.first_token(row, r.id, r.temperature)
             self.metrics.on_host_sync("prefill")     # the one int32 pulled
             eos = -1 if r.eos_id is None else int(r.eos_id)
             rem = 0 if (r.eos_id is not None and tok == r.eos_id) \
                 else r.max_new_tokens - 1
-            with quiet_donation():
-                self._state = self._install(
-                    self._state, slot, tok, r.index, r.temperature, eos, rem)
+            self.backend.install(slot, tok, r.index, r.temperature, eos, rem)
         else:
             tok = self._sample_host(np.asarray(row[0]), r)
             self.metrics.on_host_sync("prefill")
@@ -302,10 +318,7 @@ class InferenceEngine:
         k = self.cfg.decode_chunk
         self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots,
                                     micro_steps=k)
-        with quiet_donation():
-            tok_block, self.pool.caches, self._state = self._decode(
-                self.model.params, self.pool.caches, self._state)
-        block = np.asarray(tok_block)                # the ONLY decode sync
+        block = self.backend.decode_block()
         self.metrics.on_host_sync("decode")
         for j in range(k):
             step = self.step_count + j
@@ -322,10 +335,7 @@ class InferenceEngine:
         index vectors re-uploaded every step. Kept as the measured baseline
         (serve_bench 'host' mode) and as the numpy-rng sampling reference."""
         self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots)
-        logits, self.pool.caches = self._decode(
-            self.model.params, self.pool.caches,
-            jnp.asarray(self._tokens), jnp.asarray(self._indices))
-        rows = np.asarray(logits[:, -1])
+        rows = self.backend.decode_host(self._tokens, self._indices)
         # logits pull + token and index uploads: 3 crossings per step
         self.metrics.on_host_sync("decode", 3)
         for slot, r in enumerate(self._slots):

@@ -60,6 +60,7 @@ class ServeMetrics:
         self.idle_steps = 0
         self.prefills = 0
         self.tokens_generated = 0
+        self.rejected = 0                     # bounded-deque submit rejections
         self.host_syncs: Dict[str, int] = {"decode": 0, "prefill": 0}
         self.occupancy: List[float] = []      # active / n_slots per dispatch
         self.records: Dict[int, RequestRecord] = {}
@@ -98,6 +99,11 @@ class ServeMetrics:
     def on_idle_step(self) -> None:
         self.idle_steps += 1
 
+    def on_reject(self) -> None:
+        """A submit bounced off the bounded waiting deque
+        (EngineConfig.max_waiting) — the router's spill-over signal."""
+        self.rejected += 1
+
     def on_host_sync(self, kind: str, n: int = 1) -> None:
         """Record `n` host<->device crossings of the given kind
         ('decode' | 'prefill')."""
@@ -116,6 +122,7 @@ class ServeMetrics:
         return {
             "requests_completed": float(len(done)),
             "tokens_generated": float(self.tokens_generated),
+            "rejected": float(self.rejected),
             "decode_steps": float(self.decode_steps),
             "micro_steps": float(self.micro_steps),
             "idle_steps": float(self.idle_steps),
@@ -129,6 +136,48 @@ class ServeMetrics:
             / max(1, self.decode_steps),
             "mean_occupancy": (sum(self.occupancy) / len(self.occupancy))
             if self.occupancy else 0.0,
+            "latency_steps_p50": percentile(lat_steps, 50),
+            "latency_steps_p99": percentile(lat_steps, 99),
+            "latency_s_p50": percentile(lat_wall, 50),
+            "latency_s_p99": percentile(lat_wall, 99),
+            "ttft_steps_p50": percentile(ttft_steps, 50),
+            "ttft_steps_p99": percentile(ttft_steps, 99),
+        }
+
+    @staticmethod
+    def aggregate(metrics_list: List["ServeMetrics"]) -> Dict[str, float]:
+        """Cross-replica aggregate (serve.router): counters SUM, latency
+        percentiles pool the union of per-request records (not a mean of
+        per-replica percentiles — p99 of a fleet is a fleet-level quantile),
+        occupancy is dispatch-weighted. Step-clock rates are left to the
+        router, which owns the shared clock (tokens_per_router_step)."""
+        done = [r for m in metrics_list for r in m.records.values()
+                if r.finish_step >= 0]
+        lat_steps = [float(r.finish_step - r.arrival_step) for r in done]
+        ttft_steps = [float(r.first_token_step - r.arrival_step)
+                      for r in done if r.first_token_step >= 0]
+        lat_wall = [r.finish_time - r.submit_time for r in done]
+        dispatches = sum(m.decode_steps for m in metrics_list)
+        occ_num = sum(sum(m.occupancy) for m in metrics_list)
+        occ_den = sum(len(m.occupancy) for m in metrics_list)
+        tokens = sum(m.tokens_generated for m in metrics_list)
+        decoded = max(0, tokens - sum(m.prefills for m in metrics_list))
+        syncs_d = sum(m.host_syncs.get("decode", 0) for m in metrics_list)
+        elapsed = max(max((time.time() - m.t0 for m in metrics_list),
+                          default=0.0), 1e-9)
+        return {
+            "n_replicas": float(len(metrics_list)),
+            "requests_completed": float(len(done)),
+            "tokens_generated": float(tokens),
+            "rejected": float(sum(m.rejected for m in metrics_list)),
+            "decode_steps": float(dispatches),
+            "micro_steps": float(sum(m.micro_steps for m in metrics_list)),
+            "idle_steps": float(sum(m.idle_steps for m in metrics_list)),
+            "host_syncs_decode": float(syncs_d),
+            "host_syncs_per_token": syncs_d / max(1, decoded),
+            "wall_seconds": elapsed,
+            "tok_per_s": tokens / elapsed,
+            "mean_occupancy": occ_num / occ_den if occ_den else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
             "latency_steps_p99": percentile(lat_steps, 99),
             "latency_s_p50": percentile(lat_wall, 50),

@@ -90,6 +90,16 @@ class PackedModel:
     def compression(self) -> float:
         return self.dense_bytes / max(1, self.packed_bytes)
 
+    def pspecs(self, mesh) -> Any:
+        """Parameter PartitionSpec tree for serving this artifact on `mesh`
+        (sharding.param_pspecs): name-rule FSDP x TP where shapes divide;
+        PackedLinear buffers fall through the name rules and REPLICATE —
+        the packed-kernel contract (gathered sparse blocks, bit-packed
+        codes) never crosses a shard boundary. Used by ShardedBackend and
+        the `launch.serve --dry-run` sharding printer."""
+        from repro.distributed import sharding as SH
+        return SH.param_pspecs(self.params, mesh)
+
 
 class ModelRegistry:
     """Named store of packed models, keyed by (arch, KratosSpec).

@@ -1,0 +1,224 @@
+"""Replica router: one front-end over N engine replicas.
+
+A replica is a whole `InferenceEngine` — its own KV slab, decode state and
+compiled steps, on whatever placement its backend chose (`LocalBackend`
+engines share the jax default device; `ShardedBackend` engines typically
+sit one per data-parallel submesh, `launch.mesh.replica_meshes`). The
+router owns nothing that executes: it decides which replica a request
+joins, steps the replicas in lockstep rounds, and aggregates their metrics.
+
+Admission (least-loaded / deficit): `submit` scores every replica with
+`scheduler.replica_load` (active + waiting - free — the same signals the
+per-engine schedulers consume) and tries them in ascending-load order, with
+a rotating tiebreak so equal-load replicas share arrivals round-robin
+instead of piling onto index 0. A replica whose bounded waiting deque
+(`EngineConfig.max_waiting`) is full raises `EngineSaturated`; the router
+counts the spill and tries the next replica. When EVERY replica rejects,
+the request parks in the router's overflow deque and drains into the first
+replica with queue headroom at the next `step()` — backpressure composes:
+each engine's deque is bounded, the router absorbs the burst.
+
+Rebalance: queues skew when request lengths do (a replica that admitted
+three long generations serves its queue slower than its siblings). Each
+`step()`, any replica whose waiting deque exceeds what it can admit soon
+(waiting > free slots) donates tail-of-queue requests —
+`engine.steal_waiting`, never-started requests only; running slots are
+pinned to their slab — to replicas with immediate headroom
+(`engine.adopt`). The Request objects the caller holds survive the move.
+
+The router's clock: one `step()` = one decode dispatch round across all
+replicas (replicas with no work skip their dispatch rather than burn an
+idle step). `report()` adds `tokens_per_router_step` — aggregate tokens
+over lockstep rounds, directly comparable to a single engine's
+tokens_per_step on the same trace; N saturated replicas approach N x.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import EngineConfig, EngineSaturated, InferenceEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, replica_load
+
+
+class ReplicaRouter:
+    """Least-loaded request routing + drain/rebalance over engine replicas."""
+
+    def __init__(self, replicas: Sequence[InferenceEngine], *,
+                 hold_overflow: bool = True):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        self.replicas = list(replicas)
+        self.hold_overflow = hold_overflow
+        self._overflow: collections.deque = collections.deque()
+        self._rr = 0                      # rotating tiebreak for equal loads
+        self.step_count = 0
+        self.spills = 0                   # submits bounced to a sibling
+        self.overflowed = 0               # submits parked in the router deque
+        self.rebalanced = 0               # waiting requests moved mid-run
+        self.requests: List[Request] = []
+
+    @classmethod
+    def build(cls, model, cfg: EngineConfig, n_replicas: int, *,
+              backend_factory=None, scheduler_factory=None,
+              **kwargs) -> "ReplicaRouter":
+        """N identical replicas of (model, cfg). backend_factory(i) returns
+        the i-th replica's ExecutionBackend (None = LocalBackend each);
+        scheduler_factory(i) likewise for admission policy."""
+        replicas = [
+            InferenceEngine(
+                model, cfg,
+                scheduler=scheduler_factory(i) if scheduler_factory else None,
+                backend=backend_factory(i) if backend_factory else None)
+            for i in range(n_replicas)]
+        return cls(replicas, **kwargs)
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt, max_new_tokens: int, **kw) -> Request:
+        r = Request(id=-1, prompt=np.asarray(prompt, np.int32).reshape(-1),
+                    max_new_tokens=max_new_tokens,
+                    arrival_step=kw.pop("arrival_step", 0),
+                    temperature=kw.pop("temperature", 0.0),
+                    eos_id=kw.pop("eos_id", None),
+                    extras=kw.pop("extras", None),
+                    on_token=kw.pop("on_token", None))
+        if kw:
+            raise TypeError(f"unknown submit kwargs: {sorted(kw)}")
+        self.requests.append(r)
+        placed = self._place(r)
+        if placed:
+            return r
+        if not self.hold_overflow:
+            self.requests.pop()
+            raise EngineSaturated("all replicas rejected the request")
+        self._overflow.append(r)
+        self.overflowed += 1
+        return r
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._overflow) + sum(e.n_waiting for e in self.replicas)
+
+    @property
+    def n_active(self) -> int:
+        return sum(e.pool.n_active for e in self.replicas)
+
+    def step(self) -> None:
+        """One lockstep round: drain overflow, rebalance skewed queues,
+        then one engine step per replica. Idle replicas step too (a free
+        idle tick, no dispatch): freezing an idle replica's local clock
+        would make a request adopted later — whose arrival_step is on the
+        trace-global clock — wait out the frozen gap all over again, and
+        would skew its latency record against replicas that kept ticking."""
+        self.step_count += 1
+        self._drain_overflow()
+        self._rebalance()
+        for eng in self.replicas:
+            eng.step()
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        limit = max_steps if max_steps is not None else \
+            10 * sum(r.max_new_tokens + 2 for r in self.requests) \
+            + max([r.arrival_step for r in self.requests], default=0)
+        while self.n_waiting or self.n_active:
+            if limit <= 0:
+                raise RuntimeError("router did not drain within step limit")
+            self.step()
+            limit -= 1
+        return {i: list(r.generated) for i, r in enumerate(self.requests)}
+
+    def report(self) -> Dict[str, Any]:
+        rep = ServeMetrics.aggregate([e.metrics for e in self.replicas])
+        rep.update({
+            "router_steps": float(self.step_count),
+            "tokens_per_router_step": rep["tokens_generated"]
+            / max(1, self.step_count),
+            "spills": float(self.spills),
+            "overflowed": float(self.overflowed),
+            "rebalanced": float(self.rebalanced),
+        })
+        return rep
+
+    def format_report(self) -> str:
+        r = self.report()
+        return (f"{int(r['n_replicas'])} replicas | "
+                f"{int(r['requests_completed'])} reqs, "
+                f"{int(r['tokens_generated'])} toks"
+                f" | {r['tokens_per_router_step']:.2f} tok/router-step, "
+                f"{r['tok_per_s']:.1f} tok/s wall"
+                f" | occupancy {r['mean_occupancy']:.2f}"
+                f" | spills {int(r['spills'])}, "
+                f"rebalanced {int(r['rebalanced'])}, "
+                f"rejected {int(r['rejected'])}")
+
+    # ------------------------------------------------------------- internals
+
+    def _order(self) -> List[int]:
+        n = len(self.replicas)
+        loads = [replica_load(e.pool.n_active, e.pool.n_free, e.n_waiting)
+                 for e in self.replicas]
+        order = sorted(range(n), key=lambda i: (loads[i], (i - self._rr) % n))
+        self._rr = (self._rr + 1) % n
+        return order
+
+    def _place(self, r: Request) -> bool:
+        for i in self._order():
+            try:
+                self.replicas[i].adopt(r)
+                return True
+            except EngineSaturated:
+                self.spills += 1
+        return False
+
+    def _drain_overflow(self) -> None:
+        """Move parked requests into replicas WITH QUEUE HEADROOM. Unlike
+        the fresh-submit path this never knocks on a full deque: a retry
+        round against a still-saturated fleet must not re-increment spills
+        or the engines' rejected counters (those count submits that
+        bounced, not rounds the fleet stayed busy)."""
+        while self._overflow:
+            placed = False
+            for i in self._order():
+                eng = self.replicas[i]
+                if eng.cfg.max_waiting is not None \
+                        and eng.n_waiting >= eng.cfg.max_waiting:
+                    continue
+                eng.adopt(self._overflow[0])   # headroom => cannot saturate
+                placed = True
+                break
+            if not placed:
+                return                   # still saturated; retry next round
+            self._overflow.popleft()
+
+    def _rebalance(self) -> None:
+        """Move tail-of-queue waiting requests from replicas that cannot
+        admit them soon (waiting > free slots) to replicas that can."""
+        for src in self.replicas:
+            excess = src.n_waiting - src.pool.n_free
+            if excess <= 0:
+                continue
+            for dst in sorted(self.replicas,
+                              key=lambda e: replica_load(
+                                  e.pool.n_active, e.pool.n_free,
+                                  e.n_waiting)):
+                if dst is src or excess <= 0:
+                    continue
+                room = dst.pool.n_free - dst.n_waiting
+                if dst.cfg.max_waiting is not None:
+                    room = min(room, dst.cfg.max_waiting - dst.n_waiting)
+                if room <= 0:
+                    continue
+                moved = src.steal_waiting(min(room, excess))
+                for r in moved:
+                    try:
+                        dst.adopt(r)     # room > 0 => cannot saturate ...
+                    except (EngineSaturated, ValueError):
+                        src.adopt(r)     # ... but heterogeneous replica
+                        continue         # configs may still refuse: return
+                    excess -= 1          # the request instead of losing it
+                    self.rebalanced += 1

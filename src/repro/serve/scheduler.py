@@ -62,6 +62,16 @@ class Request:
         return self.state == "done"
 
 
+def replica_load(n_active: int, n_free: int, n_waiting: int) -> int:
+    """The admission-side load signal shared by the schedulers and the
+    replica router (serve.router): committed work minus immediately
+    available capacity. A replica with free slots and an empty queue scores
+    negative (it can admit NOW); one with a backed-up deque scores by its
+    queue depth. The router picks the minimum — least-loaded/deficit
+    admission from the same quantities `admissible()` already consumes."""
+    return n_active + n_waiting - n_free
+
+
 class SchedulerBase:
     name = "base"
 
