@@ -28,6 +28,24 @@ decoded token alongside. `--out` writes the records as JSON
 ({arch, spec, mode, tokens_per_step, wall_tok_s, host_syncs_per_token, ...})
 so every future PR has a perf baseline to diff against.
 
+Speculative mode (PR 4): `--speculate K` switches the benchmark to the
+self-draft comparison — ONE trace replayed through the PLAIN device loop
+(decode_chunk=1: `speculate` replaces the chunk knob, so the un-chunked
+loop is the apples-to-apples baseline) and through the speculative engine
+(speculate=K) with the draft described by
+`--draft-bits/--draft-sparsity/--draft-keep-layers`. The GATE is
+deterministic: speculative >= 1.2x TOKENS PER DISPATCH vs the plain loop
+(integers, immune to CI timing noise), plus greedy token-identity. Both
+engines are additionally WARMED on a full replay and timed on a second
+one, and the wall tokens/sec ratio is REPORTED ungated — on the CPU
+reference backend the draft re-pack executes at full-precision cost (the
+packed Pallas kernels that realize its FLOP discount engage off-ref).
+Records carry acceptance rate, rollback counts and the draft/verify FLOP
+ratio.
+
+Provenance (PR 4): every JSON record is stamped with the git commit, jax
+version and rng seed, so BENCH trajectories are comparable across runs.
+
 Mesh / router modes (PR 3): `--mesh data,model` adds a 'sharded' mode —
 the same trace through `serve.ShardedBackend` on a local mesh of that
 shape, gated on emitting exactly the tokens the local device loop emits
@@ -49,7 +67,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
+import time
 
 import jax
 import numpy as np
@@ -58,8 +78,21 @@ from benchmarks.common import CSV
 from repro.core import kratos as kr
 from repro.distributed import steps as ST
 from repro.kernels import pallas_compat as PC
-from repro.serve import (EngineConfig, InferenceEngine, ModelRegistry,
-                         StaticScheduler)
+from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
+                         ModelRegistry, StaticScheduler)
+
+
+def provenance(seed: int) -> dict:
+    """Stamped into EVERY json record: what produced this number."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10).stdout.strip()
+    except Exception:
+        commit = ""
+    return {"git_commit": commit or os.environ.get("GITHUB_SHA", "unknown"),
+            "jax_version": jax.__version__, "rng_seed": seed}
 
 SPECS = (
     ("dense", kr.KratosSpec()),
@@ -171,6 +204,106 @@ def skinny_decode_trace(model, n_slots: int, max_len: int,
             "skinny_kernels": sorted({e[0] for e in events})}
 
 
+def timed_throughput(model, trace, n_slots: int, max_len: int, **cfg_kw):
+    """Steady-state decode tokens/sec: the trace is replayed once to warm
+    (jit compiles for prefill buckets + the decode/spec step land here),
+    then replayed again on the SAME engine and timed. Returns (tok/s,
+    engine) — the engine's metrics span both passes; wall timing spans only
+    the second."""
+    eng = InferenceEngine(model, EngineConfig(n_slots=n_slots,
+                                              max_len=max_len, **cfg_kw))
+
+    def replay(offset):
+        for arrival, prompt, gen in trace:
+            eng.submit(prompt, gen, arrival_step=arrival + offset)
+        eng.run()
+
+    replay(0)
+    tok0 = eng.metrics.tokens_generated
+    t0 = time.time()
+    replay(eng.step_count + 1)
+    dt = max(time.time() - t0, 1e-9)
+    return (eng.metrics.tokens_generated - tok0) / dt, eng
+
+
+def run_speculative(arch: str, n_requests: int, n_slots: int, seed: int,
+                    speculate: int, draft: DraftSpec, out: str = "",
+                    gate: float = 1.2) -> bool:
+    """Plain device loop vs speculative decode (speculate=K) with a
+    self-draft, one trace, warm-measured.
+
+    The PLAIN side runs decode_chunk=1: `speculate` REPLACES the chunk knob
+    (the engine refuses both), so the apples-to-apples question is "tokens
+    committed per decode dispatch / host sync" against the un-chunked
+    device loop. That ratio is the GATE (>= `gate`x at K=4 in CI) because
+    it is deterministic — tokens and dispatches are integers, immune to CI
+    timing noise — and it is the economy speculation buys on every
+    substrate. Wall tokens/sec for both engines is reported alongside,
+    ungated: on the CPU *reference* backend the draft re-pack executes at
+    full-precision cost (per-step dequantization; the packed Pallas
+    kernels that realize the draft's FLOP discount engage off-ref), so
+    wall parity there is substrate-limited, not a property of the design.
+    Greedy token-identity between the two engines is also gated — the
+    speedup must not change a single token."""
+    registry = ModelRegistry()
+    model = registry.load(arch, draft_spec=draft)
+    prompt_range, gen_range = (4, 16), (12, 24)
+    trace = poisson_trace(n_requests, 1.5, prompt_range, gen_range,
+                          model.cfg.vocab, seed)
+    max_len = model.cfg.n_img_tokens + prompt_range[1] + gen_range[1] + 8
+    prov = provenance(seed)
+
+    plain_tps, plain_eng = timed_throughput(model, trace, n_slots, max_len,
+                                            decode_chunk=1)
+    spec_tps, spec_eng = timed_throughput(model, trace, n_slots, max_len,
+                                          speculate=speculate)
+    same = all(
+        plain_eng.requests[i].generated == spec_eng.requests[i].generated
+        for i in plain_eng.requests)
+    rep = spec_eng.metrics.report()
+    rep_p = plain_eng.metrics.report()
+    ratio = rep["tokens_per_dispatch"] / max(1e-9,
+                                             rep_p["tokens_per_dispatch"])
+    wall_ratio = spec_tps / max(1e-9, plain_tps)
+    ok = same and ratio >= gate
+    print(f"# speculative[{draft.tag}] K={speculate}: "
+          f"{rep['tokens_per_dispatch']:.2f} tok/dispatch vs plain loop "
+          f"{rep_p['tokens_per_dispatch']:.2f} ({ratio:.2f}x, gate >= "
+          f"{gate:.2f}x) [{'PASS' if ratio >= gate else 'FAIL'}] | "
+          f"token-identical [{'PASS' if same else 'FAIL'}] | accept "
+          f"{rep['acceptance_rate']:.3f}, rolled back "
+          f"{int(rep['draft_rolled_back'])}, draft/verify flops "
+          f"{rep['draft_verify_flop_ratio']:.2f} | wall {spec_tps:.1f} vs "
+          f"{plain_tps:.1f} tok/s ({wall_ratio:.2f}x, reported not gated: "
+          f"ref backend runs the draft at full-precision cost)")
+    records = [{
+        "arch": arch, "mode": mode, "speculate": speculate,
+        "draft_spec": draft.tag if mode == "speculative" else None,
+        "mesh_shape": [1, 1], "n_replicas": 1, **prov,
+        "wall_tok_s": tps,
+        "tokens_per_dispatch": r["tokens_per_dispatch"],
+        "acceptance_rate": r["acceptance_rate"],
+        "draft_rolled_back": r["draft_rolled_back"],
+        "draft_verify_flop_ratio": r["draft_verify_flop_ratio"],
+        "spec_vs_plain_dispatch": ratio,
+        "spec_vs_plain_wall": wall_ratio,
+    } for mode, tps, r in (("device", plain_tps, rep_p),
+                           ("speculative", spec_tps, rep))]
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "n_slots": n_slots,
+                       "speculate": speculate, "draft_spec": draft.tag,
+                       "gate": gate, "spec_vs_plain_dispatch": ratio,
+                       "spec_vs_plain_wall": wall_ratio, **prov,
+                       "records": records}, f, indent=2)
+        print(f"# wrote {out} ({len(records)} records)")
+    print(f"# serve_bench --speculate: {'PASS' if ok else 'FAIL'} — "
+          f"speculative >= {gate:g}x tokens/dispatch vs plain device loop, "
+          "greedy token-identical")
+    return ok
+
+
 def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
         n_slots: int = 4, mean_interarrival: float = 2.0,
         prompt_range=(4, 24), gen_range=(8, 24), seed: int = 0,
@@ -186,11 +319,12 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
     ok = True
     records = []
     mesh_list = list(mesh_shape) if mesh_shape else [1, 1]
+    prov = provenance(seed)
 
     def record(spec_name, mode_name, rep, k, **extra):
         records.append({
             "arch": arch, "spec": spec_name, "mode": mode_name,
-            "decode_chunk": k,
+            "decode_chunk": k, **prov,
             # per-record placement: only sharded/router modes ran on the
             # mesh; host/device/static are the local-placement baselines
             "mesh_shape": mesh_list if mode_name in ("sharded", "router")
@@ -290,7 +424,7 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
             # the mesh — same placement rule as record()
             records.append({"arch": arch, "spec": spec_name,
                             "mode": "skinny_trace", "mesh_shape": [1, 1],
-                            "n_replicas": 1, **skinny})
+                            "n_replicas": 1, **prov, **skinny})
             win_skinny = (skinny["skinny_m_dispatches"] > 0
                           and skinny["apply_packed_hits"] > 0)
             ok = ok and win_skinny
@@ -331,7 +465,7 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
             json.dump({"arch": arch, "n_slots": n_slots,
                        "decode_chunk": decode_chunk, "smoke": smoke,
                        "mesh_shape": mesh_list, "n_replicas": n_replicas,
-                       "records": records}, f, indent=2)
+                       **prov, "records": records}, f, indent=2)
         print(f"# wrote {out} ({len(records)} records)")
     print(f"# serve_bench: {'PASS' if ok else 'FAIL'} — device loop >= host "
           "loop >= static, 1 decode sync per K-step dispatch, packed + "
@@ -345,7 +479,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: dense + sparse0.5-w8, small trace, <60s")
-    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--arch", default=None,
+                    help="default: h2o-danube-1.8b (speculative mode: "
+                         "nemotron-4-340b — full attention, no circular "
+                         "window cache)")
     ap.add_argument("--requests", type=int, default=0)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
@@ -358,21 +495,38 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=1,
                     help="router comparison: N engine replicas vs a single "
                          "engine on one dense trace (gate: >= 1.5x)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative mode: plain device loop (chunk=1) vs "
+                         "self-draft speculation (speculate=K), gated >= "
+                         "1.2x tokens/DISPATCH + greedy token-identity; "
+                         "wall tok/s reported ungated; skips regular modes")
+    ap.add_argument("--draft-bits", type=int, default=8,
+                    help="draft weight bits (0 = native)")
+    ap.add_argument("--draft-sparsity", type=float, default=0.0)
+    ap.add_argument("--draft-keep-layers", type=int, default=0,
+                    help="truncate the draft to its first N layers (0=all)")
     ap.add_argument("--out", default="",
                     help="write result records to this JSON path")
     a = ap.parse_args()
+    if a.speculate:
+        draft = DraftSpec.from_args(a.draft_bits, a.draft_sparsity,
+                                    a.draft_keep_layers)
+        ok = run_speculative(a.arch or "nemotron-4-340b",
+                             a.requests or 10, a.slots, a.seed,
+                             a.speculate, draft, out=a.out)
+        sys.exit(0 if ok else 1)
     mesh_shape = None
     if a.mesh:
         from repro.launch.mesh import parse_mesh_arg
         mesh_shape = parse_mesh_arg(a.mesh)
     if a.smoke:
-        ok = run(a.arch, n_requests=a.requests or 8, n_slots=a.slots,
+        ok = run(a.arch or "h2o-danube-1.8b", n_requests=a.requests or 8, n_slots=a.slots,
                  prompt_range=(4, 16), gen_range=(8, 16),
                  mean_interarrival=1.5, seed=a.seed, smoke=True,
                  decode_chunk=a.decode_chunk, n_replicas=a.replicas,
                  mesh_shape=mesh_shape, out=a.out)
     else:
-        ok = run(a.arch, n_requests=a.requests or 16, n_slots=a.slots,
+        ok = run(a.arch or "h2o-danube-1.8b", n_requests=a.requests or 16, n_slots=a.slots,
                  seed=a.seed, decode_chunk=a.decode_chunk,
                  n_replicas=a.replicas, mesh_shape=mesh_shape, out=a.out)
     sys.exit(0 if ok else 1)

@@ -76,6 +76,17 @@ class KratosSpec:
 DENSE = KratosSpec()
 
 
+def spec_tag(sparsity: float, bits: Optional[int], act_bits: Optional[int],
+             impl: str) -> str:
+    """Artifact-tag fragment shared by serve.registry._spec_tag and
+    serve.speculative.DraftSpec.tag — ONE formatter, so the registry's
+    no-name-collision guarantee can't drift between the two."""
+    b = "bf16" if bits is None else f"w{bits}"
+    if act_bits:
+        b += f"a{act_bits}"
+    return f"s{sparsity:g}-{b}-{impl}"
+
+
 @functools.lru_cache(maxsize=4096)
 def _plan_cached(n_in: int, n_out: int, bk: int, bn: int,
                  sparsity_milli: int, seed: int) -> sp.BlockSparsePlan:

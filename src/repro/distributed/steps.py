@@ -225,6 +225,7 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
                 "eos": st["eos"],
                 "remaining": remaining,
                 "active": active & (remaining > 0) & ~hit_eos,
+                "spec_limit": st["spec_limit"],
             }
             return (caches, st), tok
 
@@ -240,7 +241,11 @@ def make_decode_state(n_slots: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
 
     tokens/index: the (B,) feedback loop that never leaves the device;
     temperature/eos/remaining/active: per-slot sampling + lifecycle vectors,
-    written only at admission; key: the threaded jax.random key.
+    written only at admission; key: the threaded jax.random key; spec_limit:
+    the per-request speculation cap (max draft tokens acceptable per
+    dispatch, `Request.speculate`) — 0 opts the slot out of drafting, in
+    which case the verify step degenerates to exactly one plain target
+    micro-step for that slot.
     """
     return {
         "tokens": jnp.zeros((n_slots,), jnp.int32),
@@ -250,6 +255,7 @@ def make_decode_state(n_slots: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
         "eos": jnp.full((n_slots,), -1, jnp.int32),
         "remaining": jnp.zeros((n_slots,), jnp.int32),
         "active": jnp.zeros((n_slots,), bool),
+        "spec_limit": jnp.zeros((n_slots,), jnp.int32),
     }
 
 
@@ -263,18 +269,20 @@ def decode_state_pspecs(mesh, n_slots: int) -> Dict[str, PartitionSpec]:
     micro-step's split must agree on every device."""
     slot_spec = batch_pspec(mesh, n_slots)
     spec = {k: slot_spec for k in ("tokens", "index", "temperature", "eos",
-                                   "remaining", "active")}
+                                   "remaining", "active", "spec_limit")}
     spec["key"] = PartitionSpec(None)
     return spec
 
 
 def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
-                 temperature, eos, remaining) -> Dict[str, jnp.ndarray]:
+                 temperature, eos, remaining,
+                 spec_limit=0) -> Dict[str, jnp.ndarray]:
     """Write one admitted request's row into the device decode state.
 
     Pure (jit with donated `state` by the engine): slot may be a traced
     int32. eos < 0 means no EOS; remaining <= 0 installs an inactive row
-    (request finished at prefill)."""
+    (request finished at prefill). spec_limit: per-request speculation cap
+    (0 = no drafting for this slot; ignored by the plain decode step)."""
     return {
         "tokens": state["tokens"].at[slot].set(token),
         "index": state["index"].at[slot].set(index),
@@ -283,4 +291,248 @@ def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
         "eos": state["eos"].at[slot].set(eos),
         "remaining": state["remaining"].at[slot].set(remaining),
         "active": state["active"].at[slot].set(remaining > 0),
+        "spec_limit": state["spec_limit"].at[slot].set(spec_limit),
     }
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: fused propose-then-verify (serve.speculative)
+# ---------------------------------------------------------------------------
+
+def recurrent_cache_paths(caches) -> list:
+    """Flat-leaf indices of NON-POSITIONAL cache leaves + their batch axis.
+
+    Attention/MLA caches are positional — every write lands at a per-slot
+    sequence offset, so rolling back rejected speculative tokens is a free
+    index rewind (stale positions are masked, then overwritten). SSM leaves
+    ('conv' tail, 'ssm' state — models.ssm.make_mamba_cache) are RECURRENT:
+    the state after K tokens cannot be rewound, so the speculative step
+    snapshots them per micro-step and gathers the per-slot accepted state
+    back (see make_speculative_decode_step). Returns [(flat_index,
+    batch_axis)] in jax tree-flatten order; batch_axis is 1 for
+    layer-stacked 'blocks' leaves, 0 for 'prelude' leaves.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(caches)
+    out = []
+    for i, (path, _leaf) in enumerate(flat):
+        names = [str(k.key) for k in path if hasattr(k, "key")]
+        if "conv" in names or "ssm" in names:
+            out.append((i, 1 if names and names[0] == "blocks" else 0))
+    return out
+
+
+def _snapshot(caches, paths):
+    leaves = jax.tree_util.tree_flatten(caches)[0]
+    return [leaves[i] for i, _ in paths]
+
+
+def _gather_step(stacked, g, batch_axis):
+    """stacked: (T, *leaf); g: (B,) int32 step index per batch row. Exact
+    one-hot select along T (where + sum — one term per element, no fp
+    blending) with the batch axis at `batch_axis` of the leaf."""
+    t = stacked.shape[0]
+    steps = jnp.arange(t).reshape((t,) + (1,) * (stacked.ndim - 1))
+    gshape = [1] * stacked.ndim
+    gshape[batch_axis + 1] = g.shape[0]
+    mask = steps == g.reshape(gshape)
+    return jnp.where(mask, stacked, 0).sum(axis=0).astype(stacked.dtype)
+
+
+def _restore(caches, paths, init_leaves, step_stacks, g):
+    """Replace recurrent leaves with the per-slot state at step g[b]
+    (g = 0 selects the pre-dispatch state prepended from init_leaves)."""
+    leaves, treedef = jax.tree_util.tree_flatten(caches)
+    for (i, bax), init, snap in zip(paths, init_leaves, step_stacks):
+        stacked = jnp.concatenate([init[None], snap], axis=0)
+        leaves[i] = _gather_step(stacked, g, bax)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def make_speculative_decode_step(cfg: T.ModelConfig,
+                                 draft_cfg: T.ModelConfig,
+                                 backend: str = "ref", *, n_draft: int):
+    """Fused propose-then-verify decode (serve.speculative):
+
+        spec_decode(params, draft_params, caches, draft_caches, state)
+            -> (commit (B, K+1), n_commit (B,), n_accept (B,),
+                caches, draft_caches, state)
+
+    ONE dispatch per cycle, everything on device:
+
+      1. DRAFT: the cheap artifact runs K+1 micro-steps under one lax.scan
+         (K proposals d_1..d_K, plus one trailing feed of d_K so the draft
+         slab/state covers the fully-accepted case), sampling with the
+         per-slot temperature vector and the threaded rng key.
+      2. VERIFY: the target scores the whole block [t0, d_1..d_K] — ONE
+         batched (B, K+1) forward with per-slot index clocks for
+         positional-cache archs; for recurrent archs (SSM/hybrid, whose
+         single-step recurrence cannot consume a block) a K+1-step scan of
+         single-token forwards that snapshots the recurrent leaves per step.
+      3. ACCEPT/REJECT per slot: greedy rows accept the longest prefix where
+         the draft token equals the target argmax; temperature>0 rows use
+         the standard rejection-sampling test (u < p/q) and, at the first
+         rejection, sample the correction from the residual (p - q)+ — the
+         committed stream is distributed exactly as the target. The run is
+         clamped by the per-slot `spec_limit` (a 0 row degenerates to one
+         plain target step). One bonus token from the target's column L
+         always commits, so every cycle advances every live slot by
+         1..K+1 tokens.
+      4. ROLLBACK: rejected suffixes cost a per-slot index rewind —
+         positional cache writes past the new clock are masked and later
+         overwritten in place (the engine pads the slab by K positions so
+         the deepest speculative write stays in bounds); recurrent leaves
+         gather the per-slot state at the accepted boundary from the
+         step-stacked snapshots (frozen slots gather their pre-dispatch
+         state). EOS / length budgets truncate the commit on device, same
+         contract as the plain multi-step loop.
+
+    Greedy speculative output is token-identical to plain greedy decode:
+    every committed draft token equals the target argmax on the committed
+    prefix, and the bonus IS the target argmax — the accepted stream is the
+    target's greedy stream by induction, for any draft and any K.
+    """
+    cfg = dataclasses.replace(cfg, remat=False)        # see make_prefill_step
+    draft_cfg = dataclasses.replace(draft_cfg, remat=False)
+    if n_draft < 1:
+        raise ValueError(f"n_draft must be >= 1, got {n_draft}")
+    k = n_draft
+    recurrent = bool(cfg.is_ssm or cfg.attn_period)
+
+    def spec_decode(params, draft_params, caches, draft_caches, state):
+        b = state["tokens"].shape[0]
+        active = state["active"]
+        idx0 = state["index"]
+        temp = state["temperature"]
+
+        # ---- 1. draft proposes (K+1 fused micro-steps) --------------------
+        d_paths = recurrent_cache_paths(draft_caches)
+        d_init = _snapshot(draft_caches, d_paths)
+
+        def draft_micro(carry, _):
+            dcaches, tok, idx, key = carry
+            logits, _, dcaches = T.forward(
+                draft_params, tok[:, None], draft_cfg, backend=backend,
+                caches=dcaches, index=idx)
+            key, sub = jax.random.split(key)
+            nxt = T.sample_tokens(logits[:, -1], sub, temp)
+            nxt = jnp.where(active, nxt, tok)
+            idx = jnp.where(active, idx + 1, idx)
+            return ((dcaches, nxt, idx, key),
+                    (nxt, logits[:, -1], _snapshot(dcaches, d_paths)))
+
+        (draft_caches, _, _, key), (props, dlogits, d_snaps) = jax.lax.scan(
+            draft_micro, (draft_caches, state["tokens"], idx0, state["key"]),
+            None, length=k + 1)
+        d_block = props[:k].T                           # (B, K): d_1..d_K
+        dlog = dlogits[:k].transpose(1, 0, 2)           # (B, K, vocab)
+
+        # ---- 2. target verifies the block --------------------------------
+        tok_in = jnp.concatenate([state["tokens"][:, None], d_block], axis=1)
+        t_paths = recurrent_cache_paths(caches)
+        t_init = _snapshot(caches, t_paths)
+        if not recurrent:
+            logits, _, caches = T.forward(
+                params, tok_in, cfg, backend=backend, caches=caches,
+                index=idx0)
+            z = logits                                  # (B, K+1, vocab)
+            t_snaps = []
+        else:
+            def verify_micro(vcaches, xs):
+                tok_j, j = xs
+                idx_j = jnp.where(active, idx0 + j, idx0)
+                lg, _, vcaches = T.forward(
+                    params, tok_j[:, None], cfg, backend=backend,
+                    caches=vcaches, index=idx_j)
+                return vcaches, (lg[:, -1], _snapshot(vcaches, t_paths))
+
+            caches, (zs, t_snaps) = jax.lax.scan(
+                verify_micro, caches,
+                (tok_in.T, jnp.arange(k + 1, dtype=jnp.int32)))
+            z = zs.transpose(1, 0, 2)
+
+        # ---- 3. per-slot accept/reject ------------------------------------
+        greedy = temp <= 0.0
+        tgt_next = jnp.argmax(z, axis=-1).astype(jnp.int32)   # (B, K+1)
+        match = d_block == tgt_next[:, :k]
+        key, k_acc, k_bonus = jax.random.split(key, 3)
+        safe_t = jnp.maximum(temp, 1e-6)[:, None, None]
+        logp = jax.nn.log_softmax(z[:, :k].astype(jnp.float32) / safe_t, -1)
+        logq = jax.nn.log_softmax(dlog.astype(jnp.float32) / safe_t, -1)
+        p_d = jnp.take_along_axis(logp, d_block[..., None], axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(logq, d_block[..., None], axis=-1)[..., 0]
+        u = jax.random.uniform(k_acc, (b, k), minval=1e-20)
+        accept = jnp.where(greedy[:, None], match, jnp.log(u) < p_d - q_d)
+        run = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+        l_run = jnp.sum(run, axis=1)
+        l_acc = jnp.minimum(l_run, state["spec_limit"])       # per-slot cap
+
+        # bonus token from the target's column L: greedy argmax; sampled
+        # rows draw from the residual (p - q)+ at a TRUE rejection column,
+        # from p itself when the run was clamped or fully accepted.
+        z_l = jax.vmap(lambda zb, lb: zb[lb])(z, l_acc)       # (B, vocab)
+        bonus_g = jnp.argmax(z_l, axis=-1).astype(jnp.int32)
+        dlog_pad = jnp.concatenate([dlog, jnp.zeros_like(dlog[:, :1])], 1)
+        q_l = jax.vmap(lambda qb, lb: qb[lb])(dlog_pad, l_acc)
+        logp_l = jax.nn.log_softmax(z_l.astype(jnp.float32)
+                                    / safe_t[:, 0], -1)
+        logq_l = jax.nn.log_softmax(q_l.astype(jnp.float32)
+                                    / safe_t[:, 0], -1)
+        resid = jnp.log(jnp.clip(jnp.exp(logp_l) - jnp.exp(logq_l),
+                                 1e-30, None))
+        # the correction conditions on "an ELIGIBLE draft token was
+        # rejected": at a spec_limit-clamped column the draft token could
+        # never commit regardless of the accept test, so the bonus must be
+        # a plain draw from p (a capped/opted-out slot is exactly one plain
+        # target step), not the residual.
+        use_resid = (l_acc == l_run) & (l_run < k) \
+            & (l_run < state["spec_limit"])
+        t_logits = jnp.where(use_resid[:, None], resid, logp_l)
+        gum = jax.random.gumbel(k_bonus, z_l.shape, jnp.float32)
+        bonus_t = jnp.argmax(t_logits + gum, axis=-1).astype(jnp.int32)
+        bonus = jnp.where(greedy, bonus_g, bonus_t)
+
+        # ---- 4. commit + on-device lifecycle ------------------------------
+        ar = jnp.arange(k + 1)[None]
+        d_pad = jnp.concatenate([d_block, jnp.zeros((b, 1), jnp.int32)], 1)
+        commit = jnp.where(ar < l_acc[:, None], d_pad, 0)
+        commit = jnp.where(ar == l_acc[:, None], bonus[:, None], commit)
+        m_full = l_acc + 1
+        is_eos = ((state["eos"][:, None] >= 0)
+                  & (commit == state["eos"][:, None])
+                  & (ar < m_full[:, None]))
+        first_eos = jnp.min(jnp.where(is_eos, ar, k + 1), axis=1)
+        m = jnp.minimum(m_full,
+                        jnp.minimum(first_eos + 1, state["remaining"]))
+        m = jnp.where(active, m, 0)
+        hit_eos = (first_eos + 1) <= m
+        remaining = state["remaining"] - m
+        last = jax.vmap(lambda cb, mb: cb[jnp.maximum(mb - 1, 0)])(commit, m)
+        new_state = {
+            "tokens": jnp.where(active, last, state["tokens"]),
+            "index": idx0 + m,               # the rollback: rewind the clock
+            "key": key,
+            "temperature": temp,
+            "eos": state["eos"],
+            "remaining": remaining,
+            "active": active & (remaining > 0) & ~hit_eos,
+            "spec_limit": state["spec_limit"],
+        }
+        # accepted = draft tokens actually COMMITTED: EOS/budget truncation
+        # takes the first m commit columns, of which min(l_acc, m) are
+        # drafts (the bonus commits only when m == l_acc + 1) — accepted-
+        # then-truncated positions are rewound, so they must not count.
+        n_accept = jnp.where(active, jnp.minimum(l_acc, m), 0)
+
+        # ---- 5. recurrent-state rollback ----------------------------------
+        if recurrent:
+            # committed state = after consuming [t0, d_1..d_L] = micro-step
+            # L+1 (0 = the prepended pre-dispatch state, which frozen slots
+            # keep). Identical step indexing for draft and target: both fed
+            # the same committed prefix.
+            g = jnp.where(active, l_acc + 1, 0)
+            caches = _restore(caches, t_paths, t_init, t_snaps, g)
+            draft_caches = _restore(draft_caches, d_paths, d_init, d_snaps, g)
+
+        return commit, m, n_accept, caches, draft_caches, new_state
+
+    return spec_decode

@@ -4,7 +4,18 @@
       --requests 8 --prompt-len 32 --gen 32 \
       [--sparsity 0.5 --bits 8 --impl tree] [--slots 4] [--static] \
       [--temperature 0.8] \
+      [--speculate 4 --draft-bits 8 [--draft-sparsity S] \
+       [--draft-keep-layers N]] \
       [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run]
+
+Speculative decode: `--speculate K` derives a SELF-DRAFT artifact (the same
+weights re-packed at the --draft-* Kratos point, serve.speculative) and
+serves with the fused propose-then-verify dispatch — 1..K+1 tokens commit
+per dispatch, greedy output token-identical to plain decode. Replaces
+--decode-chunk. Acceptance-rate tuning: start with --draft-bits 8 (highest
+fidelity, ~1.0 acceptance), add sparsity / layer truncation to cut draft
+FLOPs while acceptance stays above ~0.8; the engine report prints the
+acceptance rate and draft/verify FLOP ratio to steer by.
 
 Loads the reduced config on CPU through the serve registry (weights packed
 once via kratos.pack), submits `--requests` generation requests with a small
@@ -32,9 +43,9 @@ import argparse
 import numpy as np
 
 from repro.core.kratos import KratosSpec
-from repro.serve import (EngineConfig, InferenceEngine, LocalBackend,
-                         ModelRegistry, ReplicaRouter, ShardedBackend,
-                         StaticScheduler)
+from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
+                         LocalBackend, ModelRegistry, ReplicaRouter,
+                         ShardedBackend, StaticScheduler)
 
 
 def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
@@ -47,11 +58,14 @@ def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
 
     mesh = M.make_local_mesh(*mesh_shape)
     print(f"[dry-run] mesh {dict(mesh.shape)} over {mesh.size} devices")
+    cache_len = cfg.max_len + cfg.speculate   # +K speculative write headroom
     caches = jax.eval_shape(
-        lambda: T.make_caches(model.cfg, cfg.n_slots, cfg.max_len))
+        lambda: T.make_caches(model.cfg, cfg.n_slots, cache_len))
     cache_specs = SH.cache_pspecs(caches, mesh, cfg.n_slots, slab=True)
     print(f"[dry-run] KV slab leaves ({cfg.n_slots} slots x "
-          f"{cfg.max_len} positions):")
+          f"{cache_len} positions"
+          + (f" = max_len + K={cfg.speculate} headroom" if cfg.speculate
+             else "") + "):")
     for path, spec in jax.tree_util.tree_leaves_with_path(
             cache_specs, is_leaf=lambda x: isinstance(
                 x, jax.sharding.PartitionSpec)):
@@ -61,12 +75,20 @@ def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
         print(f"    {k:48s} {spec}")
     backend = ShardedBackend(mesh=mesh)
     backend.build(model, cfg)
-    compiled = backend._decode.lower(backend.params, backend.pool.caches,
-                                     backend.state).compile()
+    if cfg.speculate:
+        # the step that will actually dispatch: fused propose-then-verify
+        compiled = backend._spec_decode.lower(
+            backend.params, backend.draft_params, backend.pool.caches,
+            backend.draft_pool.caches, backend.state).compile()
+        label = f"speculative step (K={cfg.speculate}, draft replicated)"
+    else:
+        compiled = backend._decode.lower(
+            backend.params, backend.pool.caches, backend.state).compile()
+        label = f"decode step (K={cfg.decode_chunk})"
     r = HA.analyze(compiled.as_text())
     coll = {k: int(v["count"]) for k, v in r["collectives"].items()
             if v["count"]}
-    print(f"[dry-run] decode step (K={cfg.decode_chunk}): "
+    print(f"[dry-run] {label}: "
           f"{r['flops']:.3g} flops, {r['bytes']:.3g} B touched, "
           f"{r['wire_bytes']:.3g} B wire, collectives {coll or 'none'}")
 
@@ -95,6 +117,16 @@ def main() -> None:
     ap.add_argument("--host-loop", action="store_true",
                     help="PR-1 host decode loop (per-step logits pull + "
                          "numpy sampling) instead of the device-resident one")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="K-token self-draft speculation per dispatch "
+                         "(derives a draft artifact from the same weights; "
+                         "replaces --decode-chunk; greedy output unchanged)")
+    ap.add_argument("--draft-bits", type=int, default=8,
+                    help="draft weight bits for --speculate (0 = native)")
+    ap.add_argument("--draft-sparsity", type=float, default=0.0,
+                    help="draft sparsity for --speculate (bk=bn=8 blocks)")
+    ap.add_argument("--draft-keep-layers", type=int, default=0,
+                    help="truncate the draft to its first N layers (0=all)")
     ap.add_argument("--mesh", default="",
                     help="'data,model' sizes: serve through ShardedBackend "
                          "on a local mesh of that shape")
@@ -115,18 +147,27 @@ def main() -> None:
                       bits=args.bits or None,
                       act_bits=args.act_bits or None,
                       impl=args.impl, bk=args.block, bn=args.block)
+    draft = None
+    if args.speculate:
+        draft = DraftSpec.from_args(args.draft_bits, args.draft_sparsity,
+                                    args.draft_keep_layers)
     registry = ModelRegistry()
-    model = registry.load(args.arch, spec, seed=args.seed)
+    model = registry.load(args.arch, spec, seed=args.seed, draft_spec=draft)
     print(f"[serve] {model.name}: {model.n_packed} packed projections, "
           f"{model.packed_bytes / 1e6:.2f} MB packed vs "
           f"{model.dense_bytes / 1e6:.2f} MB dense "
           f"({model.compression:.2f}x)")
+    if draft is not None:
+        print(f"[serve] self-draft {draft.tag}: {model.draft_packed} packed "
+              f"projections, draft/verify flops "
+              f"{model.draft_cost_fraction():.2f}, K={args.speculate}")
 
     max_len = args.max_len or (model.cfg.n_img_tokens + args.prompt_len
                                + args.gen + 8)
     cfg = EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
                        device_loop=not args.host_loop,
                        decode_chunk=args.decode_chunk,
+                       speculate=args.speculate,
                        max_waiting=args.max_waiting or None)
     mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
 

@@ -316,7 +316,15 @@ def _prefill_cache(cache, k, v, cfg: AttnConfig):
 
 
 def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
-    """Write one token at `index`; return (cache, kv_positions, valid_mask).
+    """Write s token(s) at `index`..; return (cache, kv_positions, valid).
+
+    s > 1 is the speculative-verify block write (distributed.steps): the s
+    positions land contiguously from `index` and validity extends to the
+    LAST written position (causality still limits what each query row of
+    the block sees). Multi-token writes into a WRAPPING circular window
+    cache are unsupported (dynamic_update_slice cannot wrap) — the
+    speculative path refuses those archs (serve.speculative.check_supported)
+    and pads the slab so in-range writes never clamp.
 
     index: scalar (lock-step batch, one shared position) or (B,) per-slot
     positions (continuous batching) — the vector form writes each batch row
@@ -324,6 +332,7 @@ def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
     for the per-slot attention mask.
     """
     size = cache["k"].shape[2]
+    last = index + (k.shape[2] - 1)      # last written position (s == 1: index)
     slot = (index % size) if cfg.window else index
     # the barrier stops XLA from sinking the f32->bf16 convert of the update
     # INTO the stack update — fused, that turns the aliased in-place write
@@ -335,23 +344,23 @@ def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
         ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
         if cfg.window:
-            # slot s holds the latest position p <= index with p % size == s
-            kv_pos = index - ((index - slots) % size)
+            # slot s holds the latest position p <= last with p % size == s
+            kv_pos = last - ((last - slots) % size)
             valid = kv_pos >= 0
         else:
             kv_pos = slots
-            valid = slots <= index
+            valid = slots <= last
     else:
         write = jax.vmap(
             lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (0, at, 0)))
         ck = write(cache["k"], k, slot)
         cv = write(cache["v"], v, slot)
         if cfg.window:
-            kv_pos = index[:, None] - ((index[:, None] - slots[None]) % size)
+            kv_pos = last[:, None] - ((last[:, None] - slots[None]) % size)
             valid = kv_pos >= 0
         else:
             kv_pos = slots
-            valid = slots[None] <= index[:, None]
+            valid = slots[None] <= last[:, None]
     return {"k": ck, "v": cv}, kv_pos, valid
 
 
@@ -424,13 +433,14 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
         c_upd, r_upd = jax.lax.optimization_barrier(
             (c_kv.astype(cache["c_kv"].dtype),
              k_rope.astype(cache["k_rope"].dtype)))  # see _decode_cache_write
+        last = index + (c_upd.shape[1] - 1)   # s > 1: speculative block write
         if jnp.ndim(index) == 0:
             ck = jax.lax.dynamic_update_slice(
                 cache["c_kv"], c_upd, (0, index, 0))
             cr = jax.lax.dynamic_update_slice(
                 cache["k_rope"], r_upd, (0, 0, index, 0))
             kv_pos = jnp.arange(ck.shape[1])
-            valid = kv_pos <= index
+            valid = kv_pos <= last
         else:                      # per-slot clocks (continuous batching)
             ck = jax.vmap(
                 lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (at, 0)))(
@@ -439,7 +449,7 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
                 lambda c, u, at: jax.lax.dynamic_update_slice(c, u, (0, at, 0)))(
                 cache["k_rope"], r_upd, index)
             kv_pos = jnp.arange(ck.shape[1])
-            valid = kv_pos[None] <= index[:, None]
+            valid = kv_pos[None] <= last[:, None]
         new_cache = {"c_kv": ck, "k_rope": cr}
         c_all, kr_all = ck, cr
     elif cache is not None:

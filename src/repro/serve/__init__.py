@@ -51,9 +51,19 @@ Layout:
   router.py      `ReplicaRouter`: least-loaded/deficit admission across N
                  engine replicas, overflow hold + drain, queue rebalance,
                  aggregate metrics (tokens_per_router_step).
+  speculative.py speculative decode (PR 4): `DraftSpec` derives a SELF-DRAFT
+                 artifact — the same weights re-packed through
+                 core/quantize + core/sparsity at a cheaper (sparsity, bits)
+                 point, optionally layer-truncated — and the engine's
+                 `speculate=K` runs a fused propose-then-verify cycle
+                 (draft proposes K, target verifies the block in one
+                 batched forward, per-slot accept/reject masking + index
+                 rollback commit 1..K+1 tokens per dispatch). Greedy output
+                 is token-identical to plain decode for any draft.
   metrics.py     tok/s, tokens/dispatch, host syncs per decoded token,
                  p50/p99 latency, time-to-first-token, batch occupancy,
-                 rejections; `ServeMetrics.aggregate` pools replicas.
+                 rejections, draft acceptance/rollback rates;
+                 `ServeMetrics.aggregate` pools replicas.
 
 Quickstart:
 
@@ -79,11 +89,12 @@ from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
 from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    StaticScheduler, replica_load)
+from repro.serve.speculative import DraftSpec
 
 __all__ = [
-    "CachePool", "PoolExhausted", "EngineConfig", "EngineSaturated",
-    "InferenceEngine", "ExecutionBackend", "LocalBackend", "ShardedBackend",
-    "ReplicaRouter", "ServeMetrics", "ModelRegistry", "PackedModel",
-    "pack_model_params", "ContinuousScheduler", "StaticScheduler", "Request",
-    "replica_load",
+    "CachePool", "PoolExhausted", "DraftSpec", "EngineConfig",
+    "EngineSaturated", "InferenceEngine", "ExecutionBackend", "LocalBackend",
+    "ShardedBackend", "ReplicaRouter", "ServeMetrics", "ModelRegistry",
+    "PackedModel", "pack_model_params", "ContinuousScheduler",
+    "StaticScheduler", "Request", "replica_load",
 ]

@@ -28,15 +28,34 @@ token-identical), only the placement of the SPMD program underneath it.
                    `sharding.use_mesh` so model-internal logical-axis
                    constraints resolve against this backend's mesh.
 
+Speculative decode (EngineConfig.speculate=K, serve.speculative): the
+backend additionally owns the DRAFT side of the artifact — a second slab
+(`draft_pool`, same slot assignment and per-slot index clocks as the target
+slab), the draft's batch-1 prefill (run at admission right after the
+target's, its cache donated into the draft slab row), and the fused
+propose-then-verify step (`steps.make_speculative_decode_step`), jitted
+with (target slab, draft slab, state) ALL donated. Both slabs are padded by
+K positions of write headroom so the deepest speculative write stays in
+bounds before rollback. On the mesh, draft params are REPLICATED (the draft
+is small by construction — that is the point of it) while the verify step
+runs SPMD exactly like the plain decode, with out_shardings pinned to the
+donated inputs so aliasing survives pjit.
+
 Contract shared by all backends (what the engine calls):
 
   build(model, cfg)                 compile steps, allocate pool/state
   prefill(batch, exact)             -> (logits, batch-1 caches), on device
+                                    (speculating: also runs + stashes the
+                                    draft prefill for the same prompt)
   write_slot(slot, caches)          install a prefilled row into the slab
+                                    (and the stashed draft row)
   first_token(row, rid, temp)       sample the prefill token (device loop)
   install(slot, tok, idx, ...)      write the slot's row of the loop state
   decode_block()                    ONE donated dispatch, K micro-steps;
                                     returns the synced (K, B) int32 block
+  spec_decode_block()               ONE donated propose-then-verify cycle;
+                                    returns (commit (B, K+1), n_commit (B,),
+                                    n_accept (B,)) int32 on host
   decode_host(tokens, indices)      PR-1 host-loop step (LocalBackend only)
   describe()                        placement facts for metrics/benchmarks
 """
@@ -63,6 +82,9 @@ class ExecutionBackend:
         self.pool: Optional[CachePool] = None
         self.params: Any = None
         self.state: Any = None                 # device-resident loop state
+        self.draft_pool: Optional[CachePool] = None   # speculative slab
+        self.draft_params: Any = None
+        self._pending_draft: Any = None        # draft prefill awaiting slot
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -76,18 +98,27 @@ class ExecutionBackend:
 
     def write_slot(self, slot: int, caches) -> None:
         self.pool.write_slot(slot, caches)
+        if self.draft_pool is not None:
+            # the draft slab row shares the slot id and (from the next
+            # dispatch on) the per-slot index clock with the target row
+            self.draft_pool.write_slot(slot, self._pending_draft)
+            self._pending_draft = None
 
     def first_token(self, row, rid: int, temperature: float) -> int:
         raise NotImplementedError
 
     def install(self, slot: int, token: int, index: int, temperature: float,
-                eos: int, remaining: int) -> None:
+                eos: int, remaining: int, spec_limit: int = 0) -> None:
         raise NotImplementedError
 
     # -- decode -------------------------------------------------------------
 
     def decode_block(self) -> np.ndarray:
         raise NotImplementedError
+
+    def spec_decode_block(self):
+        raise NotImplementedError(
+            f"{self.name} backend was not built with EngineConfig.speculate")
 
     def decode_host(self, tokens: np.ndarray, indices: np.ndarray):
         raise NotImplementedError(
@@ -109,12 +140,15 @@ class LocalBackend(ExecutionBackend):
         self.model, self.cfg = model, cfg
         self.params = model.params
         mcfg = model.cfg
-        self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
+        # speculate=K pads the slab: the verify writes K+1 positions from a
+        # per-slot clock that can sit at max_len-1; rollback masks them.
+        cache_len = cfg.max_len + cfg.speculate
+        self.pool = CachePool(mcfg, cfg.n_slots, cache_len,
                               jnp.dtype(cfg.cache_dtype))
         # device loop: prefill allocates its batch-1 caches inside the
         # compiled step (no host template copied in); host loop (PR-1
         # comparison baseline) keeps the template-operand form.
-        pkw = dict(cache_len=cfg.max_len,
+        pkw = dict(cache_len=cache_len,
                    cache_dtype=jnp.dtype(cfg.cache_dtype)) \
             if cfg.device_loop else {}
         self._prefill_last = jax.jit(
@@ -132,28 +166,59 @@ class LocalBackend(ExecutionBackend):
             self._first_key = jax.random.PRNGKey(cfg.seed)
         else:
             self._decode = jax.jit(ST.make_decode_step(mcfg, cfg.backend))
+        if cfg.speculate:
+            dcfg = model.draft_cfg
+            self.draft_params = model.draft_params
+            ddtype = jnp.dtype(cfg.draft_cache_dtype or cfg.cache_dtype)
+            self.draft_pool = CachePool(dcfg, cfg.n_slots, cache_len, ddtype)
+            self._draft_prefill = jax.jit(
+                ST.make_prefill_step(dcfg, cfg.backend, last_only=True,
+                                     cache_len=cache_len, cache_dtype=ddtype))
+            self._spec_decode = jax.jit(
+                ST.make_speculative_decode_step(
+                    mcfg, dcfg, cfg.backend, n_draft=cfg.speculate),
+                donate_argnums=(2, 3, 4))   # both slabs + state in place
 
     def prefill(self, batch, exact):
         fn = self._prefill_last if exact else self._prefill_full
-        if self.cfg.device_loop:
-            return fn(self.params, batch)
-        return fn(self.params, batch, self.pool.single_template)
+        if not self.cfg.device_loop:
+            return fn(self.params, batch, self.pool.single_template)
+        out = fn(self.params, batch)
+        if self.draft_pool is not None:
+            # the draft consumes the same prompt; its logits are unused
+            # (the first token is sampled from the TARGET's prefill)
+            _, self._pending_draft = self._draft_prefill(self.draft_params,
+                                                         batch)
+        return out
 
     def first_token(self, row, rid, temperature):
         key = jax.random.fold_in(self._first_key, rid)
         temp = jnp.full((1,), temperature, jnp.float32)
         return int(self._sample_first(row, key, temp)[0])
 
-    def install(self, slot, token, index, temperature, eos, remaining):
+    def install(self, slot, token, index, temperature, eos, remaining,
+                spec_limit=0):
         with quiet_donation():
             self.state = self._install(self.state, slot, token, index,
-                                       temperature, eos, remaining)
+                                       temperature, eos, remaining,
+                                       spec_limit)
 
     def decode_block(self):
         with quiet_donation():
             tok_block, self.pool.caches, self.state = self._decode(
                 self.params, self.pool.caches, self.state)
         return np.asarray(tok_block)             # the ONLY decode sync
+
+    def spec_decode_block(self):
+        with quiet_donation():
+            (commit, n_commit, n_accept, self.pool.caches,
+             self.draft_pool.caches, self.state) = self._spec_decode(
+                self.params, self.draft_params, self.pool.caches,
+                self.draft_pool.caches, self.state)
+        commit, n_commit, n_accept = jax.device_get(
+            (commit, n_commit, n_accept))        # the ONLY decode sync
+        return (np.asarray(commit), np.asarray(n_commit),
+                np.asarray(n_accept))
 
     def decode_host(self, tokens, indices):
         logits, self.pool.caches = self._decode(
@@ -201,6 +266,7 @@ class ShardedBackend(ExecutionBackend):
             self._mesh = M.make_local_mesh(*shape)
         mesh = self.mesh = self._mesh
         self._ctx = lambda: SH.use_mesh(mesh)
+        cache_len = cfg.max_len + cfg.speculate    # see LocalBackend.build
         with self._ctx():
             # params: FSDP x TP name rules; PackedLinear buffers fall
             # through the rules and replicate — the packed-kernel contract
@@ -208,7 +274,7 @@ class ShardedBackend(ExecutionBackend):
             self.param_shardings = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), model.pspecs(mesh))
             self.params = jax.device_put(model.params, self.param_shardings)
-            self.pool = CachePool(mcfg, cfg.n_slots, cfg.max_len,
+            self.pool = CachePool(mcfg, cfg.n_slots, cache_len,
                                   jnp.dtype(cfg.cache_dtype), mesh=mesh)
             state_specs = ST.decode_state_pspecs(mesh, cfg.n_slots)
             self.state_shardings = jax.tree_util.tree_map(
@@ -234,7 +300,7 @@ class ShardedBackend(ExecutionBackend):
             # batch-1 prefill: nothing to shard on the request axis; params
             # are committed so XLA propagates their placement through the
             # compiled step. Caches allocate inside the jit (donation form).
-            pkw = dict(cache_len=cfg.max_len,
+            pkw = dict(cache_len=cache_len,
                        cache_dtype=jnp.dtype(cfg.cache_dtype))
             self._prefill_last = jax.jit(
                 ST.make_prefill_step(mcfg, cfg.backend, last_only=True,
@@ -244,15 +310,55 @@ class ShardedBackend(ExecutionBackend):
                                      **pkw))
             self._sample_first = jax.jit(T.sample_tokens)
             self._first_key = jax.random.PRNGKey(cfg.seed)
+            if cfg.speculate:
+                self._build_speculative(mesh, cache_len, slot_spec)
+
+    def _build_speculative(self, mesh, cache_len, slot_spec) -> None:
+        """Draft side on the mesh: draft params REPLICATED (the draft is
+        small by design; replication keeps its packed-kernel contract and
+        removes its collectives from the hot cycle), draft slab sharded
+        exactly like the target slab, and the fused propose-then-verify
+        step jitted with out_shardings pinned to the three donated inputs
+        so slab/state aliasing survives pjit."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg, model, mcfg = self.cfg, self.model, self.model.cfg
+        dcfg = model.draft_cfg
+        self.draft_shardings = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), model.draft_params)
+        self.draft_params = jax.device_put(model.draft_params,
+                                           self.draft_shardings)
+        ddtype = jnp.dtype(cfg.draft_cache_dtype or cfg.cache_dtype)
+        self.draft_pool = CachePool(dcfg, cfg.n_slots, cache_len, ddtype,
+                                    mesh=mesh)
+        self._draft_prefill = jax.jit(
+            ST.make_prefill_step(dcfg, cfg.backend, last_only=True,
+                                 cache_len=cache_len, cache_dtype=ddtype))
+        vec_sharding = NamedSharding(mesh, slot_spec)
+        commit_sharding = NamedSharding(mesh, P(*tuple(slot_spec), None))
+        self._spec_decode = jax.jit(
+            ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
+                                            n_draft=cfg.speculate),
+            donate_argnums=(2, 3, 4),
+            in_shardings=(self.param_shardings, self.draft_shardings,
+                          self.pool.shardings, self.draft_pool.shardings,
+                          self.state_shardings),
+            out_shardings=(commit_sharding, vec_sharding, vec_sharding,
+                           self.pool.shardings, self.draft_pool.shardings,
+                           self.state_shardings))
 
     def prefill(self, batch, exact):
         fn = self._prefill_last if exact else self._prefill_full
         with self._ctx():
-            return fn(self.params, batch)
+            out = fn(self.params, batch)
+            if self.draft_pool is not None:
+                _, self._pending_draft = self._draft_prefill(
+                    self.draft_params, batch)
+            return out
 
     def write_slot(self, slot, caches):
         with self._ctx():
-            self.pool.write_slot(slot, caches)
+            super().write_slot(slot, caches)
 
     def first_token(self, row, rid, temperature):
         key = jax.random.fold_in(self._first_key, rid)
@@ -260,16 +366,29 @@ class ShardedBackend(ExecutionBackend):
         with self._ctx():
             return int(self._sample_first(row, key, temp)[0])
 
-    def install(self, slot, token, index, temperature, eos, remaining):
+    def install(self, slot, token, index, temperature, eos, remaining,
+                spec_limit=0):
         with self._ctx(), quiet_donation():
             self.state = self._install(self.state, slot, token, index,
-                                       temperature, eos, remaining)
+                                       temperature, eos, remaining,
+                                       spec_limit)
 
     def decode_block(self):
         with self._ctx(), quiet_donation():
             tok_block, self.pool.caches, self.state = self._decode(
                 self.params, self.pool.caches, self.state)
         return np.asarray(tok_block)             # the ONLY decode sync
+
+    def spec_decode_block(self):
+        with self._ctx(), quiet_donation():
+            (commit, n_commit, n_accept, self.pool.caches,
+             self.draft_pool.caches, self.state) = self._spec_decode(
+                self.params, self.draft_params, self.pool.caches,
+                self.draft_pool.caches, self.state)
+        commit, n_commit, n_accept = jax.device_get(
+            (commit, n_commit, n_accept))        # the ONLY decode sync
+        return (np.asarray(commit), np.asarray(n_commit),
+                np.asarray(n_accept))
 
     def describe(self):
         return {"backend": self.name,

@@ -25,6 +25,17 @@ dispatch. Host-side emission catches up from the synced block: streaming
 callbacks fire in micro-step order and slots that finished mid-block are
 freed retroactively.
 
+Speculative decode (`EngineConfig.speculate=K`, PR 4): the dispatch becomes
+a fused propose-then-verify cycle over a SELF-DRAFT artifact (the same
+weights re-packed at a cheaper Kratos point — serve.speculative): the draft
+proposes K tokens, the target verifies the block in one batched forward,
+and per-slot accept/reject masking commits the agreeing prefix plus one
+target bonus token — 1..K+1 tokens per dispatch per live slot, with
+rollback a free per-slot index rewind (the backend pads both slabs by K
+positions so speculative writes stay in bounds). Greedy output is
+token-identical to non-speculative decode for any draft and any K; a
+request can cap or disable its own drafting with `submit(speculate=...)`.
+
 The `decode_chunk` knob is a latency/throughput trade: larger K amortizes
 dispatch + sync overhead over more tokens but coarsens the admission clock
 (new requests join only at block boundaries) and wastes tail micro-steps
@@ -103,6 +114,13 @@ class EngineConfig:
     device_loop: bool = True           # fused on-device sampling + state
     decode_chunk: int = 1              # K micro-steps per dispatch (device)
     max_waiting: Optional[int] = None  # waiting-deque bound (None = open)
+    # speculative decode (serve.speculative): K draft tokens per propose-
+    # then-verify dispatch (0 = off). Requires a model loaded with
+    # `draft_spec=`; replaces the decode_chunk loop (one spec cycle IS the
+    # dispatch). Both slabs get K extra positions of write headroom so the
+    # deepest speculative write stays in bounds before rollback.
+    speculate: int = 0
+    draft_cache_dtype: Optional[str] = None   # None = cache_dtype
 
 
 class InferenceEngine:
@@ -121,6 +139,24 @@ class InferenceEngine:
         if cfg.max_waiting is not None and cfg.max_waiting < 0:
             raise ValueError(f"max_waiting must be >= 0 or None, got "
                              f"{cfg.max_waiting}")
+        if cfg.speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {cfg.speculate}")
+        if cfg.speculate:
+            from repro.serve import speculative as SP
+            if not cfg.device_loop:
+                raise ValueError("speculate requires device_loop=True (the "
+                                 "propose-then-verify cycle is one fused "
+                                 "dispatch)")
+            if cfg.decode_chunk != 1:
+                raise ValueError("speculate replaces decode_chunk: one spec "
+                                 "cycle IS the multi-token dispatch — set "
+                                 "decode_chunk=1")
+            if not model.has_draft:
+                raise ValueError(
+                    f"speculate={cfg.speculate} needs a self-draft artifact: "
+                    f"load the model with registry.load(..., draft_spec=Draft"
+                    f"Spec(...)); '{model.name}' has none")
+            SP.check_supported(model.cfg, cfg.max_len + cfg.speculate)
         self.model = model
         self.cfg = cfg
         mcfg = model.cfg
@@ -129,6 +165,11 @@ class InferenceEngine:
         self.backend = backend or LocalBackend()
         self.backend.build(model, cfg)
         self.pool = self.backend.pool
+        if cfg.speculate:
+            self.metrics.draft_flop_fraction = model.draft_cost_fraction()
+            # target verify forwards per cycle (mirrors the steps builder)
+            self._verify_steps = (cfg.speculate + 1) \
+                if (mcfg.is_ssm or mcfg.attn_period) else 1
         if not cfg.device_loop:
             self._tokens = np.zeros((cfg.n_slots, 1), np.int32)
             self._indices = np.zeros((cfg.n_slots,), np.int32)
@@ -158,12 +199,12 @@ class InferenceEngine:
                arrival_step: int = 0, temperature: float = 0.0,
                eos_id: Optional[int] = None,
                extras: Optional[Dict[str, Any]] = None,
-               on_token=None) -> Request:
+               on_token=None, speculate: Optional[int] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         r = Request(id=-1, prompt=prompt,
                     max_new_tokens=max_new_tokens, arrival_step=arrival_step,
                     temperature=temperature, eos_id=eos_id, extras=extras,
-                    on_token=on_token)
+                    on_token=on_token, speculate=speculate)
         return self.adopt(r)
 
     def adopt(self, r: Request) -> Request:
@@ -230,8 +271,12 @@ class InferenceEngine:
             for r in admitted:
                 self._start(r)
         if self.pool.n_active:
-            advanced = self._decode_block() if self.cfg.device_loop \
-                else self._decode_step_host()
+            if self.cfg.speculate:
+                advanced = self._decode_spec()
+            elif self.cfg.device_loop:
+                advanced = self._decode_block()
+            else:
+                advanced = self._decode_step_host()
         else:
             self.metrics.on_idle_step()
             advanced = 1
@@ -304,7 +349,8 @@ class InferenceEngine:
             eos = -1 if r.eos_id is None else int(r.eos_id)
             rem = 0 if (r.eos_id is not None and tok == r.eos_id) \
                 else r.max_new_tokens - 1
-            self.backend.install(slot, tok, r.index, r.temperature, eos, rem)
+            self.backend.install(slot, tok, r.index, r.temperature, eos, rem,
+                                 self._spec_limit(r))
         else:
             tok = self._sample_host(np.asarray(row[0]), r)
             self.metrics.on_host_sync("prefill")
@@ -329,6 +375,60 @@ class InferenceEngine:
                 r.index += 1
                 self._emit(r, int(block[j, slot]), step)
         return k
+
+    def _spec_limit(self, r: Request) -> int:
+        """Per-slot speculation cap: the engine K, clamped by the request's
+        own `speculate` (0 = opt out). Used for both the device install and
+        the metrics' proposed-token denominators — a capped slot proposes
+        only up to its cap, so acceptance rates stay meaningful."""
+        if not self.cfg.speculate:
+            return 0
+        if r.speculate is None:
+            return self.cfg.speculate
+        return max(0, min(r.speculate, self.cfg.speculate))
+
+    def _decode_spec(self) -> int:
+        """Speculative path: ONE fused propose-then-verify dispatch commits
+        1..K+1 tokens per live slot. The sync is (commit block, commit
+        counts, accepted counts) — still one crossing; the host replays the
+        committed prefix per slot in micro-step order and the engine clock
+        advances by the deepest commit (speculation compresses wall
+        dispatches, not the step-latency bookkeeping)."""
+        k = self.cfg.speculate
+        # slab forwards actually run per cycle: k+1 draft micro-steps plus
+        # the target verify — one batched forward for positional-cache
+        # archs, k+1 micro-steps for recurrent ones (steps builder)
+        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots,
+                                    micro_steps=(k + 1) + self._verify_steps)
+        block, n_commit, n_accept = self.backend.spec_decode_block()
+        self.metrics.on_host_sync("decode")
+        advanced, proposed, accepted = 1, 0, 0
+        for slot in range(self.cfg.n_slots):
+            r = self._slots[slot]
+            if r is None:
+                continue
+            m = int(n_commit[slot])
+            # a draft token only ever had a chance to commit within the
+            # slot's remaining budget: clamp the proposed-denominator so
+            # short-budget tails don't deflate the acceptance signal
+            lim = min(self._spec_limit(r),
+                      r.max_new_tokens - len(r.generated))
+            advanced = max(advanced, m)
+            for j in range(m):
+                r.index += 1
+                self._emit(r, int(block[slot, j]), self.step_count + j)
+            if r.done and r.eos_id is not None and m \
+                    and int(block[slot, m - 1]) == r.eos_id:
+                # EOS ended the request mid-block: columns past it never
+                # had a commit chance either
+                lim = min(lim, m)
+            proposed += lim
+            accepted += int(n_accept[slot])
+            if lim:
+                self.metrics.on_slot_speculation(slot, int(n_accept[slot]),
+                                                 lim)
+        self.metrics.on_spec_dispatch(proposed=proposed, accepted=accepted)
+        return advanced
 
     def _decode_step_host(self) -> int:
         """PR-1 host loop: full-vocab logits pulled, numpy sampling, token +

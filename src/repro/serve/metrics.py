@@ -64,6 +64,12 @@ class ServeMetrics:
         self.host_syncs: Dict[str, int] = {"decode": 0, "prefill": 0}
         self.occupancy: List[float] = []      # active / n_slots per dispatch
         self.records: Dict[int, RequestRecord] = {}
+        # speculative decode (serve.speculative)
+        self.spec_dispatches = 0              # propose-then-verify cycles
+        self.draft_proposed = 0               # draft tokens offered to verify
+        self.draft_accepted = 0               # ... accepted by the target
+        self.draft_flop_fraction = 0.0        # static draft/target FLOP ratio
+        self.slot_acceptance: Dict[int, List[int]] = {}  # slot: [acc, prop]
 
     # -- recording hooks (called by the engine) -----------------------------
 
@@ -109,10 +115,27 @@ class ServeMetrics:
         ('decode' | 'prefill')."""
         self.host_syncs[kind] = self.host_syncs.get(kind, 0) + n
 
+    def on_spec_dispatch(self, proposed: int, accepted: int) -> None:
+        """One propose-then-verify cycle: `proposed` draft tokens offered
+        across live slots, `accepted` of them committed by the verify.
+        Rolled-back tokens (proposed - accepted) cost draft FLOPs + a slab
+        index rewind but no host traffic."""
+        self.spec_dispatches += 1
+        self.draft_proposed += proposed
+        self.draft_accepted += accepted
+
+    def on_slot_speculation(self, slot: int, accepted: int,
+                            proposed: int) -> None:
+        """Per-slot acceptance accounting (examples/serve_speculative)."""
+        acc = self.slot_acceptance.setdefault(slot, [0, 0])
+        acc[0] += accepted
+        acc[1] += proposed
+
     # -- report -------------------------------------------------------------
 
     def report(self) -> Dict[str, float]:
         elapsed = max(time.time() - self.t0, 1e-9)
+        tokens_per_dispatch = self.tokens_generated / max(1, self.decode_steps)
         done = [r for r in self.records.values() if r.finish_step >= 0]
         lat_steps = [float(r.finish_step - r.arrival_step) for r in done]
         ttft_steps = [float(r.first_token_step - r.arrival_step)
@@ -132,8 +155,11 @@ class ServeMetrics:
             / max(1, decoded),
             "wall_seconds": elapsed,
             "tok_per_s": self.tokens_generated / elapsed,
-            "tokens_per_step": self.tokens_generated
-            / max(1, self.decode_steps),
+            # one number, two names: "per step" is the historical engine
+            # clock, "per dispatch" the speculation-era reading — aliased
+            # so the serve_bench gates can never diverge from the clock
+            "tokens_per_step": tokens_per_dispatch,
+            "tokens_per_dispatch": tokens_per_dispatch,
             "mean_occupancy": (sum(self.occupancy) / len(self.occupancy))
             if self.occupancy else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
@@ -142,6 +168,15 @@ class ServeMetrics:
             "latency_s_p99": percentile(lat_wall, 99),
             "ttft_steps_p50": percentile(ttft_steps, 50),
             "ttft_steps_p99": percentile(ttft_steps, 99),
+            # speculative decode: acceptance + rollback + cost ratio
+            "spec_dispatches": float(self.spec_dispatches),
+            "draft_proposed": float(self.draft_proposed),
+            "draft_accepted": float(self.draft_accepted),
+            "draft_rolled_back": float(self.draft_proposed
+                                       - self.draft_accepted),
+            "acceptance_rate": self.draft_accepted
+            / max(1, self.draft_proposed),
+            "draft_verify_flop_ratio": self.draft_flop_fraction,
         }
 
     @staticmethod
@@ -163,6 +198,8 @@ class ServeMetrics:
         tokens = sum(m.tokens_generated for m in metrics_list)
         decoded = max(0, tokens - sum(m.prefills for m in metrics_list))
         syncs_d = sum(m.host_syncs.get("decode", 0) for m in metrics_list)
+        proposed = sum(m.draft_proposed for m in metrics_list)
+        accepted = sum(m.draft_accepted for m in metrics_list)
         elapsed = max(max((time.time() - m.t0 for m in metrics_list),
                           default=0.0), 1e-9)
         return {
@@ -177,6 +214,19 @@ class ServeMetrics:
             "host_syncs_per_token": syncs_d / max(1, decoded),
             "wall_seconds": elapsed,
             "tok_per_s": tokens / elapsed,
+            "tokens_per_dispatch": tokens / max(1, dispatches),
+            # fleet-pooled speculation: acceptance is accepted/proposed over
+            # the union of cycles, not a mean of per-replica rates
+            "spec_dispatches": float(sum(m.spec_dispatches
+                                         for m in metrics_list)),
+            "draft_proposed": float(proposed),
+            "draft_accepted": float(accepted),
+            "draft_rolled_back": float(proposed - accepted),
+            "acceptance_rate": accepted / max(1, proposed),
+            # proposal-weighted across replicas (0.0 when no one speculates)
+            "draft_verify_flop_ratio": sum(
+                m.draft_flop_fraction * m.draft_proposed
+                for m in metrics_list) / max(1, proposed),
             "mean_occupancy": occ_num / occ_den if occ_den else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
             "latency_steps_p99": percentile(lat_steps, 99),
@@ -188,6 +238,11 @@ class ServeMetrics:
 
     def format_report(self) -> str:
         r = self.report()
+        spec = ""
+        if self.spec_dispatches:
+            spec = (f" | accept {r['acceptance_rate']:.2f} "
+                    f"({int(r['draft_rolled_back'])} rolled back, "
+                    f"draft/verify flops {r['draft_verify_flop_ratio']:.2f})")
         return (f"{int(r['requests_completed'])} reqs, "
                 f"{int(r['tokens_generated'])} toks in {r['wall_seconds']:.2f}s"
                 f" | {r['tok_per_s']:.1f} tok/s wall, "
@@ -196,4 +251,4 @@ class ServeMetrics:
                 f" | occupancy {r['mean_occupancy']:.2f}"
                 f" | latency p50/p99 {r['latency_steps_p50']:.0f}/"
                 f"{r['latency_steps_p99']:.0f} steps"
-                f" | ttft p50 {r['ttft_steps_p50']:.0f} steps")
+                f" | ttft p50 {r['ttft_steps_p50']:.0f} steps" + spec)

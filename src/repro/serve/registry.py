@@ -76,7 +76,13 @@ def _tree_bytes(tree) -> int:
 
 @dataclasses.dataclass
 class PackedModel:
-    """A named serving artifact: config + packed parameter tree + stats."""
+    """A named serving artifact: config + packed parameter tree + stats.
+
+    With `draft_spec` (serve.speculative.DraftSpec) the artifact ALSO
+    carries a self-draft: the same dense weights re-packed at the draft's
+    (sparsity, bits) point — optionally layer-truncated — used by the
+    speculative decode path. The draft is part of the artifact identity
+    (registry key + name), never a mutation of a cached target."""
 
     name: str
     cfg: T.ModelConfig
@@ -85,10 +91,25 @@ class PackedModel:
     n_packed: int                   # projections converted to PackedLinear
     packed_bytes: int               # serving bytes of the packed projections
     dense_bytes: int                # training bytes of the same projections
+    draft_spec: Any = None          # speculative.DraftSpec or None
+    draft_cfg: Optional[T.ModelConfig] = None
+    draft_params: Optional[Dict[str, Any]] = None
+    draft_packed: int = 0           # projections packed in the draft tree
 
     @property
     def compression(self) -> float:
         return self.dense_bytes / max(1, self.packed_bytes)
+
+    @property
+    def has_draft(self) -> bool:
+        return self.draft_params is not None
+
+    def draft_cost_fraction(self) -> float:
+        """Analytic draft/target FLOPs-per-token ratio (speculative)."""
+        from repro.serve import speculative as SP
+        if not self.has_draft:
+            return 1.0
+        return SP.draft_cost_fraction(self.cfg, self.draft_cfg)
 
     def pspecs(self, mesh) -> Any:
         """Parameter PartitionSpec tree for serving this artifact on `mesh`
@@ -114,17 +135,23 @@ class ModelRegistry:
 
     def load(self, arch: str, spec: Optional[kr.KratosSpec] = None, *,
              params: Optional[Dict[str, Any]] = None, seed: int = 0,
-             name: Optional[str] = None, smoke: bool = True) -> PackedModel:
+             name: Optional[str] = None, smoke: bool = True,
+             draft_spec=None) -> PackedModel:
         """Load (or return the cached) packed model for (arch, spec).
 
         params: trained parameter tree; freshly initialized when omitted
         (benchmarks/tests). smoke=True uses the reduced CPU config.
+        draft_spec (speculative.DraftSpec): ALSO derive a self-draft
+        artifact from the same dense weights — required by
+        `EngineConfig.speculate`. The draft spec is part of the cache key
+        AND the default name (`_spec_tag`), so a drafted and an undrafted
+        artifact of the same (arch, spec) never collide in `get`.
         """
         getter = C.get_smoke if smoke else C.get_config
         cfg = getter(arch)
         spec = cfg.kratos if spec is None else spec
         cfg = dataclasses.replace(cfg, kratos=spec)
-        key = (arch, spec, smoke, seed)
+        key = (arch, spec, smoke, seed, draft_spec)
         if key in self._models and params is None:
             return self._models[key]
         if params is None:
@@ -134,18 +161,24 @@ class ModelRegistry:
             p["w"] for p in _iter_packable(params)]
         dense_bytes = sum(int(np.prod(w.shape)) * w.dtype.itemsize
                           for w in dense_leaves)
+        draft = {}
+        if draft_spec is not None:
+            from repro.serve import speculative as SP
+            dcfg, dparams, dn = SP.derive_draft(params, cfg, spec, draft_spec)
+            draft = dict(draft_spec=draft_spec, draft_cfg=dcfg,
+                         draft_params=dparams, draft_packed=dn)
         packed, n_packed = pack_model_params(params, spec)
         if n_packed == 0:
             raise ValueError(f"{arch}: no packable projections found — "
                              "packed serving would be a no-op")
         packed_bytes = sum(pl.packed_bytes for pl in _iter_packed(packed))
-        default_name = (f"{arch}@{_spec_tag(spec)}"
+        default_name = (f"{arch}@{_spec_tag(spec, draft_spec)}"
                         + ("" if smoke else "-full")
                         + (f"#s{seed}" if seed else ""))
         model = PackedModel(
             name=name or default_name, cfg=cfg, params=packed,
             spec=spec, n_packed=n_packed, packed_bytes=packed_bytes,
-            dense_bytes=dense_bytes)
+            dense_bytes=dense_bytes, **draft)
         self._models[key] = model
         self._by_name[model.name] = model
         return model
@@ -162,11 +195,16 @@ class ModelRegistry:
         return len(self._by_name)
 
 
-def _spec_tag(spec: kr.KratosSpec) -> str:
-    bits = "bf16" if spec.bits is None else f"w{spec.bits}"
-    if spec.act_bits:
-        bits += f"a{spec.act_bits}"
-    return f"s{spec.sparsity:g}-{bits}-{spec.impl}"
+def _spec_tag(spec: kr.KratosSpec, draft_spec=None) -> str:
+    """Artifact-identity tag: every field that changes the serving buffers.
+
+    The draft-spec fields are INCLUDED when present — a drafted artifact
+    and its plain twin are different serving models and must never collide
+    under one name in `Registry.get`."""
+    tag = kr.spec_tag(spec.sparsity, spec.bits, spec.act_bits, spec.impl)
+    if draft_spec is not None:
+        tag += f"+draft[{draft_spec.tag}]"
+    return tag
 
 
 def _iter_packable(params):

@@ -86,7 +86,8 @@ class ReplicaRouter:
                     temperature=kw.pop("temperature", 0.0),
                     eos_id=kw.pop("eos_id", None),
                     extras=kw.pop("extras", None),
-                    on_token=kw.pop("on_token", None))
+                    on_token=kw.pop("on_token", None),
+                    speculate=kw.pop("speculate", None))
         if kw:
             raise TypeError(f"unknown submit kwargs: {sorted(kw)}")
         self.requests.append(r)

@@ -50,6 +50,11 @@ class Request:
     eos_id: Optional[int] = None
     extras: Optional[Dict[str, Any]] = None  # frames / img_embeds (B=1 lead)
     on_token: Optional[Callable[["Request", int], None]] = None  # streaming
+    # per-request speculation cap: max draft tokens acceptable per dispatch
+    # on a speculating engine (None = the engine's K; 0 = opt out — the slot
+    # runs exactly one plain target step per cycle). No effect when the
+    # engine isn't speculating.
+    speculate: Optional[int] = None
 
     # engine-managed
     state: str = "waiting"                  # waiting | running | done

@@ -1,0 +1,208 @@
+"""Speculative decode: the Kratos grid as a SELF-DRAFT axis.
+
+The paper's central result is that fine-grained sparsity and low bit-width
+preserve a model's function while cutting its weight traffic and FLOPs —
+which is exactly the recipe for a cheap draft model. A *self-draft* is the
+SAME trained weights re-packed through `core/quantize` + `core/sparsity` at
+a more aggressive (sparsity, bits) point (optionally truncated to a leading
+layer prefix): the draft proposes K tokens with the cheap artifact, the
+full-precision target verifies the whole K-block in one batched forward,
+and per-slot accept/reject masking commits the longest agreeing prefix plus
+one target-sampled bonus token. Correctness never depends on the draft —
+greedy speculative decode is token-identical to plain decode for any draft,
+and temperature>0 uses the standard rejection-sampling correction so the
+committed stream is still distributed exactly as the target.
+
+What lives here (the registry/policy side of the subsystem):
+
+  DraftSpec        how to derive the draft artifact from the target: weight
+                   bits, sparsity (block geometry inherited from the target
+                   spec unless overridden), optional `keep_layers` layer
+                   truncation, optional draft KV-cache dtype.
+  derive_draft     dense params + target spec + DraftSpec -> (draft config,
+                   packed draft tree). Called by `ModelRegistry.load(...,
+                   draft_spec=...)`; the draft shares the target's embed /
+                   final-norm / head so its logit geometry matches.
+  draft_cost_fraction  analytic draft/target FLOPs-per-token ratio (layer
+                   fraction x (1 - sparsity) on the 'tree' impl) — reported
+                   by ServeMetrics as `draft_verify_flop_ratio`.
+  check_supported  archs whose KV rollback is free vs impossible: a rolled-
+                   back slot just rewinds its per-slot index clock (stale
+                   positions are masked and later overwritten), EXCEPT
+                   circular sliding-window caches, where the speculative
+                   writes would evict still-valid history — those are
+                   refused with an explanation rather than silently wrong.
+
+The execution side — the fused propose-then-verify step, per-slot
+accepted-length vectors, recurrent-state (SSM) snapshot/rollback — lives in
+`distributed.steps.make_speculative_decode_step`; the slab/slot plumbing in
+`serve.backend`; the `speculate=K` knobs in `serve.engine` /
+`serve.scheduler.Request`.
+
+Slot-clock sharing: the draft slab is a second `CachePool` with the SAME
+slot assignment and the SAME per-slot index vector as the target slab
+(`steps.make_decode_state`). At every dispatch boundary the two clocks are
+equal by construction — the draft consumed exactly the committed prefix —
+so no extra per-slot draft state exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import kratos as kr
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """How to derive a self-draft artifact from the target weights.
+
+    bits / sparsity / impl / act_bits mirror `kratos.KratosSpec` but apply
+    to the DRAFT repack only; bk/bn default to the target spec's block
+    geometry (None = inherit). keep_layers truncates the draft to the first
+    `keep_layers` layers (must keep the whole prelude plus a whole number
+    of scan periods); the truncated draft still shares the target's embed,
+    final norm and head, so the logit spaces align. cache_dtype overrides
+    the draft KV slab dtype (None = the engine's cache dtype).
+    """
+
+    bits: Optional[int] = 8
+    sparsity: float = 0.0
+    impl: str = "tree"
+    act_bits: Optional[int] = None
+    bk: Optional[int] = None           # None -> inherit from target spec
+    bn: Optional[int] = None
+    keep_layers: Optional[int] = None  # None -> full depth
+    cache_dtype: Optional[str] = None  # None -> engine cache dtype
+
+    def __post_init__(self):
+        if self.keep_layers is not None and self.keep_layers < 1:
+            raise ValueError(f"keep_layers must be >= 1, got "
+                             f"{self.keep_layers}")
+
+    @classmethod
+    def from_args(cls, bits: int, sparsity: float,
+                  keep_layers: int) -> "DraftSpec":
+        """The shared CLI policy (launch/serve.py --draft-*, serve_bench
+        --draft-*): bits=0 means native precision, any sparsity uses the
+        8x8 block grid every smoke d_model divides, keep_layers=0 keeps
+        full depth."""
+        return cls(bits=bits or None, sparsity=sparsity,
+                   bk=8 if sparsity else None, bn=8 if sparsity else None,
+                   keep_layers=keep_layers or None)
+
+    def kratos_spec(self, base: kr.KratosSpec) -> kr.KratosSpec:
+        """The KratosSpec the draft packs with (geometry from `base`)."""
+        return dataclasses.replace(
+            base, bits=self.bits, sparsity=self.sparsity, impl=self.impl,
+            act_bits=self.act_bits,
+            bk=self.bk if self.bk is not None else base.bk,
+            bn=self.bn if self.bn is not None else base.bn)
+
+    @property
+    def tag(self) -> str:
+        """Registry-name fragment — every field that changes the artifact
+        (shared base formatter with registry._spec_tag, plus the
+        draft-only fields: block geometry overrides, layer truncation,
+        cache dtype)."""
+        t = kr.spec_tag(self.sparsity, self.bits, self.act_bits, self.impl)
+        if self.bk is not None or self.bn is not None:
+            t += f"-b{self.bk or 'i'}x{self.bn or 'i'}"   # 'i' = inherited
+        if self.keep_layers is not None:
+            t += f"-l{self.keep_layers}"
+        if self.cache_dtype:
+            t += f"-c{self.cache_dtype}"
+        return t
+
+
+def draft_config(cfg: T.ModelConfig, dspec: DraftSpec,
+                 base_spec: kr.KratosSpec) -> T.ModelConfig:
+    """The draft's ModelConfig: target arch at the draft Kratos point,
+    optionally truncated to a leading layer prefix."""
+    n = cfg.n_layers
+    if dspec.keep_layers is not None:
+        n = dspec.keep_layers
+        prelude, period = cfg.prelude_layers, cfg.scan_period
+        if n > cfg.n_layers:
+            raise ValueError(f"keep_layers={n} > n_layers={cfg.n_layers}")
+        if n < prelude + period or (n - prelude) % period:
+            raise ValueError(
+                f"keep_layers={n} must keep the {prelude}-layer prelude "
+                f"plus a whole number of scan periods (period={period})")
+    return dataclasses.replace(cfg, n_layers=n,
+                               kratos=dspec.kratos_spec(base_spec))
+
+
+def truncate_layers(params: Dict[str, Any], cfg: T.ModelConfig,
+                    draft_cfg: T.ModelConfig) -> Dict[str, Any]:
+    """Keep the first draft_cfg.n_layers layers of a parameter tree.
+
+    The prelude list is untouched (truncation below the prelude is rejected
+    by `draft_config`); each scanned slot stack keeps its first
+    (n_layers - prelude) / scan_period entries. Embed / final norm / head /
+    encoder stacks are shared with the target unchanged.
+    """
+    m = (draft_cfg.n_layers - cfg.prelude_layers) // cfg.scan_period
+    out = dict(params)
+    out["blocks"] = [jax.tree_util.tree_map(lambda l: l[:m], slot)
+                     for slot in params["blocks"]]
+    return out
+
+
+def derive_draft(params: Dict[str, Any], cfg: T.ModelConfig,
+                 target_spec: kr.KratosSpec, dspec: DraftSpec,
+                 ) -> Tuple[T.ModelConfig, Dict[str, Any], int]:
+    """(draft config, packed draft tree, n packed) from DENSE target params.
+
+    The draft is packed from the same dense weights the target artifact was
+    packed from — `pack_model_params` with the draft KratosSpec — so the two
+    artifacts are two points on the paper's (sparsity, precision) grid over
+    one set of trained weights.
+    """
+    from repro.serve.registry import pack_model_params   # deferred: cycle
+    dcfg = draft_config(cfg, dspec, target_spec)
+    dparams = params
+    if dcfg.n_layers < cfg.n_layers:
+        dparams = truncate_layers(params, cfg, dcfg)
+    packed, n = pack_model_params(dparams, dcfg.kratos)
+    if n == 0:
+        raise ValueError("draft spec packs no projections — a draft that "
+                         "serves dense training weights is not a draft")
+    return dcfg, packed, n
+
+
+def draft_cost_fraction(cfg: T.ModelConfig, draft_cfg: T.ModelConfig) -> float:
+    """Analytic draft/target FLOPs-per-token ratio (the metrics'
+    `draft_verify_flop_ratio`): active params scaled by the 'tree' impl's
+    (1 - sparsity) compute discount. Quantization changes bytes, not FLOPs,
+    so bits don't enter."""
+    def cost(c: T.ModelConfig) -> float:
+        s = c.kratos
+        frac = (1.0 - s.sparsity) if (s.sparsity and s.impl == "tree") else 1.0
+        return 2.0 * c.active_param_count() * frac
+    return cost(draft_cfg) / max(1.0, cost(cfg))
+
+
+def check_supported(cfg: T.ModelConfig, cache_len: int) -> None:
+    """Refuse archs whose KV layout cannot roll back.
+
+    Rollback after a rejected draft suffix is a per-slot index rewind: the
+    stale cache positions are masked by the per-slot validity clocks and
+    later overwritten in place. That argument fails for CIRCULAR
+    sliding-window caches (window < allocated positions): the speculative
+    writes at positions index..index+K land on slots (pos % W) that still
+    hold live history from positions pos - W, and rewinding the clock
+    cannot resurrect what was evicted. Windowed archs whose window covers
+    the whole padded slab never wrap and are fine.
+    """
+    if cfg.window is not None and cfg.window < cache_len:
+        raise ValueError(
+            f"speculative decode unsupported: sliding-window cache "
+            f"(window={cfg.window} < {cache_len} positions) is circular — "
+            f"rolling back rejected draft tokens would need the history "
+            f"their writes evicted. Serve with max_len + K <= window, or "
+            f"without speculation.")

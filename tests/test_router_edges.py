@@ -1,0 +1,116 @@
+"""ReplicaRouter edge cases (PR 4 satellite): empty fleet, all-saturated
+overflow drain, single-replica no-op rebalance, steal_waiting/adopt
+boundaries."""
+
+import numpy as np
+import pytest
+
+from repro.serve import (EngineConfig, EngineSaturated, InferenceEngine,
+                         ModelRegistry, ReplicaRouter)
+
+ARCH = "h2o-danube-1.8b"
+_REGISTRY = ModelRegistry()
+
+
+def _model():
+    return _REGISTRY.load(ARCH)
+
+
+def _prompt(model, n=4, seed=0):
+    return np.random.default_rng(seed).integers(0, model.cfg.vocab, n)
+
+
+def test_empty_fleet_is_rejected():
+    with pytest.raises(ValueError, match="at least one replica"):
+        ReplicaRouter([])
+
+
+def test_all_saturated_fleet_parks_then_drains_overflow():
+    """Every replica's bounded deque full: the submit parks in the router's
+    overflow deque (counted once, no extra spills on retry rounds) and
+    drains into the first replica with queue headroom."""
+    m = _model()
+    router = ReplicaRouter.build(
+        m, EngineConfig(n_slots=1, max_len=24, max_waiting=1), 2)
+    # before any step runs, fleet admission capacity is the 2 bounded
+    # deques (slots fill only at step time): submits 3..5 all park
+    reqs = [router.submit(_prompt(m), 3) for _ in range(5)]
+    assert router.overflowed == 3
+    assert len(router._overflow) == 3
+    spills_before = router.spills
+    router.step()        # a still-saturated retry round must not re-spill
+    assert router.spills == spills_before
+    router.run()
+    assert all(len(r.generated) == 3 for r in reqs)
+    assert len(router._overflow) == 0
+    rep = router.report()
+    assert rep["requests_completed"] == 5.0
+    assert rep["overflowed"] == 3.0
+
+
+def test_all_saturated_without_hold_raises():
+    m = _model()
+    router = ReplicaRouter.build(
+        m, EngineConfig(n_slots=1, max_len=24, max_waiting=0), 1,
+        hold_overflow=False)
+    with pytest.raises(EngineSaturated):
+        router.submit(_prompt(m), 3)
+    assert router.requests == []         # the failed submit is not tracked
+
+
+def test_single_replica_rebalance_is_a_noop():
+    """One replica with a backed-up queue: the rebalancer has no sibling to
+    donate to and must leave the queue intact (no self-moves, no counter
+    drift, no request loss)."""
+    m = _model()
+    router = ReplicaRouter.build(m, EngineConfig(n_slots=1, max_len=24), 1)
+    reqs = [router.submit(_prompt(m), 3) for _ in range(4)]
+    assert router.replicas[0].n_waiting > router.replicas[0].pool.n_free
+    router._rebalance()
+    assert router.rebalanced == 0
+    assert router.replicas[0].n_waiting + router.replicas[0].pool.n_active \
+        == 4
+    router.run()
+    assert all(len(r.generated) == 3 for r in reqs)
+
+
+def test_steal_waiting_edge_cases():
+    m = _model()
+    eng = InferenceEngine(m, EngineConfig(n_slots=1, max_len=24))
+    assert eng.steal_waiting(3) == []            # nothing queued: empty, not error
+    reqs = [eng.submit(_prompt(m), 2, arrival_step=9) for _ in range(3)]
+    # ask for more than exists: returns what's there, arrival order kept
+    stolen = eng.steal_waiting(99)
+    assert stolen == reqs
+    assert eng.n_waiting == 0 and eng.requests == {}
+    assert all(r.id == -1 for r in stolen)       # de-registered handles
+    assert eng.steal_waiting(1) == []            # drained deque
+
+
+def test_adopt_rehomes_stolen_requests_and_validates():
+    """adopt() re-registers a stolen Request under a fresh id on the new
+    engine (the caller's handle object survives) and still enforces the
+    admission bounds."""
+    m = _model()
+    src = InferenceEngine(m, EngineConfig(n_slots=1, max_len=24))
+    dst = InferenceEngine(m, EngineConfig(n_slots=1, max_len=24))
+    r = src.submit(_prompt(m), 2, arrival_step=0)
+    [stolen] = src.steal_waiting(1)
+    assert stolen is r
+    adopted = dst.adopt(stolen)
+    assert adopted is r and r.id >= 0
+    assert dst.requests[r.id] is r
+    dst.run()
+    assert len(r.generated) == 2
+    # adopt still validates: an oversized request is refused on a
+    # length-bounded arch (full attention; SWA caches are circular and
+    # serve past the slab), a full bounded deque raises EngineSaturated
+    full = _REGISTRY.load("nemotron-4-340b")
+    big = InferenceEngine(full, EngineConfig(n_slots=1, max_len=8))
+    with pytest.raises(ValueError):
+        big.submit(_prompt(full, n=6), 8)
+    tight = InferenceEngine(m, EngineConfig(n_slots=1, max_len=24,
+                                            max_waiting=0))
+    with pytest.raises(EngineSaturated):
+        tight.submit(_prompt(m), 2)
+    assert tight.metrics.rejected == 1
