@@ -1,0 +1,98 @@
+"""Prefix-cached paged serving end-to-end: a chat fleet sharing one system
+prompt.
+
+The canonical shape prefix reuse exists for: every request carries the SAME
+long system prompt followed by a short unique user turn. The demo serves
+the trace twice through the same packed model — once with the slab pool
+(every admission prefills the whole prompt), once with the paged pool +
+radix prefix index (`EngineConfig.page_size`): the first admission prefills
+and PUBLISHES the system prompt's pages, every later admission matches
+them, bumps their refcounts, and prefills only its user suffix. The demo
+prints, per run: admitted tokens per second, the prefix hit rate, how many
+prompt tokens were never prefilled (and the FLOPs that saved), the
+page-pool occupancy, and each request's matched length. It then verifies
+greedy token-identity: sharing must not change one token.
+
+  PYTHONPATH=src python examples/serve_prefix.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.serve import EngineConfig, InferenceEngine, ModelRegistry
+
+ARCH = "nemotron-4-340b"           # full-attention transformer smoke config
+N_SLOTS, PAGE = 4, 8
+SYS_LEN, N_TURNS = 96, 8           # one system prompt, 8 user questions
+MAX_LEN = SYS_LEN + 16 + 16
+
+
+def build_trace(vocab: int):
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, vocab, SYS_LEN)
+    trace = []
+    for i in range(N_TURNS):
+        user = rng.integers(0, vocab, int(rng.integers(4, 12)))
+        trace.append((np.concatenate([system, user]), 12, i))
+    return trace
+
+
+def run(model, trace, **kw):
+    engine = InferenceEngine(
+        model, EngineConfig(n_slots=N_SLOTS, max_len=MAX_LEN,
+                            decode_chunk=2, **kw))
+    # first replay warms: jit compiles (one per suffix length on the paged
+    # side) AND the radix tree; the timed replay is the steady state a
+    # long-running chat fleet lives in
+    reqs = [engine.submit(p, g, arrival_step=a) for p, g, a in trace]
+    engine.run()
+    t0 = time.time()
+    off = engine.step_count + 1
+    reqs2 = [engine.submit(p, g, arrival_step=a + off) for p, g, a in trace]
+    engine.run()
+    dt = max(time.time() - t0, 1e-9)
+    admitted = sum(len(p) + g for p, g, _ in trace)
+    return [r.generated for r in reqs2], engine, admitted / dt, reqs2
+
+
+def main() -> None:
+    registry = ModelRegistry()
+    model = registry.load(ARCH)
+    trace = build_trace(model.cfg.vocab)
+    print(f"[prefix] {model.name}: {N_TURNS} chat turns sharing a "
+          f"{SYS_LEN}-token system prompt (+4-11 token user suffixes)")
+
+    slab, slab_eng, slab_tps, _ = run(model, trace)
+    paged, paged_eng, paged_tps, reqs = run(model, trace, page_size=PAGE)
+
+    rep = paged_eng.metrics.report()
+    flops_saved = 2.0 * model.cfg.active_param_count() \
+        * rep["prefill_tokens_skipped"]
+    print(f"[prefix] slab : {slab_tps:8.1f} admitted tok/s "
+          f"(every prompt fully prefilled)")
+    print(f"[prefix] paged: {paged_tps:8.1f} admitted tok/s | hit rate "
+          f"{rep['prefix_hit_rate']:.2f} | {int(rep['prefill_tokens_skipped'])}"
+          f" prompt toks never prefilled ({rep['prefill_skip_fraction']:.0%}"
+          f" of all prompt tokens, ~{flops_saved / 1e9:.2f} GFLOPs) | pages "
+          f"{rep['pages_in_use']:.1f}/{paged_eng.pool.n_usable_pages} "
+          f"({rep['page_occupancy']:.2f} full)")
+    print("[prefix] per-request matched prefix:")
+    for r in reqs:
+        print(f"    req{r.id}: matched {r.prefix_matched:3d} of "
+              f"{len(r.prompt)} prompt tokens"
+              + ("  <- first admission publishes the prefix"
+                 if r.prefix_matched == 0 else ""))
+
+    assert slab == paged, "prefix sharing changed greedy output!"
+    print(f"[prefix] greedy outputs token-identical; "
+          f"{paged_tps / slab_tps:.2f}x admitted throughput "
+          f"({paged_eng.pool.describe()['n_pages']} pages x {PAGE} positions"
+          f" vs {N_SLOTS} x {MAX_LEN}-position slab rows)")
+
+
+if __name__ == "__main__":
+    main()

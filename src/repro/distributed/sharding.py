@@ -300,6 +300,40 @@ def cache_pspecs(caches, mesh: Mesh, batch_size: int, *,
     return jax.tree_util.tree_map_with_path(one, caches)
 
 
+def page_pspecs(caches, layout, mesh: Mesh, n_pages: int) -> list:
+    """PartitionSpecs for a PAGE-MAJOR KV store (serve.paging).
+
+    `caches` is the slab template (`T.make_caches(cfg, n_slots, cache_len)`
+    shapes), `layout` a `serve.paging.PageLayout` over it. Paged leaves
+    shard their leading PAGE axis exactly like the slab shards its slot
+    axis (`batch_pspec(mesh, n_pages)` — replicated fallback when the page
+    count doesn't divide the dp axes, so the donated paged decode step
+    always has a legal placement); the rest of a paged leaf's spec is the
+    slab rule (`cache_pspecs(slab=True)`) with the slot and sequence
+    entries removed — kv-heads stay on 'model', the page-interior position
+    axis is never sharded (every page is written at dynamic offsets).
+    Resident leaves keep their slab spec unchanged. Returns a flat list
+    aligned with the store's leaf order.
+    """
+    slab_specs = jax.tree_util.tree_leaves(
+        cache_pspecs(caches, mesh, layout.n_slots, slab=True),
+        is_leaf=lambda x: isinstance(x, P))
+    page_entry = tuple(batch_pspec(mesh, n_pages)) or (None,)
+    out = []
+    store_shapes = layout.store_shapes(n_pages)
+    for spec, slab_shape, store_shape, ls in zip(
+            slab_specs, layout.slab_shapes, store_shapes, layout.specs):
+        if not ls.paged:
+            out.append(spec)
+            continue
+        ent = list(spec) + [None] * (len(slab_shape) - len(spec))
+        del ent[ls.batch_axis]
+        ent[-2] = None                     # page interior: never sharded
+        out.append(_sanitize_spec(P(*(page_entry + tuple(ent))),
+                                  store_shape, mesh))
+    return out
+
+
 def batch_pspec(mesh: Mesh, batch_size: int) -> P:
     """Batch-axis spec: the combined ('pod','data') tuple when the batch
     divides the FULL mesh (so downstream reshapes can re-split it over any

@@ -296,6 +296,113 @@ def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode: page-table indirection around the same fused steps
+# ---------------------------------------------------------------------------
+
+def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
+                           n_steps: int, layout):
+    """Paged form of the device-resident loop (serve.paging):
+
+        decode(params, store, page_table, state)
+            -> (tok_block, store, page_table, state)
+
+    `store` is the page-major KV store (flat leaf list), `page_table` the
+    (n_slots, pages_per_slot) int32 table — BOTH donated device state, like
+    the slab and the loop state today. Inside the one dispatch: gather each
+    slot's pages into exactly the slab layout (`layout.gather` slices the
+    view to cache_len, so the inner step compiles the very same program the
+    unpaged slab runs — that is what makes paged greedy decode
+    token-identical), run the unchanged K-micro-step fused decode, scatter
+    the touched pages back. The table passes through unchanged (admission
+    and slot release update it between dispatches); returning it keeps it
+    aliased to its donated buffer so it stays device-resident."""
+    inner = make_decode_step(cfg, backend, n_steps=n_steps)
+
+    def decode(params, store, page_table, state):
+        caches = layout.gather(store, page_table)
+        tok_block, caches, state = inner(params, caches, state)
+        return (tok_block, layout.scatter(store, page_table, caches),
+                page_table, state)
+
+    return decode
+
+
+def make_paged_speculative_decode_step(cfg: T.ModelConfig,
+                                       draft_cfg: T.ModelConfig,
+                                       backend: str = "ref", *,
+                                       n_draft: int, layout):
+    """Paged form of the fused propose-then-verify cycle:
+
+        spec_decode(params, draft_params, store, page_table, draft_caches,
+                    state) -> (commit, n_commit, n_accept, store,
+                               page_table, draft_caches, state)
+
+    Only the TARGET slab is paged (it is the memory that scales with
+    prompts; the draft slab is small by construction and keeps the plain
+    slab layout + slot clocks). Rollback semantics survive paging for free:
+    a rejected suffix is a per-slot index rewind that never frees a page,
+    and the speculative write headroom lands in the slot's PRIVATE tail
+    pages (prefix sharing only ever publishes full prompt pages), so a
+    rolled-back write can never have touched a shared page."""
+    inner = make_speculative_decode_step(cfg, draft_cfg, backend,
+                                         n_draft=n_draft)
+
+    def spec_decode(params, draft_params, store, page_table, draft_caches,
+                    state):
+        caches = layout.gather(store, page_table)
+        commit, m, acc, caches, draft_caches, state = inner(
+            params, draft_params, caches, draft_caches, state)
+        return (commit, m, acc, layout.scatter(store, page_table, caches),
+                page_table, draft_caches, state)
+
+    return spec_decode
+
+
+def make_suffix_prefill_step(cfg: T.ModelConfig, backend: str = "ref", *,
+                             layout):
+    """Prefill ONLY the unmatched suffix of a prompt whose prefix pages are
+    already resident (serve.paging prefix reuse):
+
+        prefill(params, batch, store, page_table, slot, index)
+            -> ((1, S, vocab) suffix logits, store)
+
+    Gathers the slot's batch-1 view (the shared prefix pages supply
+    positions < index), runs the suffix through the DECODE-form forward —
+    the same s>1 contiguous block write the speculative verify uses
+    (attention._decode_cache_write / mla_apply with a scalar `index`), so
+    suffix tokens attend to the cached prefix under the standard validity
+    masks — and scatters the view back: fresh suffix pages receive the new
+    KV, shared prefix pages receive back the identical values they
+    supplied. `index` is the matched prefix length (traced). The engine
+    right-pads suffixes into pow2 buckets exactly like full prefills
+    (compile O(log max_len) suffix shapes, not one per length — real
+    traffic produces arbitrary suffix lengths); the FULL (1, S, vocab)
+    logits come back so the caller reads the true suffix-end column, and
+    the padded tail's block writes land past the shared region in the
+    slot's private pages, masked by the validity clocks until decode
+    overwrites them — the same contract as the slab's padded prefill
+    tail."""
+    cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
+
+    def prefill(params, batch, store, page_table, slot, index):
+        row = jax.lax.dynamic_index_in_dim(page_table, slot, axis=0,
+                                           keepdims=False)
+        caches = layout.gather_one(store, row, slot)
+        logits, _, caches = T.forward(
+            params, batch["tokens"], cfg, backend=backend, caches=caches,
+            index=index)
+        return logits, layout.scatter_one(store, row, slot, caches)
+
+    return prefill
+
+
+def page_table_pspec(mesh, n_slots: int) -> PartitionSpec:
+    """(n_slots, pages_per_slot) table: slot axis sharded like the slab's
+    slot axis / the decode-state vectors, page entries replicated."""
+    return PartitionSpec(*(tuple(batch_pspec(mesh, n_slots)) + (None,)))
+
+
+# ---------------------------------------------------------------------------
 # Speculative decode: fused propose-then-verify (serve.speculative)
 # ---------------------------------------------------------------------------
 

@@ -6,7 +6,17 @@
       [--temperature 0.8] \
       [--speculate 4 --draft-bits 8 [--draft-sparsity S] \
        [--draft-keep-layers N]] \
+      [--page-size P [--n-pages N] [--no-prefix-cache]] \
       [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run]
+
+Paged KV + prefix reuse: `--page-size P` switches the KV pool to the
+block-paged form (serve.paging) — per-slot page tables over refcounted
+fixed-size pages — with the radix prefix index on by default where the
+arch supports it: admissions sharing a cached prompt prefix skip its
+prefill and share its pages. `--n-pages N` sizes the pool (default:
+slab-equivalent capacity); the engine report prints the prefix hit rate,
+prefill tokens skipped, and page occupancy to steer P by (smaller pages =
+finer sharing granularity + more table entries; start at 8-16).
 
 Speculative decode: `--speculate K` derives a SELF-DRAFT artifact (the same
 weights re-packed at the --draft-* Kratos point, serve.speculative) and
@@ -62,25 +72,57 @@ def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
     caches = jax.eval_shape(
         lambda: T.make_caches(model.cfg, cfg.n_slots, cache_len))
     cache_specs = SH.cache_pspecs(caches, mesh, cfg.n_slots, slab=True)
-    print(f"[dry-run] KV slab leaves ({cfg.n_slots} slots x "
-          f"{cache_len} positions"
-          + (f" = max_len + K={cfg.speculate} headroom" if cfg.speculate
-             else "") + "):")
-    for path, spec in jax.tree_util.tree_leaves_with_path(
-            cache_specs, is_leaf=lambda x: isinstance(
-                x, jax.sharding.PartitionSpec)):
-        print(f"    {jax.tree_util.keystr(path):48s} {spec}")
+    if not cfg.page_size:
+        print(f"[dry-run] KV slab leaves ({cfg.n_slots} slots x "
+              f"{cache_len} positions"
+              + (f" = max_len + K={cfg.speculate} headroom" if cfg.speculate
+                 else "") + "):")
+        for path, spec in jax.tree_util.tree_leaves_with_path(
+                cache_specs, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec)):
+            print(f"    {jax.tree_util.keystr(path):48s} {spec}")
     print("[dry-run] decode state vectors:")
     for k, spec in ST.decode_state_pspecs(mesh, cfg.n_slots).items():
         print(f"    {k:48s} {spec}")
     backend = ShardedBackend(mesh=mesh)
     backend.build(model, cfg)
+    if cfg.page_size:
+        # resolved page-pool geometry: what the slab stride turned into
+        pool = backend.pool
+        d = pool.describe()
+        print(f"[dry-run] page pool: {d['n_pages']} pages x "
+              f"{d['page_size']} positions ({d['pages_per_slot']}/slot x "
+              f"{cfg.n_slots} slots"
+              + (f", + K={cfg.speculate} headroom in the last page(s)"
+                 if cfg.speculate else "")
+              + f"), {d['bytes'] / 1e6:.2f} MB, prefix cache "
+              + ("ON" if d["prefix_cache"] else
+                 "OFF (arch cache state not purely positional)"))
+        print("[dry-run] page-store leaves (paged = page-major; resident = "
+              "slot-major slab layout):")
+        for leaf, spec in zip(pool.layout.specs, pool.shardings):
+            kind = "paged   " if leaf.paged else "resident"
+            print(f"    {leaf.name:40s} {kind} {spec.spec}")
+        print(f"    {'page_table':40s} table    "
+              f"{pool.table_sharding.spec}")
     if cfg.speculate:
         # the step that will actually dispatch: fused propose-then-verify
-        compiled = backend._spec_decode.lower(
-            backend.params, backend.draft_params, backend.pool.caches,
-            backend.draft_pool.caches, backend.state).compile()
+        if cfg.page_size:
+            compiled = backend._spec_decode.lower(
+                backend.params, backend.draft_params, backend.pool.store,
+                backend.pool.page_table, backend.draft_pool.caches,
+                backend.state).compile()
+        else:
+            compiled = backend._spec_decode.lower(
+                backend.params, backend.draft_params, backend.pool.caches,
+                backend.draft_pool.caches, backend.state).compile()
         label = f"speculative step (K={cfg.speculate}, draft replicated)"
+    elif cfg.page_size:
+        compiled = backend._decode.lower(
+            backend.params, backend.pool.store, backend.pool.page_table,
+            backend.state).compile()
+        label = f"paged decode step (K={cfg.decode_chunk}, " \
+                f"page={cfg.page_size})"
     else:
         compiled = backend._decode.lower(
             backend.params, backend.pool.caches, backend.state).compile()
@@ -127,6 +169,16 @@ def main() -> None:
                     help="draft sparsity for --speculate (bk=bn=8 blocks)")
     ap.add_argument("--draft-keep-layers", type=int, default=0,
                     help="truncate the draft to its first N layers (0=all)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="block-paged KV pool with P positions per page "
+                         "(0 = slab); enables cross-request prefix reuse "
+                         "where the arch supports it")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool size for --page-size (0 = slab-"
+                         "equivalent: slots x pages_per_slot + sink)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged pool without the radix prefix index "
+                         "(paging only: no cross-request sharing)")
     ap.add_argument("--mesh", default="",
                     help="'data,model' sizes: serve through ShardedBackend "
                          "on a local mesh of that shape")
@@ -168,7 +220,10 @@ def main() -> None:
                        device_loop=not args.host_loop,
                        decode_chunk=args.decode_chunk,
                        speculate=args.speculate,
-                       max_waiting=args.max_waiting or None)
+                       max_waiting=args.max_waiting or None,
+                       page_size=args.page_size or None,
+                       n_pages=args.n_pages or None,
+                       prefix_cache=not args.no_prefix_cache)
     mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
 
     if args.dry_run:

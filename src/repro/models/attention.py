@@ -14,6 +14,15 @@ All projections are Kratos-able. Caches:
                   long_500k cell feasible for SWA archs
   MLA:            compressed c_kv (B, S, r) + shared rotary key (B, S, dr):
                   O(S * (r + dr)) instead of O(S * 2 * H * dh)
+
+Paged serving (serve.paging): the block-paged KV pool stores full-window and
+MLA caches page-major behind per-slot page tables, and its compiled steps
+GATHER each slot's pages back into exactly these layouts before calling in
+here — so every read below already went through page-table indirection, and
+the per-slot positional validity masks this module computes are what keep
+unallocated table tail entries (the shared garbage sink page) inert, the
+same way they keep the slab's unwritten tail inert. Nothing in this module
+knows about pages; the layout contract above IS the paging contract.
 """
 
 from __future__ import annotations
@@ -318,13 +327,18 @@ def _prefill_cache(cache, k, v, cfg: AttnConfig):
 def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
     """Write s token(s) at `index`..; return (cache, kv_positions, valid).
 
-    s > 1 is the speculative-verify block write (distributed.steps): the s
-    positions land contiguously from `index` and validity extends to the
-    LAST written position (causality still limits what each query row of
-    the block sees). Multi-token writes into a WRAPPING circular window
-    cache are unsupported (dynamic_update_slice cannot wrap) — the
-    speculative path refuses those archs (serve.speculative.check_supported)
-    and pads the slab so in-range writes never clamp.
+    s > 1 is the contiguous block write: the speculative-verify block
+    (distributed.steps.make_speculative_decode_step) and the prefix-reuse
+    SUFFIX PREFILL (steps.make_suffix_prefill_step — a prompt whose prefix
+    KV is already resident lands its unmatched suffix here, batch-1 with a
+    scalar `index` = matched length). The s positions land contiguously
+    from `index` and validity extends to the LAST written position
+    (causality still limits what each query row of the block sees).
+    Multi-token writes into a WRAPPING circular window cache are
+    unsupported (dynamic_update_slice cannot wrap) — the speculative path
+    refuses those archs (serve.speculative.check_supported), prefix reuse
+    disables itself on them (serve.paging.prefix_supported), and the slab
+    is padded so in-range writes never clamp.
 
     index: scalar (lock-step batch, one shared position) or (B,) per-slot
     positions (continuous batching) — the vector form writes each batch row

@@ -60,9 +60,26 @@ Layout:
                  batched forward, per-slot accept/reject masking + index
                  rollback commit 1..K+1 tokens per dispatch). Greedy output
                  is token-identical to plain decode for any draft.
+  paging.py      paged KV pool (PR 5): fixed-size pages carved from one
+                 preallocated store, per-slot int32 page tables (donated
+                 device state through every dispatch), O(1) refcounted page
+                 alloc/free, LRU eviction of unreferenced prefix pages —
+                 slot capacity becomes `mem / actual_tokens` instead of
+                 `mem / max_len`. `EngineConfig.page_size` switches both
+                 backends to it; greedy decode is token-identical to the
+                 slab because the paged dispatch gathers each slot's pages
+                 into exactly the slab layout and runs the unchanged step.
+  prefix.py      radix-tree prefix index over token-ID pages: admission
+                 matches the longest page-aligned cached prefix, shares its
+                 pages by refcount bump, prefills ONLY the unmatched suffix
+                 (the decode-form s>1 block write), and publishes the
+                 prompt's full pages for future requests — redundant
+                 prefill across requests sharing a system prompt drops to
+                 zero.
   metrics.py     tok/s, tokens/dispatch, host syncs per decoded token,
                  p50/p99 latency, time-to-first-token, batch occupancy,
-                 rejections, draft acceptance/rollback rates;
+                 rejections, draft acceptance/rollback rates, prefix hit
+                 rate / prefill tokens skipped / page-pool occupancy;
                  `ServeMetrics.aggregate` pools replicas.
 
 Quickstart:
@@ -85,6 +102,8 @@ from repro.serve.cache_pool import CachePool, PoolExhausted
 from repro.serve.engine import (EngineConfig, EngineSaturated,
                                 InferenceEngine)
 from repro.serve.metrics import ServeMetrics
+from repro.serve.paging import PagedCachePool, PageLayout, prefix_supported
+from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
 from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import (ContinuousScheduler, Request,
@@ -94,7 +113,8 @@ from repro.serve.speculative import DraftSpec
 __all__ = [
     "CachePool", "PoolExhausted", "DraftSpec", "EngineConfig",
     "EngineSaturated", "InferenceEngine", "ExecutionBackend", "LocalBackend",
-    "ShardedBackend", "ReplicaRouter", "ServeMetrics", "ModelRegistry",
+    "ShardedBackend", "PagedCachePool", "PageLayout", "PrefixIndex",
+    "prefix_supported", "ReplicaRouter", "ServeMetrics", "ModelRegistry",
     "PackedModel", "pack_model_params", "ContinuousScheduler",
     "StaticScheduler", "Request", "replica_load",
 ]

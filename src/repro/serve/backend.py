@@ -41,6 +41,24 @@ is small by construction — that is the point of it) while the verify step
 runs SPMD exactly like the plain decode, with out_shardings pinned to the
 donated inputs so aliasing survives pjit.
 
+Paged KV + prefix reuse (EngineConfig.page_size, serve.paging): the pool
+becomes a `PagedCachePool` — fixed-size pages carved from one preallocated
+store, per-slot int32 page tables, refcounted sharing — and the decode /
+speculative dispatches become their paged twins
+(steps.make_paged_decode_step): gather the slots' pages into exactly the
+slab layout, run the UNCHANGED fused step, scatter back, with the store AND
+the page table donated device state. Admission grows a prefix path the
+engine drives: `prefix_match` (longest page-aligned cached prefix),
+`alloc_pages` (refcount-bump the shared pages + fresh private pages; LRU
+eviction of tree-only pages under pressure; `PoolExhausted` surfaces to the
+scheduler), `prefill_suffix` (only the unmatched suffix runs, through the
+decode-form block write), `prefix_insert` (publish the prompt's full pages
+into the radix tree). On the mesh the store's page axis shards exactly like
+the slab's slot axis (`sharding.page_pspecs`), with out_shardings pinned so
+donation aliasing survives pjit. The draft slab of a speculating engine
+stays an unpaged CachePool (small by construction; its write headroom needs
+no sharing story).
+
 Contract shared by all backends (what the engine calls):
 
   build(model, cfg)                 compile steps, allocate pool/state
@@ -57,11 +75,16 @@ Contract shared by all backends (what the engine calls):
                                     returns (commit (B, K+1), n_commit (B,),
                                     n_accept (B,)) int32 on host
   decode_host(tokens, indices)      PR-1 host-loop step (LocalBackend only)
+  prefix_match / alloc_pages /      paged-pool admission surface (no-ops /
+    prefix_insert / page_stats      zeros on the slab pool)
+  prefill_suffix(sfx, full, slot,   prefix-hit admission: prefill only the
+    index)                          unmatched suffix into the slot's pages
   describe()                        placement facts for metrics/benchmarks
 """
 
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -71,10 +94,17 @@ import numpy as np
 from repro.distributed import steps as ST
 from repro.models import transformer as T
 from repro.serve.cache_pool import CachePool, quiet_donation
+from repro.serve.paging import PagedCachePool
 
 
 class ExecutionBackend:
-    """Placement + compiled-step owner behind an InferenceEngine."""
+    """Placement + compiled-step owner behind an InferenceEngine.
+
+    The dispatch methods live HERE, once: a backend's build() compiles the
+    steps and places the buffers, and `_ctx()` scopes every dispatch (the
+    base is a no-op; ShardedBackend installs its mesh context). The
+    paged/slab branch is taken per call off the pool type, so the engine,
+    both placements, and both pool forms share one dispatch body each."""
 
     name = "base"
 
@@ -91,39 +121,132 @@ class ExecutionBackend:
     def build(self, model, cfg) -> None:
         raise NotImplementedError
 
+    def _ctx(self):
+        """Scope for every compiled dispatch (ShardedBackend: the mesh)."""
+        return contextlib.nullcontext()
+
     # -- admission / prefill ------------------------------------------------
 
     def prefill(self, batch: Dict[str, Any], exact: bool):
-        raise NotImplementedError
+        fn = self._prefill_last if exact else self._prefill_full
+        with self._ctx():
+            if not self.cfg.device_loop:       # PR-1 host-loop baseline
+                return fn(self.params, batch, self.pool.single_template)
+            out = fn(self.params, batch)
+            if self.draft_pool is not None:
+                # the draft consumes the same prompt; its logits are unused
+                # (the first token is sampled from the TARGET's prefill)
+                _, self._pending_draft = self._draft_prefill(
+                    self.draft_params, batch)
+            return out
 
     def write_slot(self, slot: int, caches) -> None:
-        self.pool.write_slot(slot, caches)
-        if self.draft_pool is not None:
-            # the draft slab row shares the slot id and (from the next
-            # dispatch on) the per-slot index clock with the target row
-            self.draft_pool.write_slot(slot, self._pending_draft)
-            self._pending_draft = None
+        with self._ctx():
+            self.pool.write_slot(slot, caches)
+            if self.draft_pool is not None:
+                # the draft slab row shares the slot id and (from the next
+                # dispatch on) the per-slot index clock with the target row
+                self.draft_pool.write_slot(slot, self._pending_draft)
+                self._pending_draft = None
 
     def first_token(self, row, rid: int, temperature: float) -> int:
-        raise NotImplementedError
+        key = jax.random.fold_in(self._first_key, rid)
+        temp = jnp.full((1,), temperature, jnp.float32)
+        with self._ctx():
+            return int(self._sample_first(row, key, temp)[0])
 
     def install(self, slot: int, token: int, index: int, temperature: float,
                 eos: int, remaining: int, spec_limit: int = 0) -> None:
-        raise NotImplementedError
+        with self._ctx(), quiet_donation():
+            self.state = self._install(self.state, slot, token, index,
+                                       temperature, eos, remaining,
+                                       spec_limit)
 
     # -- decode -------------------------------------------------------------
 
     def decode_block(self) -> np.ndarray:
-        raise NotImplementedError
+        with self._ctx(), quiet_donation():
+            if self.paged:
+                (tok_block, self.pool.store, self.pool.page_table,
+                 self.state) = self._decode(self.params, self.pool.store,
+                                            self.pool.page_table, self.state)
+            else:
+                tok_block, self.pool.caches, self.state = self._decode(
+                    self.params, self.pool.caches, self.state)
+        return np.asarray(tok_block)             # the ONLY decode sync
 
     def spec_decode_block(self):
-        raise NotImplementedError(
-            f"{self.name} backend was not built with EngineConfig.speculate")
+        if not hasattr(self, "_spec_decode"):
+            raise NotImplementedError(
+                f"{self.name} backend was not built with "
+                "EngineConfig.speculate")
+        with self._ctx(), quiet_donation():
+            if self.paged:
+                (commit, n_commit, n_accept, self.pool.store,
+                 self.pool.page_table, self.draft_pool.caches,
+                 self.state) = self._spec_decode(
+                    self.params, self.draft_params, self.pool.store,
+                    self.pool.page_table, self.draft_pool.caches, self.state)
+            else:
+                (commit, n_commit, n_accept, self.pool.caches,
+                 self.draft_pool.caches, self.state) = self._spec_decode(
+                    self.params, self.draft_params, self.pool.caches,
+                    self.draft_pool.caches, self.state)
+        commit, n_commit, n_accept = jax.device_get(
+            (commit, n_commit, n_accept))        # the ONLY decode sync
+        return (np.asarray(commit), np.asarray(n_commit),
+                np.asarray(n_accept))
 
     def decode_host(self, tokens: np.ndarray, indices: np.ndarray):
         raise NotImplementedError(
             f"{self.name} backend has no host decode loop "
             "(EngineConfig.device_loop=False is a LocalBackend baseline)")
+
+    # -- paged admission surface (no-ops on the slab pool) ------------------
+
+    @property
+    def paged(self) -> bool:
+        return isinstance(self.pool, PagedCachePool)
+
+    def prefix_match(self, prompt):
+        """(matched token count, shared page ids) — (0, []) without a
+        prefix-caching paged pool."""
+        return self.pool.prefix_match(prompt) if self.paged else (0, [])
+
+    def alloc_slot_pages(self, slot: int, n_positions: int,
+                         shared=()) -> None:
+        """Reserve the slot's pages (raises PoolExhausted under pressure);
+        a no-op on the slab pool, whose slot IS its storage."""
+        if self.paged:
+            self.pool.alloc_pages(slot, n_positions, shared)
+
+    def prefix_insert(self, prompt, slot: int) -> int:
+        return self.pool.prefix_insert(prompt, slot) if self.paged else 0
+
+    def page_stats(self):
+        """(pages_in_use, usable_pages) or None on the slab pool."""
+        return self.pool.page_stats() if self.paged else None
+
+    def prefill_suffix(self, batch, full_batch, slot: int, index: int):
+        """Prefix-hit admission: run only the unmatched (bucketed) suffix
+        through the decode-form block write into the slot's pages (store
+        donated, so the install is in place); returns the full (1, S,
+        vocab) suffix logits — the engine reads the true suffix-end column.
+        A speculating engine still prefills the FULL prompt into the draft
+        slab — the draft has no page sharing and the prefill FLOP saving is
+        the target's."""
+        if not hasattr(self, "_suffix_prefill"):
+            raise NotImplementedError(
+                f"{self.name} backend was not built with a prefix-caching "
+                "paged pool (EngineConfig.page_size + prefix_cache)")
+        with self._ctx(), quiet_donation():
+            logits, self.pool.store = self._suffix_prefill(
+                self.params, batch, self.pool.store, self.pool.page_table,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(index, jnp.int32))
+            if self.draft_pool is not None:
+                _, draft = self._draft_prefill(self.draft_params, full_batch)
+                self.draft_pool.write_slot(slot, draft)
+        return logits
 
     # -- introspection ------------------------------------------------------
 
@@ -143,23 +266,43 @@ class LocalBackend(ExecutionBackend):
         # speculate=K pads the slab: the verify writes K+1 positions from a
         # per-slot clock that can sit at max_len-1; rollback masks them.
         cache_len = cfg.max_len + cfg.speculate
-        self.pool = CachePool(mcfg, cfg.n_slots, cache_len,
-                              jnp.dtype(cfg.cache_dtype))
+        cdtype = jnp.dtype(cfg.cache_dtype)
+        if cfg.page_size:
+            # paged pool: same cache positions, carved into refcounted
+            # pages (speculative headroom lands in the slot's private tail
+            # pages — see steps.make_paged_speculative_decode_step).
+            self.pool = PagedCachePool(
+                mcfg, cfg.n_slots, cache_len, cdtype,
+                page_size=cfg.page_size, n_pages=cfg.n_pages,
+                prefix_cache=cfg.prefix_cache)
+        else:
+            self.pool = CachePool(mcfg, cfg.n_slots, cache_len, cdtype)
         # device loop: prefill allocates its batch-1 caches inside the
         # compiled step (no host template copied in); host loop (PR-1
         # comparison baseline) keeps the template-operand form.
-        pkw = dict(cache_len=cache_len,
-                   cache_dtype=jnp.dtype(cfg.cache_dtype)) \
+        pkw = dict(cache_len=cache_len, cache_dtype=cdtype) \
             if cfg.device_loop else {}
         self._prefill_last = jax.jit(
             ST.make_prefill_step(mcfg, cfg.backend, last_only=True, **pkw))
         self._prefill_full = jax.jit(
             ST.make_prefill_step(mcfg, cfg.backend, last_only=False, **pkw))
         if cfg.device_loop:
-            self._decode = jax.jit(
-                ST.make_decode_step(mcfg, cfg.backend,
-                                    n_steps=cfg.decode_chunk),
-                donate_argnums=(1, 2))   # slab + state update in place
+            if cfg.page_size:
+                self._decode = jax.jit(
+                    ST.make_paged_decode_step(mcfg, cfg.backend,
+                                              n_steps=cfg.decode_chunk,
+                                              layout=self.pool.layout),
+                    donate_argnums=(1, 2, 3))  # store + table + state
+                if self.pool.index is not None:
+                    self._suffix_prefill = jax.jit(
+                        ST.make_suffix_prefill_step(
+                            mcfg, cfg.backend, layout=self.pool.layout),
+                        donate_argnums=(2,))   # store updates in place
+            else:
+                self._decode = jax.jit(
+                    ST.make_decode_step(mcfg, cfg.backend,
+                                        n_steps=cfg.decode_chunk),
+                    donate_argnums=(1, 2))   # slab + state update in place
             self._install = jax.jit(ST.install_slot, donate_argnums=(0,))
             self.state = ST.make_decode_state(cfg.n_slots, cfg.seed)
             self._sample_first = jax.jit(T.sample_tokens)
@@ -174,51 +317,17 @@ class LocalBackend(ExecutionBackend):
             self._draft_prefill = jax.jit(
                 ST.make_prefill_step(dcfg, cfg.backend, last_only=True,
                                      cache_len=cache_len, cache_dtype=ddtype))
-            self._spec_decode = jax.jit(
-                ST.make_speculative_decode_step(
-                    mcfg, dcfg, cfg.backend, n_draft=cfg.speculate),
-                donate_argnums=(2, 3, 4))   # both slabs + state in place
-
-    def prefill(self, batch, exact):
-        fn = self._prefill_last if exact else self._prefill_full
-        if not self.cfg.device_loop:
-            return fn(self.params, batch, self.pool.single_template)
-        out = fn(self.params, batch)
-        if self.draft_pool is not None:
-            # the draft consumes the same prompt; its logits are unused
-            # (the first token is sampled from the TARGET's prefill)
-            _, self._pending_draft = self._draft_prefill(self.draft_params,
-                                                         batch)
-        return out
-
-    def first_token(self, row, rid, temperature):
-        key = jax.random.fold_in(self._first_key, rid)
-        temp = jnp.full((1,), temperature, jnp.float32)
-        return int(self._sample_first(row, key, temp)[0])
-
-    def install(self, slot, token, index, temperature, eos, remaining,
-                spec_limit=0):
-        with quiet_donation():
-            self.state = self._install(self.state, slot, token, index,
-                                       temperature, eos, remaining,
-                                       spec_limit)
-
-    def decode_block(self):
-        with quiet_donation():
-            tok_block, self.pool.caches, self.state = self._decode(
-                self.params, self.pool.caches, self.state)
-        return np.asarray(tok_block)             # the ONLY decode sync
-
-    def spec_decode_block(self):
-        with quiet_donation():
-            (commit, n_commit, n_accept, self.pool.caches,
-             self.draft_pool.caches, self.state) = self._spec_decode(
-                self.params, self.draft_params, self.pool.caches,
-                self.draft_pool.caches, self.state)
-        commit, n_commit, n_accept = jax.device_get(
-            (commit, n_commit, n_accept))        # the ONLY decode sync
-        return (np.asarray(commit), np.asarray(n_commit),
-                np.asarray(n_accept))
+            if cfg.page_size:
+                self._spec_decode = jax.jit(
+                    ST.make_paged_speculative_decode_step(
+                        mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
+                        layout=self.pool.layout),
+                    donate_argnums=(2, 3, 4, 5))  # store+table+draft+state
+            else:
+                self._spec_decode = jax.jit(
+                    ST.make_speculative_decode_step(
+                        mcfg, dcfg, cfg.backend, n_draft=cfg.speculate),
+                    donate_argnums=(2, 3, 4))   # both slabs + state in place
 
     def decode_host(self, tokens, indices):
         logits, self.pool.caches = self._decode(
@@ -274,8 +383,17 @@ class ShardedBackend(ExecutionBackend):
             self.param_shardings = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), model.pspecs(mesh))
             self.params = jax.device_put(model.params, self.param_shardings)
-            self.pool = CachePool(mcfg, cfg.n_slots, cache_len,
-                                  jnp.dtype(cfg.cache_dtype), mesh=mesh)
+            if cfg.page_size:
+                # page store sharded on its page axis exactly like the slab
+                # shards its slot axis (sharding.page_pspecs)
+                self.pool = PagedCachePool(
+                    mcfg, cfg.n_slots, cache_len,
+                    jnp.dtype(cfg.cache_dtype), page_size=cfg.page_size,
+                    n_pages=cfg.n_pages, prefix_cache=cfg.prefix_cache,
+                    mesh=mesh)
+            else:
+                self.pool = CachePool(mcfg, cfg.n_slots, cache_len,
+                                      jnp.dtype(cfg.cache_dtype), mesh=mesh)
             state_specs = ST.decode_state_pspecs(mesh, cfg.n_slots)
             self.state_shardings = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), state_specs)
@@ -284,17 +402,40 @@ class ShardedBackend(ExecutionBackend):
                 self.state_shardings)
             slot_spec = SH.batch_pspec(mesh, cfg.n_slots)
             tok_sharding = NamedSharding(mesh, P(None, *tuple(slot_spec)))
-            # donation + sharding: out_shardings for (slab, state) must
-            # equal the donated inputs' shardings or the aliasing is lost
-            # (XLA would copy into the re-placed output buffer).
-            self._decode = jax.jit(
-                ST.make_decode_step(mcfg, cfg.backend,
-                                    n_steps=cfg.decode_chunk),
-                donate_argnums=(1, 2),
-                in_shardings=(self.param_shardings, self.pool.shardings,
-                              self.state_shardings),
-                out_shardings=(tok_sharding, self.pool.shardings,
-                               self.state_shardings))
+            # donation + sharding: out_shardings for (slab, state) — and
+            # the page store / table in paged mode — must equal the donated
+            # inputs' shardings or the aliasing is lost (XLA would copy
+            # into the re-placed output buffer).
+            if cfg.page_size:
+                self._decode = jax.jit(
+                    ST.make_paged_decode_step(mcfg, cfg.backend,
+                                              n_steps=cfg.decode_chunk,
+                                              layout=self.pool.layout),
+                    donate_argnums=(1, 2, 3),
+                    in_shardings=(self.param_shardings, self.pool.shardings,
+                                  self.pool.table_sharding,
+                                  self.state_shardings),
+                    out_shardings=(tok_sharding, self.pool.shardings,
+                                   self.pool.table_sharding,
+                                   self.state_shardings))
+                if self.pool.index is not None:
+                    self._suffix_prefill = jax.jit(
+                        ST.make_suffix_prefill_step(
+                            mcfg, cfg.backend, layout=self.pool.layout),
+                        donate_argnums=(2,),
+                        # logits replicated; store pinned to the donated
+                        # input placement so aliasing survives pjit
+                        out_shardings=(NamedSharding(mesh, P()),
+                                       self.pool.shardings))
+            else:
+                self._decode = jax.jit(
+                    ST.make_decode_step(mcfg, cfg.backend,
+                                        n_steps=cfg.decode_chunk),
+                    donate_argnums=(1, 2),
+                    in_shardings=(self.param_shardings, self.pool.shardings,
+                                  self.state_shardings),
+                    out_shardings=(tok_sharding, self.pool.shardings,
+                                   self.state_shardings))
             self._install = jax.jit(ST.install_slot, donate_argnums=(0,),
                                     out_shardings=self.state_shardings)
             # batch-1 prefill: nothing to shard on the request axis; params
@@ -336,59 +477,31 @@ class ShardedBackend(ExecutionBackend):
                                  cache_len=cache_len, cache_dtype=ddtype))
         vec_sharding = NamedSharding(mesh, slot_spec)
         commit_sharding = NamedSharding(mesh, P(*tuple(slot_spec), None))
-        self._spec_decode = jax.jit(
-            ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
-                                            n_draft=cfg.speculate),
-            donate_argnums=(2, 3, 4),
-            in_shardings=(self.param_shardings, self.draft_shardings,
-                          self.pool.shardings, self.draft_pool.shardings,
-                          self.state_shardings),
-            out_shardings=(commit_sharding, vec_sharding, vec_sharding,
-                           self.pool.shardings, self.draft_pool.shardings,
-                           self.state_shardings))
-
-    def prefill(self, batch, exact):
-        fn = self._prefill_last if exact else self._prefill_full
-        with self._ctx():
-            out = fn(self.params, batch)
-            if self.draft_pool is not None:
-                _, self._pending_draft = self._draft_prefill(
-                    self.draft_params, batch)
-            return out
-
-    def write_slot(self, slot, caches):
-        with self._ctx():
-            super().write_slot(slot, caches)
-
-    def first_token(self, row, rid, temperature):
-        key = jax.random.fold_in(self._first_key, rid)
-        temp = jnp.full((1,), temperature, jnp.float32)
-        with self._ctx():
-            return int(self._sample_first(row, key, temp)[0])
-
-    def install(self, slot, token, index, temperature, eos, remaining,
-                spec_limit=0):
-        with self._ctx(), quiet_donation():
-            self.state = self._install(self.state, slot, token, index,
-                                       temperature, eos, remaining,
-                                       spec_limit)
-
-    def decode_block(self):
-        with self._ctx(), quiet_donation():
-            tok_block, self.pool.caches, self.state = self._decode(
-                self.params, self.pool.caches, self.state)
-        return np.asarray(tok_block)             # the ONLY decode sync
-
-    def spec_decode_block(self):
-        with self._ctx(), quiet_donation():
-            (commit, n_commit, n_accept, self.pool.caches,
-             self.draft_pool.caches, self.state) = self._spec_decode(
-                self.params, self.draft_params, self.pool.caches,
-                self.draft_pool.caches, self.state)
-        commit, n_commit, n_accept = jax.device_get(
-            (commit, n_commit, n_accept))        # the ONLY decode sync
-        return (np.asarray(commit), np.asarray(n_commit),
-                np.asarray(n_accept))
+        if cfg.page_size:
+            self._spec_decode = jax.jit(
+                ST.make_paged_speculative_decode_step(
+                    mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
+                    layout=self.pool.layout),
+                donate_argnums=(2, 3, 4, 5),
+                in_shardings=(self.param_shardings, self.draft_shardings,
+                              self.pool.shardings, self.pool.table_sharding,
+                              self.draft_pool.shardings,
+                              self.state_shardings),
+                out_shardings=(commit_sharding, vec_sharding, vec_sharding,
+                               self.pool.shardings, self.pool.table_sharding,
+                               self.draft_pool.shardings,
+                               self.state_shardings))
+        else:
+            self._spec_decode = jax.jit(
+                ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
+                                                n_draft=cfg.speculate),
+                donate_argnums=(2, 3, 4),
+                in_shardings=(self.param_shardings, self.draft_shardings,
+                              self.pool.shardings, self.draft_pool.shardings,
+                              self.state_shardings),
+                out_shardings=(commit_sharding, vec_sharding, vec_sharding,
+                               self.pool.shardings, self.draft_pool.shardings,
+                               self.state_shardings))
 
     def describe(self):
         return {"backend": self.name,

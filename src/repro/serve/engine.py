@@ -36,6 +36,23 @@ positions so speculative writes stay in bounds). Greedy output is
 token-identical to non-speculative decode for any draft and any K; a
 request can cap or disable its own drafting with `submit(speculate=...)`.
 
+Paged KV + prefix reuse (`EngineConfig.page_size`, PR 5): the backend's
+pool becomes a block-paged store (serve.paging) — per-slot page tables over
+refcounted fixed-size pages, carried as donated device state through every
+dispatch — and admission becomes prefix-match -> suffix-prefill -> page
+install: the longest page-aligned cached prefix of the prompt (radix index
+over token IDs, serve.prefix) is SHARED by refcount bump, only the
+unmatched suffix is prefilled, and the prompt's full pages are published
+for future admissions. Slot capacity stops being `mem / max_len` and
+becomes `mem / actual_tokens`; redundant prefill FLOPs across requests
+sharing a system prompt drop to zero. Page pressure surfaces as
+`PoolExhausted` at admission — `step()` requeues the admission at the
+front of the waiting deque (counted as `pool_waits`) instead of failing
+the step; LRU eviction of prefix pages nobody references runs first.
+Greedy decode stays token-identical to the slab: the paged dispatch
+gathers each slot's pages into exactly the slab layout and runs the
+unchanged fused step.
+
 The `decode_chunk` knob is a latency/throughput trade: larger K amortizes
 dispatch + sync overhead over more tokens but coarsens the admission clock
 (new requests join only at block boundaries) and wastes tail micro-steps
@@ -92,6 +109,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.backend import ExecutionBackend, LocalBackend
+from repro.serve.cache_pool import PoolExhausted
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import PackedModel
 from repro.serve.scheduler import (ContinuousScheduler, Request,
@@ -121,6 +139,17 @@ class EngineConfig:
     # deepest speculative write stays in bounds before rollback.
     speculate: int = 0
     draft_cache_dtype: Optional[str] = None   # None = cache_dtype
+    # paged KV + prefix reuse (serve.paging): page_size carves the cache
+    # into fixed pages behind per-slot page tables (None = the slab);
+    # n_pages sizes the page pool (None = slab-equivalent capacity,
+    # n_slots * pages_per_slot, + the reserved sink page) — fewer pages
+    # oversubscribes memory against ACTUAL tokens instead of max_len;
+    # prefix_cache shares page-aligned prompt prefixes across requests via
+    # the radix index (auto-disabled for archs whose cache state is not
+    # purely positional — paging itself still works there).
+    page_size: Optional[int] = None
+    n_pages: Optional[int] = None
+    prefix_cache: bool = True
 
 
 class InferenceEngine:
@@ -141,6 +170,15 @@ class InferenceEngine:
                              f"{cfg.max_waiting}")
         if cfg.speculate < 0:
             raise ValueError(f"speculate must be >= 0, got {cfg.speculate}")
+        if cfg.page_size is not None and cfg.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {cfg.page_size}")
+        if cfg.page_size and not cfg.device_loop:
+            raise ValueError("page_size requires device_loop=True (the "
+                             "paged gather/scatter lives inside the fused "
+                             "dispatch; the host loop has no paged form)")
+        if cfg.n_pages is not None and not cfg.page_size:
+            raise ValueError("n_pages without page_size: the slab pool has "
+                             "no page geometry")
         if cfg.speculate:
             from repro.serve import speculative as SP
             if not cfg.device_loop:
@@ -220,6 +258,10 @@ class InferenceEngine:
                 f"request needs {need} cache positions "
                 f"(img + prompt {len(r.prompt)} + gen {r.max_new_tokens}) "
                 f"but max_len={self.cfg.max_len}")
+        # no page-capacity check needed: `need` clamps at max_len, so a
+        # request can require at most pages_per_slot pages, and the paged
+        # pool's constructor already guarantees usable >= pages_per_slot —
+        # any admissible request eventually fits once pages free up.
         if self.cfg.max_waiting is not None \
                 and len(self._waiting) >= self.cfg.max_waiting:
             self.metrics.on_reject()
@@ -268,8 +310,19 @@ class InferenceEngine:
             chosen = {r.id for r in admitted}
             self._waiting = collections.deque(
                 r for r in self._waiting if r.id not in chosen)
-            for r in admitted:
-                self._start(r)
+            for i, r in enumerate(admitted):
+                try:
+                    self._start(r)
+                except PoolExhausted:
+                    # page pressure (free slots but not enough free pages,
+                    # even after LRU prefix eviction): requeue this and the
+                    # remaining admissions at the FRONT in arrival order —
+                    # finishing requests release pages, so they retry on
+                    # the very next step instead of crashing it.
+                    for rr in reversed(admitted[i:]):
+                        self._waiting.appendleft(rr)
+                    self.metrics.on_pool_wait()
+                    break
         if self.pool.n_active:
             if self.cfg.speculate:
                 advanced = self._decode_spec()
@@ -277,6 +330,9 @@ class InferenceEngine:
                 advanced = self._decode_block()
             else:
                 advanced = self._decode_step_host()
+            stats = self.backend.page_stats()
+            if stats is not None:       # per-dispatch page-pool gauge
+                self.metrics.on_pages(*stats)
         else:
             self.metrics.on_idle_step()
             advanced = 1
@@ -305,6 +361,18 @@ class InferenceEngine:
             b *= 2
         return b if b <= self._bucket_cap else s0
 
+    def _suffix_len(self, s: int, start: int) -> int:
+        """Bucketed suffix-prefill length: pow2 like `_prefill_len`, but
+        the pad tail must also FIT — it is written (masked) at positions
+        start..start+bucket, so the bucket falls back to exact when it
+        would run past the slot's cache positions."""
+        if self._exact_prefill or not self.cfg.prefill_buckets:
+            return s
+        b = self.cfg.bucket_min
+        while b < s:
+            b *= 2
+        return b if start + b <= self._bucket_cap else s
+
     def _sample_host(self, row: np.ndarray, r: Request) -> int:
         if r.temperature <= 0.0:
             return int(np.argmax(row))
@@ -328,17 +396,54 @@ class InferenceEngine:
     def _start(self, r: Request) -> None:
         slot = self.pool.alloc()
         s0 = len(r.prompt)
+        n_img = self.model.cfg.n_img_tokens
+        # paged admission: longest page-aligned cached prefix, then the
+        # slot's page-table row (shared prefix pages refcount-bumped, fresh
+        # private pages for suffix + generation + speculative headroom).
+        # PoolExhausted here propagates to step(), which requeues.
+        matched, shared = (0, ()) if r.extras else \
+            self.backend.prefix_match(r.prompt)
+        try:
+            self.backend.alloc_slot_pages(
+                slot, n_img + s0 + r.max_new_tokens + self.cfg.speculate,
+                shared)
+        except PoolExhausted:
+            self.pool.free(slot)
+            raise
         sp = self._prefill_len(s0)
         tokens = np.zeros((1, sp), np.int32)
         tokens[0, :s0] = r.prompt
         batch = {"tokens": jnp.asarray(tokens)}
         if r.extras:
             batch.update({k: jnp.asarray(v) for k, v in r.extras.items()})
-        n_img = self.model.cfg.n_img_tokens
-        logits, caches = self.backend.prefill(batch, exact=sp == s0)
-        # (1, vocab) on device: the true prompt-end column
-        row = logits[:, -1] if sp == s0 else logits[:, n_img + s0 - 1]
-        self.backend.write_slot(slot, caches)
+        if matched:
+            # prefix hit: only the unmatched suffix runs, right-padded into
+            # the same pow2 buckets as full prefills (real traffic produces
+            # arbitrary suffix lengths — one compile per length would be a
+            # compile-shape explosion). The logits column at the TRUE
+            # suffix end seeds sampling; the padded tail's writes land in
+            # the slot's private pages past the shared region and stay
+            # masked until decode overwrites them. `batch` still carries
+            # the full padded prompt for a speculating backend's draft.
+            s_sfx = s0 - matched
+            sp_sfx = self._suffix_len(s_sfx, n_img + matched)
+            sfx = np.zeros((1, sp_sfx), np.int32)
+            sfx[0, :s_sfx] = r.prompt[matched:]
+            logits = self.backend.prefill_suffix(
+                {"tokens": jnp.asarray(sfx)}, batch, slot, n_img + matched)
+            row = logits[:, s_sfx - 1]
+        else:
+            logits, caches = self.backend.prefill(batch, exact=sp == s0)
+            # (1, vocab) on device: the true prompt-end column
+            row = logits[:, -1] if sp == s0 else logits[:, n_img + s0 - 1]
+            self.backend.write_slot(slot, caches)
+        if not r.extras:
+            # publish the prompt's full pages for future admissions (a
+            # no-op on the slab pool / prefix-unsupported archs)
+            self.backend.prefix_insert(r.prompt, slot)
+        if self.backend.paged:
+            self.metrics.on_prefix(matched, s0)
+        r.prefix_matched = matched
         r.state, r.slot = "running", slot
         r.index = n_img + s0
         self._slots[slot] = r

@@ -70,6 +70,14 @@ class ServeMetrics:
         self.draft_accepted = 0               # ... accepted by the target
         self.draft_flop_fraction = 0.0        # static draft/target FLOP ratio
         self.slot_acceptance: Dict[int, List[int]] = {}  # slot: [acc, prop]
+        # paged KV + prefix reuse (serve.paging)
+        self.prefix_lookups = 0               # paged admissions
+        self.prefix_hits = 0                  # ... that matched a prefix
+        self.prefill_tokens_skipped = 0       # prompt tokens never prefilled
+        self.prefill_tokens_computed = 0      # prompt tokens prefilled
+        self.pool_waits = 0                   # admissions requeued on pages
+        self.page_samples: List[int] = []     # pages_in_use per dispatch
+        self.page_capacity = 0                # usable pages in the pool
 
     # -- recording hooks (called by the engine) -----------------------------
 
@@ -131,6 +139,26 @@ class ServeMetrics:
         acc[0] += accepted
         acc[1] += proposed
 
+    def on_prefix(self, matched: int, n_prompt: int) -> None:
+        """One paged admission: `matched` of `n_prompt` prompt tokens came
+        from shared prefix pages (their prefill was SKIPPED); the rest were
+        computed (full prefill, or the unmatched suffix)."""
+        self.prefix_lookups += 1
+        self.prefix_hits += int(matched > 0)
+        self.prefill_tokens_skipped += matched
+        self.prefill_tokens_computed += n_prompt - matched
+
+    def on_pool_wait(self) -> None:
+        """An admission bounced off page pressure (PoolExhausted after LRU
+        eviction) and was requeued — free slots existed, pages didn't."""
+        self.pool_waits += 1
+
+    def on_pages(self, in_use: int, capacity: int) -> None:
+        """Per-dispatch page-pool gauge (pages referenced by live slots or
+        retained by the prefix index, out of the usable pool)."""
+        self.page_samples.append(in_use)
+        self.page_capacity = capacity
+
     # -- report -------------------------------------------------------------
 
     def report(self) -> Dict[str, float]:
@@ -177,6 +205,21 @@ class ServeMetrics:
             "acceptance_rate": self.draft_accepted
             / max(1, self.draft_proposed),
             "draft_verify_flop_ratio": self.draft_flop_fraction,
+            # paged KV + prefix reuse
+            "prefix_hit_rate": self.prefix_hits
+            / max(1, self.prefix_lookups),
+            "prefill_tokens_skipped": float(self.prefill_tokens_skipped),
+            "prefill_skip_fraction": self.prefill_tokens_skipped
+            / max(1, self.prefill_tokens_skipped
+                  + self.prefill_tokens_computed),
+            "pool_waits": float(self.pool_waits),
+            "pages_in_use": (sum(self.page_samples)
+                             / len(self.page_samples))
+            if self.page_samples else 0.0,
+            "page_occupancy": (sum(self.page_samples)
+                               / (len(self.page_samples)
+                                  * self.page_capacity))
+            if (self.page_samples and self.page_capacity) else 0.0,
         }
 
     @staticmethod
@@ -200,6 +243,18 @@ class ServeMetrics:
         syncs_d = sum(m.host_syncs.get("decode", 0) for m in metrics_list)
         proposed = sum(m.draft_proposed for m in metrics_list)
         accepted = sum(m.draft_accepted for m in metrics_list)
+        # fleet-pooled prefix/paging: hit rate over the union of paged
+        # admissions and page occupancy dispatch-weighted against each
+        # replica's own capacity — same pooling discipline as acceptance
+        # (never a mean of per-replica rates)
+        lookups = sum(m.prefix_lookups for m in metrics_list)
+        hits = sum(m.prefix_hits for m in metrics_list)
+        skipped = sum(m.prefill_tokens_skipped for m in metrics_list)
+        computed = sum(m.prefill_tokens_computed for m in metrics_list)
+        page_num = sum(sum(m.page_samples) for m in metrics_list)
+        page_den = sum(len(m.page_samples) for m in metrics_list)
+        page_cap = sum(len(m.page_samples) * m.page_capacity
+                       for m in metrics_list)
         elapsed = max(max((time.time() - m.t0 for m in metrics_list),
                           default=0.0), 1e-9)
         return {
@@ -227,6 +282,13 @@ class ServeMetrics:
             "draft_verify_flop_ratio": sum(
                 m.draft_flop_fraction * m.draft_proposed
                 for m in metrics_list) / max(1, proposed),
+            # fleet-pooled paged/prefix metrics
+            "prefix_hit_rate": hits / max(1, lookups),
+            "prefill_tokens_skipped": float(skipped),
+            "prefill_skip_fraction": skipped / max(1, skipped + computed),
+            "pool_waits": float(sum(m.pool_waits for m in metrics_list)),
+            "pages_in_use": page_num / page_den if page_den else 0.0,
+            "page_occupancy": page_num / page_cap if page_cap else 0.0,
             "mean_occupancy": occ_num / occ_den if occ_den else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
             "latency_steps_p99": percentile(lat_steps, 99),
@@ -243,6 +305,10 @@ class ServeMetrics:
             spec = (f" | accept {r['acceptance_rate']:.2f} "
                     f"({int(r['draft_rolled_back'])} rolled back, "
                     f"draft/verify flops {r['draft_verify_flop_ratio']:.2f})")
+        if self.prefix_lookups:
+            spec += (f" | prefix hit {r['prefix_hit_rate']:.2f} "
+                     f"({int(r['prefill_tokens_skipped'])} prefill toks "
+                     f"skipped, pages {r['page_occupancy']:.2f} full)")
         return (f"{int(r['requests_completed'])} reqs, "
                 f"{int(r['tokens_generated'])} toks in {r['wall_seconds']:.2f}s"
                 f" | {r['tok_per_s']:.1f} tok/s wall, "

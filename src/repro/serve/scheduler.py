@@ -28,6 +28,14 @@ its waiting deque in one pass (no per-request deque.remove). With the
 multi-step device loop (EngineConfig.decode_chunk=K) the admission clock
 ticks once per K-token decode block, so `max_prefills_per_step` bounds
 prefills per BLOCK — the knob's meaning scales with K.
+
+Paged pools add a second admission resource the schedulers do NOT see:
+`admissible` gates on free SLOTS, but a paged engine (EngineConfig
+.page_size, serve.paging) may then fail the page allocation with
+`PoolExhausted` — free slots, not enough free pages even after LRU prefix
+eviction. The engine absorbs that by requeueing the admission at the front
+of the waiting deque (metrics `pool_waits`), so a scheduler-admitted
+request degrades to "retry next step", never to a crashed step.
 """
 
 from __future__ import annotations
@@ -61,6 +69,9 @@ class Request:
     slot: int = -1
     index: int = 0                          # next cache write position
     generated: List[int] = dataclasses.field(default_factory=list)
+    # paged engines: prompt tokens whose prefill was skipped because their
+    # KV came from shared prefix pages (serve.paging) — 0 on a miss/slab
+    prefix_matched: int = 0
 
     @property
     def done(self) -> bool:
