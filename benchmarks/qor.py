@@ -1,0 +1,240 @@
+"""QoR regression gate: diff BENCH_*.json records against committed goldens.
+
+The VTR flow the Kratos paper benchmarks against keeps golden QoR files
+per task and fails the run when a metric drifts past its per-metric
+tolerance; this is the serving-stack analogue. A golden is simply an
+earlier `--out` file from benchmarks/serve_bench.py checked in under
+`benchmarks/golden/`; this checker matches its records to a fresh run's
+records by identity key and applies DIRECTION-AWARE gates per metric:
+
+  * `higher` — the metric may improve freely but regress only within
+    `tol` (relative): new >= golden * (1 - tol). Throughput-like.
+  * `lower`  — the mirror: new <= golden * (1 + tol). Syncs, latency.
+  * `exact`  — token-identity class. The synthetic bench traces submit
+    without an EOS id, so every request generates exactly its budget and
+    counts like `tokens_generated` are platform-independent integers; a
+    mismatch means the engine CHANGED BEHAVIOR, not that the machine was
+    slow. No tolerance.
+  * `info`   — recorded, never gated. All wall-clock metrics live here:
+    CI machines differ, and gating on seconds makes flaky gates. The
+    deterministic step-clock metrics carry the regression signal instead.
+
+Unknown metrics default to `info`, so adding a new field to serve_bench
+never breaks the gate; removing a gated field from the new run DOES fail
+(a metric that silently disappears is itself a regression). A golden
+record with no matching new record fails for the same reason; extra new
+records (new modes, new specs) pass — they will be gated once the golden
+is refreshed with `--update`.
+
+  PYTHONPATH=src python -m benchmarks.qor results/BENCH_serve.json \
+      [--golden benchmarks/golden/BENCH_serve.json] [--update] [--tol-scale S]
+
+Exit status: 0 = all gates pass, 1 = any regression / missing record /
+unreadable input. `--update` rewrites the golden from the new file
+(reviewed like any diff). `--golden` defaults to benchmarks/golden/<same
+basename>.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+# identity: which golden record corresponds to which new record. Absent
+# fields compare equal (None == None), so slim records match slim records.
+KEY_FIELDS = ("arch", "spec", "mode", "decode_chunk", "speculate",
+              "draft_spec", "page_size", "n_replicas", "mesh_shape")
+
+# metric -> (direction, relative tolerance). Directions per the module
+# docstring; tolerances sized to observed CPU-CI jitter on the step-clock
+# metrics (occupancy/acceptance shift slightly with FP-sensitive accept
+# decisions at different BLAS backends).
+POLICY: Dict[str, Tuple[str, float]] = {
+    # deterministic step-clock integers: behavior identity
+    "tokens_generated": ("exact", 0.0),
+    "apply_packed_hits": ("exact", 0.0),
+    "skinny_m_dispatches": ("exact", 0.0),
+    # deterministic throughput (step clock)
+    "tokens_per_step": ("higher", 0.02),
+    "tokens_per_dispatch": ("higher", 0.05),
+    "tokens_per_router_step": ("higher", 0.05),
+    "router_vs_single": ("higher", 0.05),
+    "decode_steps": ("lower", 0.05),
+    "mean_occupancy": ("higher", 0.05),
+    # sync economy: the device loop's 1-sync-per-dispatch invariant makes
+    # per-dispatch syncs essentially exact; per-token tracks occupancy
+    "host_syncs_per_dispatch": ("lower", 0.001),
+    "host_syncs_per_token": ("lower", 0.02),
+    # latency (step clock)
+    "latency_steps_p50": ("lower", 0.10),
+    # speculative economy
+    "acceptance_rate": ("higher", 0.05),
+    "spec_vs_plain_dispatch": ("higher", 0.05),
+    "draft_verify_flop_ratio": ("lower", 0.02),
+    "draft_rolled_back": ("lower", 0.25),
+    # prefix economy
+    "prefix_hit_rate": ("higher", 0.02),
+    "prefill_skip_fraction": ("higher", 0.02),
+    "prefill_tokens_skipped": ("higher", 0.02),
+    "pool_waits": ("lower", 0.25),
+    # wall clock: never gated (CI hardware varies run to run)
+    "wall_tok_s": ("info", 0.0),
+    "admitted_tok_s": ("info", 0.0),
+    "paged_vs_slab_admitted": ("info", 0.0),
+    "spec_vs_plain_wall": ("info", 0.0),
+}
+
+
+def record_key(rec: Dict[str, Any]) -> Tuple:
+    def norm(v):
+        return tuple(v) if isinstance(v, list) else v
+    return tuple(norm(rec.get(k)) for k in KEY_FIELDS)
+
+
+def fmt_key(rec: Dict[str, Any]) -> str:
+    parts = [f"{k}={rec[k]}" for k in KEY_FIELDS
+             if rec.get(k) not in (None, 0)]
+    return "/".join(parts) or "<record>"
+
+
+def compare_metric(name: str, golden: float, new: float,
+                   tol_scale: float = 1.0) -> Optional[str]:
+    """None = pass; a message = the regression. Unknown metrics are info."""
+    direction, tol = POLICY.get(name, ("info", 0.0))
+    if direction == "info":
+        return None
+    tol *= tol_scale
+    if direction == "exact":
+        if new != golden:
+            return (f"{name}: exact metric changed {golden!r} -> {new!r} "
+                    "(behavior change, not noise)")
+        return None
+    if direction == "higher":
+        floor = golden * (1.0 - tol) if golden >= 0 else golden * (1.0 + tol)
+        if new < floor - 1e-12:
+            return (f"{name}: {new:g} < {golden:g} - {tol:.1%} "
+                    f"(floor {floor:g})")
+        return None
+    if direction == "lower":
+        ceil = golden * (1.0 + tol) if golden >= 0 else golden * (1.0 - tol)
+        if new > ceil + 1e-12:
+            return (f"{name}: {new:g} > {golden:g} + {tol:.1%} "
+                    f"(ceiling {ceil:g})")
+        return None
+    raise ValueError(f"unknown direction {direction!r} for {name}")
+
+
+def compare_records(golden: Dict[str, Any], new: Dict[str, Any],
+                    tol_scale: float = 1.0) -> List[str]:
+    fails = []
+    for name, gval in golden.items():
+        if name in KEY_FIELDS or not isinstance(gval, (int, float)) \
+                or isinstance(gval, bool):
+            continue
+        direction, _ = POLICY.get(name, ("info", 0.0))
+        if direction == "info":
+            continue
+        if name not in new:
+            fails.append(f"{name}: gated metric missing from new record")
+            continue
+        msg = compare_metric(name, float(gval), float(new[name]), tol_scale)
+        if msg:
+            fails.append(msg)
+    return fails
+
+
+def compare_files(golden: Dict[str, Any], new: Dict[str, Any],
+                  tol_scale: float = 1.0) -> List[str]:
+    """All failures across the two files' record lists (empty = pass)."""
+    fails: List[str] = []
+    new_by_key: Dict[Tuple, Dict] = {}
+    for rec in new.get("records", []):
+        new_by_key[record_key(rec)] = rec
+    for g in golden.get("records", []):
+        n = new_by_key.get(record_key(g))
+        if n is None:
+            fails.append(f"[{fmt_key(g)}] golden record has no match in the "
+                         "new run (a mode/spec disappeared)")
+            continue
+        fails.extend(f"[{fmt_key(g)}] {m}"
+                     for m in compare_records(g, n, tol_scale))
+    return fails
+
+
+def gated_metrics(golden: Dict[str, Any]) -> List[str]:
+    names = set()
+    for rec in golden.get("records", []):
+        for name, v in rec.items():
+            if name in KEY_FIELDS or not isinstance(v, (int, float)) \
+                    or isinstance(v, bool):
+                continue
+            if POLICY.get(name, ("info", 0.0))[0] != "info":
+                names.add(name)
+    return sorted(names)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate a serve_bench JSON against its committed golden.")
+    ap.add_argument("bench", help="fresh BENCH_*.json from serve_bench --out")
+    ap.add_argument("--golden", default="",
+                    help="golden path (default: benchmarks/golden/<basename "
+                         "of bench>)")
+    ap.add_argument("--update", action="store_true",
+                    help="adopt the new file as the golden instead of gating")
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="scale every relative tolerance (exact stays exact);"
+                         " e.g. 2.0 on a noisy substrate")
+    args = ap.parse_args(argv)
+
+    golden_path = args.golden or os.path.join(
+        GOLDEN_DIR, os.path.basename(args.bench))
+    try:
+        with open(args.bench) as f:
+            new = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"qor: cannot read bench file {args.bench}: {e}")
+        return 1
+
+    if args.update:
+        os.makedirs(os.path.dirname(golden_path) or ".", exist_ok=True)
+        with open(golden_path, "w") as f:
+            json.dump(new, f, indent=2)
+            f.write("\n")
+        print(f"qor: golden updated -> {golden_path} "
+              f"({len(new.get('records', []))} records)")
+        return 0
+
+    try:
+        with open(golden_path) as f:
+            golden = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"qor: cannot read golden {golden_path}: {e} "
+              f"(seed it with: python -m benchmarks.qor {args.bench} "
+              f"--update)")
+        return 1
+
+    fails = compare_files(golden, new, args.tol_scale)
+    n_golden = len(golden.get("records", []))
+    n_new = len(new.get("records", []))
+    gates = gated_metrics(golden)
+    print(f"qor: {args.bench} vs {golden_path}: {n_golden} golden records, "
+          f"{n_new} new, gating {len(gates)} metrics "
+          f"({', '.join(gates[:6])}{', ...' if len(gates) > 6 else ''})")
+    if fails:
+        print(f"qor: FAIL — {len(fails)} regression(s):")
+        for m in fails:
+            print(f"  {m}")
+        return 1
+    print("qor: PASS — no gated metric regressed past tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

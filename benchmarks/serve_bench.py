@@ -72,6 +72,13 @@ distinguishes placements.
   PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--arch ...]
       [--requests N] [--slots K] [--seed S] [--decode-chunk K]
       [--mesh D,M] [--replicas N] [--out results/BENCH_serve.json]
+      [--trace-dir results/traces]
+
+QoR gates (PR 6): `--out` records are diffed against committed goldens by
+`benchmarks/qor.py` (direction-aware per-metric tolerances; deterministic
+step-clock integers gate EXACTLY) — regressions fail CI. `--trace-dir`
+additionally records every (spec, mode) run with the serve tracer (JSONL +
+Chrome trace + telemetry snapshot per mode) for the CI artifact.
 """
 
 from __future__ import annotations
@@ -91,7 +98,8 @@ from repro.core import kratos as kr
 from repro.distributed import steps as ST
 from repro.kernels import pallas_compat as PC
 from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
-                         ModelRegistry, StaticScheduler)
+                         ModelRegistry, StaticScheduler, TelemetryConfig,
+                         TelemetryExporter, TraceConfig, engine_sample)
 
 
 def provenance(seed: int) -> dict:
@@ -149,15 +157,24 @@ class PackedRouteCounter:
 
 
 def run_one(model, trace, n_slots: int, max_len: int, scheduler, *,
-            device_loop: bool = True, decode_chunk: int = 1, backend=None):
+            device_loop: bool = True, decode_chunk: int = 1, backend=None,
+            trace_cfg=None, telemetry_jsonl: str = ""):
     eng = InferenceEngine(
         model, EngineConfig(n_slots=n_slots, max_len=max_len,
                             device_loop=device_loop,
-                            decode_chunk=decode_chunk),
+                            decode_chunk=decode_chunk,
+                            trace=trace_cfg),
         scheduler=scheduler, backend=backend)
     for arrival, prompt, gen in trace:
         eng.submit(prompt, gen, arrival_step=arrival)
     eng.run()
+    if trace_cfg is not None:
+        eng.trace.export()          # the TraceConfig's out/chrome paths
+    if telemetry_jsonl:
+        # one end-of-run snapshot per mode: the CI artifact shows the full
+        # metric vector per (spec, mode) alongside the event traces
+        TelemetryExporter(lambda: engine_sample(eng),
+                          TelemetryConfig(jsonl=telemetry_jsonl)).sample()
     return eng.metrics.report()
 
 
@@ -335,6 +352,8 @@ def run_prefix_trace(arch: str, n_requests: int, n_slots: int, seed: int,
         "arch": arch, "mode": mode, "page_size": ps,
         "n_pages": np_, "mesh_shape": [1, 1], "n_replicas": 1, **prov,
         "admitted_tok_s": tps, "wall_tok_s": r["tok_per_s"],
+        "tokens_generated": r["tokens_generated"],
+        "decode_steps": r["decode_steps"],
         "tokens_per_dispatch": r["tokens_per_dispatch"],
         # every record reports the prefill economy + pool pressure, the
         # slab side as the zero baseline
@@ -420,6 +439,8 @@ def run_speculative(arch: str, n_requests: int, n_slots: int, seed: int,
         "draft_spec": draft.tag if mode == "speculative" else None,
         "mesh_shape": [1, 1], "n_replicas": 1, **prov,
         "wall_tok_s": tps,
+        "tokens_generated": r["tokens_generated"],
+        "decode_steps": r["decode_steps"],
         "tokens_per_dispatch": r["tokens_per_dispatch"],
         "acceptance_rate": r["acceptance_rate"],
         "draft_rolled_back": r["draft_rolled_back"],
@@ -448,7 +469,7 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
         prompt_range=(4, 24), gen_range=(8, 24), seed: int = 0,
         smoke: bool = False, decode_chunk: int = 4,
         n_replicas: int = 1, mesh_shape=None,
-        out: str = "") -> bool:
+        out: str = "", trace_dir: str = "") -> bool:
     registry = ModelRegistry()
     csv = CSV(["spec", "mode", "toks", "dispatches", "tok_per_step",
                "occupancy", "tok_per_s_wall", "syncs_per_tok",
@@ -470,6 +491,11 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
             else [1, 1],
             "n_replicas": extra.pop("n_replicas", 1),
             "tokens_per_step": rep.get("tokens_per_step", 0.0),
+            # deterministic step-clock integers: QoR gates these EXACTLY
+            # (no EOS in the synthetic traces, so every request generates
+            # its full budget on any platform)
+            "tokens_generated": rep["tokens_generated"],
+            "decode_steps": rep["decode_steps"],
             "wall_tok_s": rep["tok_per_s"],
             "host_syncs_per_token": rep["host_syncs_per_token"],
             "host_syncs_per_dispatch": rep["host_syncs_decode"]
@@ -499,11 +525,24 @@ def run(arch: str = "h2o-danube-1.8b", n_requests: int = 16,
         results = {}
         for mode_name, kw in modes:
             bk = kw.get("backend")
+            # --trace-dir: each (spec, mode) run records the full event
+            # trace; tracing is otherwise OFF (the recorded numbers ARE
+            # the untraced numbers the QoR goldens gate)
+            tcfg = TraceConfig(
+                out=os.path.join(trace_dir,
+                                 f"{spec_name}_{mode_name}.trace.jsonl"),
+                chrome=os.path.join(trace_dir,
+                                    f"{spec_name}_{mode_name}.chrome.json")) \
+                if trace_dir else None
             with PackedRouteCounter() as counter:
                 rep = run_one(model, trace, n_slots, max_len, kw["scheduler"],
                               device_loop=kw["device_loop"],
                               decode_chunk=kw["decode_chunk"],
-                              backend=bk() if bk else None)
+                              backend=bk() if bk else None,
+                              trace_cfg=tcfg,
+                              telemetry_jsonl=os.path.join(
+                                  trace_dir, "telemetry.jsonl")
+                              if trace_dir else "")
             results[mode_name] = rep
             csv.row(spec_name, mode_name, int(rep["tokens_generated"]),
                     int(rep["decode_steps"]), rep["tokens_per_step"],
@@ -654,6 +693,10 @@ def main() -> None:
                     help="truncate the draft to its first N layers (0=all)")
     ap.add_argument("--out", default="",
                     help="write result records to this JSON path")
+    ap.add_argument("--trace-dir", default="",
+                    help="record each (spec, mode) run with the serve "
+                         "tracer: JSONL + Chrome traces and one telemetry "
+                         "snapshot per mode land here (CI artifacts)")
     a = ap.parse_args()
     if a.prefix_trace:
         ok = run_prefix_trace(a.arch or "nemotron-4-340b",
@@ -676,11 +719,12 @@ def main() -> None:
                  prompt_range=(4, 16), gen_range=(8, 16),
                  mean_interarrival=1.5, seed=a.seed, smoke=True,
                  decode_chunk=a.decode_chunk, n_replicas=a.replicas,
-                 mesh_shape=mesh_shape, out=a.out)
+                 mesh_shape=mesh_shape, out=a.out, trace_dir=a.trace_dir)
     else:
         ok = run(a.arch or "h2o-danube-1.8b", n_requests=a.requests or 16, n_slots=a.slots,
                  seed=a.seed, decode_chunk=a.decode_chunk,
-                 n_replicas=a.replicas, mesh_shape=mesh_shape, out=a.out)
+                 n_replicas=a.replicas, mesh_shape=mesh_shape, out=a.out,
+                 trace_dir=a.trace_dir)
     sys.exit(0 if ok else 1)
 
 

@@ -7,7 +7,17 @@
       [--speculate 4 --draft-bits 8 [--draft-sparsity S] \
        [--draft-keep-layers N]] \
       [--page-size P [--n-pages N] [--no-prefix-cache]] \
-      [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run]
+      [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run] \
+      [--trace-out T.jsonl] [--trace-chrome T.json] [--profile-dir D] \
+      [--telemetry-port P] [--telemetry-jsonl S.jsonl]
+
+Observability: `--trace-out` / `--trace-chrome` switch the engines to the
+ring-buffer tracer (serve.trace) and export every lifecycle/dispatch edge
+as JSONL / chrome://tracing JSON after the run; `--profile-dir` brackets
+the first N traced dispatches with jax.profiler (device timeline next to
+the host spans); `--telemetry-port` serves live Prometheus text at
+/metrics during the run and `--telemetry-jsonl` appends one metrics
+snapshot per `--telemetry-interval` (serve.telemetry).
 
 Paged KV + prefix reuse: `--page-size P` switches the KV pool to the
 block-paged form (serve.paging) — per-slot page tables over refcounted
@@ -55,7 +65,9 @@ import numpy as np
 from repro.core.kratos import KratosSpec
 from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
                          LocalBackend, ModelRegistry, ReplicaRouter,
-                         ShardedBackend, StaticScheduler)
+                         ShardedBackend, StaticScheduler, TelemetryConfig,
+                         TelemetryExporter, TraceConfig, engine_sample,
+                         export_chrome, export_jsonl, router_sample)
 
 
 def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
@@ -191,6 +203,24 @@ def main() -> None:
     ap.add_argument("--dry-run", action="store_true",
                     help="print resolved cache/state shardings + decode cost "
                          "for --mesh and exit (no traffic)")
+    ap.add_argument("--trace-out", default="",
+                    help="record every lifecycle/dispatch edge (serve.trace) "
+                         "and export the JSONL event stream here")
+    ap.add_argument("--trace-chrome", default="",
+                    help="export the trace as chrome://tracing JSON (one "
+                         "process per replica, one track per slot)")
+    ap.add_argument("--profile-dir", default="",
+                    help="bracket the first --profile-dispatches traced "
+                         "dispatches with jax.profiler (TensorBoard dir)")
+    ap.add_argument("--profile-dispatches", type=int, default=3,
+                    help="dispatches inside the --profile-dir bracket")
+    ap.add_argument("--telemetry-port", type=int, default=-1,
+                    help="serve Prometheus text on 127.0.0.1:PORT/metrics "
+                         "during the run (0 = ephemeral port; -1 = off)")
+    ap.add_argument("--telemetry-interval", type=float, default=1.0,
+                    help="telemetry snapshot cadence, seconds")
+    ap.add_argument("--telemetry-jsonl", default="",
+                    help="append one JSON metrics snapshot per interval here")
     args = ap.parse_args()
 
     from repro.launch import mesh as M
@@ -216,6 +246,11 @@ def main() -> None:
 
     max_len = args.max_len or (model.cfg.n_img_tokens + args.prompt_len
                                + args.gen + 8)
+    tracing = bool(args.trace_out or args.trace_chrome or args.profile_dir)
+    trace_cfg = TraceConfig(
+        out=args.trace_out or None, chrome=args.trace_chrome or None,
+        profile_dir=args.profile_dir or None,
+        profile_dispatches=args.profile_dispatches) if tracing else None
     cfg = EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
                        device_loop=not args.host_loop,
                        decode_chunk=args.decode_chunk,
@@ -223,7 +258,8 @@ def main() -> None:
                        max_waiting=args.max_waiting or None,
                        page_size=args.page_size or None,
                        n_pages=args.n_pages or None,
-                       prefix_cache=not args.no_prefix_cache)
+                       prefix_cache=not args.no_prefix_cache,
+                       trace=trace_cfg)
     mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
 
     if args.dry_run:
@@ -250,16 +286,32 @@ def main() -> None:
             s0 = max(1, args.prompt_len + int(rng.integers(-4, 5)))
             yield rng.integers(0, model.cfg.vocab, s0), args.gen, i
 
+    def telemetry_for(sample_fn):
+        if args.telemetry_port < 0 and not args.telemetry_jsonl:
+            return None
+        exp = TelemetryExporter(sample_fn, TelemetryConfig(
+            interval=args.telemetry_interval,
+            port=args.telemetry_port if args.telemetry_port >= 0 else None,
+            jsonl=args.telemetry_jsonl or None))
+        exp.start()
+        if exp.port is not None:
+            print(f"[serve] telemetry: http://127.0.0.1:{exp.port}/metrics")
+        return exp
+
     if args.replicas > 1:
         router = ReplicaRouter.build(
             model, cfg, args.replicas,
             backend_factory=backend_for,
             scheduler_factory=(lambda i: StaticScheduler()) if args.static
             else None)
+        telemetry = telemetry_for(lambda: router_sample(router))
         reqs = [router.submit(p, g, arrival_step=at,
                               temperature=args.temperature)
                 for p, g, at in trace()]
         router.run()
+        if telemetry is not None:
+            telemetry.stop()
+        tracers = router.tracers
         print(f"[serve] router {router.format_report()}")
     else:
         from repro.serve import EngineSaturated
@@ -267,6 +319,7 @@ def main() -> None:
             model, cfg,
             scheduler=StaticScheduler() if args.static else None,
             backend=backend_for(0))
+        telemetry = telemetry_for(lambda: engine_sample(engine))
         reqs = []
         for p, g, at in trace():
             # bounded deque + upfront trace submission: back off like a
@@ -279,9 +332,24 @@ def main() -> None:
                 except EngineSaturated:
                     engine.step()
         engine.run()
+        if telemetry is not None:
+            telemetry.stop()
+        tracers = [engine.trace] if engine.trace.enabled else []
         print(f"[serve] scheduler={engine.scheduler.name} "
               f"backend={engine.backend.name} "
               f"{engine.metrics.format_report()}")
+    if tracers:
+        if args.trace_out:
+            n = export_jsonl(tracers, args.trace_out)
+            print(f"[serve] trace: {n} events -> {args.trace_out}")
+        if args.trace_chrome:
+            n = export_chrome(tracers, args.trace_chrome)
+            print(f"[serve] chrome trace: {n} events -> {args.trace_chrome} "
+                  f"(open in chrome://tracing or ui.perfetto.dev)")
+        if args.profile_dir:
+            print(f"[serve] profiler capture (first "
+                  f"{args.profile_dispatches} dispatches) -> "
+                  f"{args.profile_dir}")
     for r in reqs[:2]:
         print(f"  req{r.id}: {np.asarray(r.generated)[:16]} ...")
 

@@ -81,6 +81,19 @@ Layout:
                  rejections, draft acceptance/rollback rates, prefix hit
                  rate / prefill tokens skipped / page-pool occupancy;
                  `ServeMetrics.aggregate` pools replicas.
+  trace.py       ring-buffer lifecycle/dispatch tracer (PR 6): every edge —
+                 submit/admit/prefill/first-token/finish, decode and
+                 speculative dispatches, host syncs, page traffic — in BOTH
+                 clocks (engine step + monotonic wall); span pairing into
+                 per-request TTFT/decode/queue timelines that reconcile
+                 exactly with ServeMetrics; JSONL + chrome://tracing
+                 exports; a jax.profiler bracket around the first traced
+                 dispatches. `EngineConfig.trace=None` serves the shared
+                 NULL_TRACER — zero-cost disabled (gated by test).
+  telemetry.py   live counter/gauge/histogram registry snapshotting
+                 ServeMetrics + page pool + router queue depths on a
+                 cadence; Prometheus text over stdlib http.server
+                 (`GET /metrics`) and JSONL time-series snapshots.
 
 Quickstart:
 
@@ -109,6 +122,11 @@ from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    StaticScheduler, replica_load)
 from repro.serve.speculative import DraftSpec
+from repro.serve.telemetry import (TelemetryConfig, TelemetryExporter,
+                                   TelemetryRegistry, engine_sample,
+                                   router_sample)
+from repro.serve.trace import (NULL_TRACER, TraceConfig, Tracer,
+                               export_chrome, export_jsonl)
 
 __all__ = [
     "CachePool", "PoolExhausted", "DraftSpec", "EngineConfig",
@@ -117,4 +135,7 @@ __all__ = [
     "prefix_supported", "ReplicaRouter", "ServeMetrics", "ModelRegistry",
     "PackedModel", "pack_model_params", "ContinuousScheduler",
     "StaticScheduler", "Request", "replica_load",
+    "NULL_TRACER", "TraceConfig", "Tracer", "export_chrome", "export_jsonl",
+    "TelemetryConfig", "TelemetryExporter", "TelemetryRegistry",
+    "engine_sample", "router_sample",
 ]

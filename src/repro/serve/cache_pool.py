@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
+from repro.serve.trace import NULL_TRACER
 
 
 @contextlib.contextmanager
@@ -74,6 +75,11 @@ def _write_tree(slab: Dict, single: Dict, slot) -> Dict:
 
 class CachePool:
     """Fixed-slot KV pool; slots are reused LIFO (hot rows stay hot)."""
+
+    # class attribute: the engine re-points this at its Tracer when tracing
+    # is on; the slab pool emits no page events, but sharing the attribute
+    # keeps the backend surface uniform with PagedCachePool
+    tracer = NULL_TRACER
 
     def __init__(self, cfg: T.ModelConfig, n_slots: int, max_len: int,
                  dtype=jnp.float32, *, mesh=None):

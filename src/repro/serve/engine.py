@@ -114,6 +114,7 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import PackedModel
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    SchedulerBase)
+from repro.serve.trace import NULL_TRACER, TraceConfig, Tracer
 
 
 class EngineSaturated(RuntimeError):
@@ -150,6 +151,13 @@ class EngineConfig:
     page_size: Optional[int] = None
     n_pages: Optional[int] = None
     prefix_cache: bool = True
+    # tracing (serve.trace): None = OFF, served by the shared no-op tracer —
+    # the hot path's only residue is one attribute lookup + a fixed-arity
+    # no-op call per edge (allocation-free, gated by test_trace). Set a
+    # TraceConfig to record every lifecycle/dispatch edge into the ring
+    # buffer, with optional JSONL/Chrome export paths and a jax.profiler
+    # bracket around the first N traced dispatches.
+    trace: Optional[TraceConfig] = None
 
 
 class InferenceEngine:
@@ -203,6 +211,22 @@ class InferenceEngine:
         self.backend = backend or LocalBackend()
         self.backend.build(model, cfg)
         self.pool = self.backend.pool
+        self.trace = Tracer(cfg.trace) if cfg.trace is not None \
+            else NULL_TRACER
+        self.pool.tracer = self.trace
+        if self.backend.draft_pool is not None:
+            self.backend.draft_pool.tracer = self.trace
+        # per-dispatch host-sync payload, precomputed so every hot-path
+        # tracer call passes only pre-existing values (the zero-allocation
+        # contract of the disabled path — tests/test_trace.py)
+        if cfg.speculate:
+            # commit block (B, K+1) + commit counts (B,) + accepts (B,)
+            self._sync_bytes = 4 * cfg.n_slots * (cfg.speculate + 3)
+        elif cfg.device_loop:
+            self._sync_bytes = 4 * cfg.n_slots * cfg.decode_chunk
+        else:
+            # full-vocab logits pull + token and index re-uploads
+            self._sync_bytes = 4 * cfg.n_slots * (mcfg.vocab + 2)
         if cfg.speculate:
             self.metrics.draft_flop_fraction = model.draft_cost_fraction()
             # target verify forwards per cycle (mirrors the steps builder)
@@ -265,6 +289,7 @@ class InferenceEngine:
         if self.cfg.max_waiting is not None \
                 and len(self._waiting) >= self.cfg.max_waiting:
             self.metrics.on_reject()
+            self.trace.reject(len(self._waiting))
             raise EngineSaturated(
                 f"waiting deque at max_waiting={self.cfg.max_waiting}")
         r.id = self._next_id
@@ -272,6 +297,7 @@ class InferenceEngine:
         self.requests[r.id] = r
         self._waiting.append(r)
         self.metrics.on_submit(r.id, r.arrival_step, len(r.prompt))
+        self.trace.submit(r.id, len(r.prompt), r.arrival_step)
         return r
 
     def steal_waiting(self, n: int) -> List[Request]:
@@ -299,6 +325,7 @@ class InferenceEngine:
 
     def step(self) -> None:
         """One engine step: admissions, then one slab decode dispatch."""
+        self.trace.step = self.step_count
         arrived = [r for r in self._waiting
                    if r.arrival_step <= self.step_count]
         admitted = self.scheduler.admissible(arrived, self.pool.n_active,
@@ -322,6 +349,7 @@ class InferenceEngine:
                     for rr in reversed(admitted[i:]):
                         self._waiting.appendleft(rr)
                     self.metrics.on_pool_wait()
+                    self.trace.pool_wait()
                     break
         if self.pool.n_active:
             if self.cfg.speculate:
@@ -383,12 +411,18 @@ class InferenceEngine:
     def _emit(self, r: Request, tok: int, step: int) -> None:
         r.generated.append(tok)
         self.metrics.on_token(r.id, step)
+        if len(r.generated) == 1:
+            # explicit step (not tracer.step): micro-steps within a K-block
+            # advance the emission clock ahead of the dispatch clock, and
+            # spans must reconcile exactly with ServeMetrics
+            self.trace.first_token(r.id, r.slot, step)
         if r.on_token is not None:
             r.on_token(r, tok)
         done = len(r.generated) >= r.max_new_tokens \
             or (r.eos_id is not None and tok == r.eos_id)
         if done:
             r.state = "done"
+            self.trace.finish(r.id, r.slot, step, len(r.generated))
             self.pool.free(r.slot)
             self._slots[r.slot] = None
             self.metrics.on_finish(r.id, step)
@@ -448,9 +482,15 @@ class InferenceEngine:
         r.index = n_img + s0
         self._slots[slot] = r
         self.metrics.on_start(r.id, self.step_count)
+        self.trace.admit(r.id, slot, matched, s0)
+        if matched:
+            self.trace.prefill(r.id, slot, s_sfx, sp_sfx, True)
+        else:
+            self.trace.prefill(r.id, slot, s0, sp, False)
         if self.cfg.device_loop:
             tok = self.backend.first_token(row, r.id, r.temperature)
             self.metrics.on_host_sync("prefill")     # the one int32 pulled
+            self.trace.host_sync("prefill", 4)
             eos = -1 if r.eos_id is None else int(r.eos_id)
             rem = 0 if (r.eos_id is not None and tok == r.eos_id) \
                 else r.max_new_tokens - 1
@@ -459,6 +499,7 @@ class InferenceEngine:
         else:
             tok = self._sample_host(np.asarray(row[0]), r)
             self.metrics.on_host_sync("prefill")
+            self.trace.host_sync("prefill", 4)
             self._tokens[slot, 0] = tok
             self._indices[slot] = r.index
         self._emit(r, tok, self.step_count)  # may finish (max_new_tokens == 1)
@@ -467,10 +508,14 @@ class InferenceEngine:
         """Device-resident path: ONE dispatch = K fused micro-steps; sync a
         (K, B) int32 token block and catch host bookkeeping up to it."""
         k = self.cfg.decode_chunk
-        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots,
+        n_active = self.pool.n_active
+        self.metrics.on_decode_step(n_active, self.cfg.n_slots,
                                     micro_steps=k)
+        self.trace.dispatch_begin()
         block = self.backend.decode_block()
+        self.trace.decode_dispatch(k, n_active, self.cfg.n_slots)
         self.metrics.on_host_sync("decode")
+        self.trace.host_sync("decode", self._sync_bytes)
         for j in range(k):
             step = self.step_count + j
             for slot in range(self.cfg.n_slots):
@@ -500,13 +545,17 @@ class InferenceEngine:
         advances by the deepest commit (speculation compresses wall
         dispatches, not the step-latency bookkeeping)."""
         k = self.cfg.speculate
+        n_active = self.pool.n_active
         # slab forwards actually run per cycle: k+1 draft micro-steps plus
         # the target verify — one batched forward for positional-cache
         # archs, k+1 micro-steps for recurrent ones (steps builder)
-        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots,
+        self.metrics.on_decode_step(n_active, self.cfg.n_slots,
                                     micro_steps=(k + 1) + self._verify_steps)
+        self.trace.dispatch_begin()
         block, n_commit, n_accept = self.backend.spec_decode_block()
+        self.trace.spec_dispatch(k, n_active, self.cfg.n_slots)
         self.metrics.on_host_sync("decode")
+        self.trace.host_sync("decode", self._sync_bytes)
         advanced, proposed, accepted = 1, 0, 0
         for slot in range(self.cfg.n_slots):
             r = self._slots[slot]
@@ -528,10 +577,11 @@ class InferenceEngine:
                 # had a commit chance either
                 lim = min(lim, m)
             proposed += lim
-            accepted += int(n_accept[slot])
+            acc = int(n_accept[slot])
+            accepted += acc
             if lim:
-                self.metrics.on_slot_speculation(slot, int(n_accept[slot]),
-                                                 lim)
+                self.metrics.on_slot_speculation(slot, acc, lim)
+                self.trace.spec_slot(slot, acc, m, lim)
         self.metrics.on_spec_dispatch(proposed=proposed, accepted=accepted)
         return advanced
 
@@ -539,10 +589,14 @@ class InferenceEngine:
         """PR-1 host loop: full-vocab logits pulled, numpy sampling, token +
         index vectors re-uploaded every step. Kept as the measured baseline
         (serve_bench 'host' mode) and as the numpy-rng sampling reference."""
-        self.metrics.on_decode_step(self.pool.n_active, self.cfg.n_slots)
+        n_active = self.pool.n_active
+        self.metrics.on_decode_step(n_active, self.cfg.n_slots)
+        self.trace.dispatch_begin()
         rows = self.backend.decode_host(self._tokens, self._indices)
+        self.trace.decode_dispatch(1, n_active, self.cfg.n_slots)
         # logits pull + token and index uploads: 3 crossings per step
         self.metrics.on_host_sync("decode", 3)
+        self.trace.host_sync("decode", self._sync_bytes)
         for slot, r in enumerate(self._slots):
             if r is None:
                 continue

@@ -18,6 +18,11 @@ uploads); the fused loop costs 1 per K-step dispatch (the (K, B) int32 token
 block). `host_syncs_per_token` in the report divides decode-kind syncs by
 DECODED tokens (tokens_generated minus the per-request first tokens, which
 come from prefill).
+
+Clock discipline: every INTERVAL (wall elapsed, request latency, TTFT) is
+measured on `time.perf_counter()` — monotonic, immune to NTP slews and
+clock jumps. The per-request `submit_time` wall timestamp (`time.time()`)
+is kept purely as a human-readable log anchor and is never subtracted.
 """
 
 from __future__ import annotations
@@ -45,16 +50,18 @@ class RequestRecord:
     finish_step: int = -1
     n_prompt: int = 0
     n_generated: int = 0
-    submit_time: float = 0.0
-    first_token_time: float = 0.0
-    finish_time: float = 0.0
+    submit_time: float = 0.0        # wall clock, for logs only (never
+    #                                 subtracted — see module docstring)
+    first_token_time: float = 0.0   # monotonic (perf_counter)
+    finish_time: float = 0.0        # monotonic (perf_counter)
+    submit_mono: float = 0.0        # monotonic submit: interval baseline
 
 
 class ServeMetrics:
     """Engine-side counters; one instance per engine run."""
 
     def __init__(self) -> None:
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()     # monotonic: intervals only
         self.decode_steps = 0                 # dispatches (K micro-steps each)
         self.micro_steps = 0                  # slab forwards actually run
         self.idle_steps = 0
@@ -84,7 +91,8 @@ class ServeMetrics:
     def on_submit(self, request_id: int, arrival_step: int, n_prompt: int) -> None:
         self.records[request_id] = RequestRecord(
             request_id=request_id, arrival_step=arrival_step,
-            n_prompt=n_prompt, submit_time=time.time())
+            n_prompt=n_prompt, submit_time=time.time(),
+            submit_mono=time.perf_counter())
 
     def on_start(self, request_id: int, step: int) -> None:
         rec = self.records[request_id]
@@ -95,14 +103,14 @@ class ServeMetrics:
         rec = self.records[request_id]
         if rec.first_token_step < 0:
             rec.first_token_step = step
-            rec.first_token_time = time.time()
+            rec.first_token_time = time.perf_counter()
         rec.n_generated += 1
         self.tokens_generated += 1
 
     def on_finish(self, request_id: int, step: int) -> None:
         rec = self.records[request_id]
         rec.finish_step = step
-        rec.finish_time = time.time()
+        rec.finish_time = time.perf_counter()
 
     def on_decode_step(self, n_active: int, n_slots: int,
                        micro_steps: int = 1) -> None:
@@ -162,13 +170,13 @@ class ServeMetrics:
     # -- report -------------------------------------------------------------
 
     def report(self) -> Dict[str, float]:
-        elapsed = max(time.time() - self.t0, 1e-9)
+        elapsed = max(time.perf_counter() - self.t0, 1e-9)
         tokens_per_dispatch = self.tokens_generated / max(1, self.decode_steps)
         done = [r for r in self.records.values() if r.finish_step >= 0]
         lat_steps = [float(r.finish_step - r.arrival_step) for r in done]
         ttft_steps = [float(r.first_token_step - r.arrival_step)
                       for r in done if r.first_token_step >= 0]
-        lat_wall = [r.finish_time - r.submit_time for r in done]
+        lat_wall = [r.finish_time - r.submit_mono for r in done]
         decoded = max(0, self.tokens_generated - self.prefills)
         return {
             "requests_completed": float(len(done)),
@@ -228,13 +236,18 @@ class ServeMetrics:
         percentiles pool the union of per-request records (not a mean of
         per-replica percentiles — p99 of a fleet is a fleet-level quantile),
         occupancy is dispatch-weighted. Step-clock rates are left to the
-        router, which owns the shared clock (tokens_per_router_step)."""
+        router, which owns the shared clock (tokens_per_router_step).
+
+        Schema contract: the returned key set is exactly `report()`'s plus
+        the documented FLEET-ONLY keys (`n_replicas`) — a serve_bench gate
+        that reads a key off a single engine's report must find the same
+        key here (tests/test_metrics.py gates the parity)."""
         done = [r for m in metrics_list for r in m.records.values()
                 if r.finish_step >= 0]
         lat_steps = [float(r.finish_step - r.arrival_step) for r in done]
         ttft_steps = [float(r.first_token_step - r.arrival_step)
                       for r in done if r.first_token_step >= 0]
-        lat_wall = [r.finish_time - r.submit_time for r in done]
+        lat_wall = [r.finish_time - r.submit_mono for r in done]
         dispatches = sum(m.decode_steps for m in metrics_list)
         occ_num = sum(sum(m.occupancy) for m in metrics_list)
         occ_den = sum(len(m.occupancy) for m in metrics_list)
@@ -255,8 +268,9 @@ class ServeMetrics:
         page_den = sum(len(m.page_samples) for m in metrics_list)
         page_cap = sum(len(m.page_samples) * m.page_capacity
                        for m in metrics_list)
-        elapsed = max(max((time.time() - m.t0 for m in metrics_list),
+        elapsed = max(max((time.perf_counter() - m.t0 for m in metrics_list),
                           default=0.0), 1e-9)
+        tokens_per_dispatch = tokens / max(1, dispatches)
         return {
             "n_replicas": float(len(metrics_list)),
             "requests_completed": float(len(done)),
@@ -266,10 +280,16 @@ class ServeMetrics:
             "micro_steps": float(sum(m.micro_steps for m in metrics_list)),
             "idle_steps": float(sum(m.idle_steps for m in metrics_list)),
             "host_syncs_decode": float(syncs_d),
+            "host_syncs_prefill": float(sum(
+                m.host_syncs.get("prefill", 0) for m in metrics_list)),
             "host_syncs_per_token": syncs_d / max(1, decoded),
             "wall_seconds": elapsed,
             "tok_per_s": tokens / elapsed,
-            "tokens_per_dispatch": tokens / max(1, dispatches),
+            # aliased exactly like report() — serve_bench gates read either
+            # name, so the fleet report must expose both or a gate that
+            # works on a single engine silently breaks on the fleet
+            "tokens_per_step": tokens_per_dispatch,
+            "tokens_per_dispatch": tokens_per_dispatch,
             # fleet-pooled speculation: acceptance is accepted/proposed over
             # the union of cycles, not a mean of per-replica rates
             "spec_dispatches": float(sum(m.spec_dispatches

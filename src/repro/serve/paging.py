@@ -64,6 +64,7 @@ import numpy as np
 from repro.models import transformer as T
 from repro.serve.cache_pool import PoolExhausted, quiet_donation
 from repro.serve.prefix import PrefixIndex
+from repro.serve.trace import NULL_TRACER
 
 
 def prefix_supported(cfg: T.ModelConfig) -> bool:
@@ -223,6 +224,10 @@ class PagedCachePool:
     write headroom, exactly like CachePool.
     """
 
+    # re-pointed at the engine's Tracer when tracing is on (page alloc/
+    # free/evict events); admission-path only, never the decode hot path
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: T.ModelConfig, n_slots: int, max_len: int,
                  dtype=jnp.float32, *, page_size: int,
                  n_pages: Optional[int] = None, prefix_cache: bool = True,
@@ -303,6 +308,7 @@ class PagedCachePool:
             raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
         if slot in self._free_slots:
             raise ValueError(f"double-free of slot {slot}")
+        self.tracer.page_free(slot, len(self._slot_pages[slot]))
         for p in self._slot_pages[slot]:
             self._release(p)
         self._slot_pages[slot] = []
@@ -355,9 +361,13 @@ class PagedCachePool:
             self._retain(p)     # before eviction: a matched page is pinned
         n_new = need - len(shared)
         if n_new > len(self._free_pages) and self.index is not None:
+            free_before = len(self._free_pages)
             self.index.evict(n_new - len(self._free_pages),
                              can_free=lambda p: self.refs[p] == 1,
                              release=self._release)
+            freed = len(self._free_pages) - free_before
+            if freed:
+                self.tracer.page_evict(freed)
         if n_new > len(self._free_pages):
             for p in shared:
                 self._release(p)
@@ -367,6 +377,7 @@ class PagedCachePool:
         fresh = [self._free_pages.pop() for _ in range(n_new)]
         for p in fresh:
             self.refs[p] = 1
+        self.tracer.page_alloc(slot, len(shared), n_new)
         pages = shared + fresh
         self._slot_pages[slot] = pages
         row = np.zeros((self.pp,), np.int32)

@@ -53,6 +53,8 @@ class ReplicaRouter:
         if not replicas:
             raise ValueError("router needs at least one replica")
         self.replicas = list(replicas)
+        for i, eng in enumerate(self.replicas):
+            eng.trace.replica = i      # stamps events + Chrome process ids
         self.hold_overflow = hold_overflow
         self._overflow: collections.deque = collections.deque()
         self._rr = 0                      # rotating tiebreak for equal loads
@@ -144,6 +146,13 @@ class ReplicaRouter:
             "rebalanced": float(self.rebalanced),
         })
         return rep
+
+    @property
+    def tracers(self) -> List[Any]:
+        """Replica tracers with events (empty when tracing is off) — feed
+        straight into trace.export_jsonl / trace.export_chrome for one
+        merged fleet trace, one Chrome process per replica."""
+        return [e.trace for e in self.replicas if e.trace.enabled]
 
     def format_report(self) -> str:
         r = self.report()

@@ -1,0 +1,146 @@
+"""ServeMetrics unit coverage: percentile edges, report/aggregate schema
+parity, fleet pooling discipline, monotonic interval clocks.
+
+These are pure-python tests (no engine, no jax) — the metric layer's
+contracts that serve_bench and the QoR gates build on:
+
+  * `percentile` behaves at the edges (empty -> nan, single element,
+    q=0/100 pin to min/max);
+  * `aggregate()` exposes EXACTLY `report()`'s key set plus the documented
+    fleet-only keys, so a bench gate that reads a key off one engine's
+    report can never miss it on the fleet report;
+  * fleet percentiles pool the UNION of per-request records — on a skewed
+    fixture the pooled p99 provably differs from the mean of per-replica
+    p99s (the wrong aggregation this test exists to forbid);
+  * latency/TTFT intervals are measured on time.perf_counter(): a wall
+    clock jumping BACKWARDS (NTP slew) between submit and finish must not
+    produce a negative latency.
+"""
+
+import time
+
+import pytest
+
+from repro.serve.metrics import RequestRecord, ServeMetrics, percentile
+
+# fleet-only keys aggregate() may expose beyond report()'s schema —
+# documented in ServeMetrics.aggregate; everything else must be in parity
+FLEET_ONLY_KEYS = {"n_replicas"}
+
+
+# ------------------------------------------------------------- percentile
+
+def test_percentile_empty_is_nan():
+    assert percentile([], 50) != percentile([], 50)  # NaN
+
+def test_percentile_single_element_any_q():
+    for q in (0, 1, 50, 99, 100):
+        assert percentile([7.5], q) == 7.5
+
+def test_percentile_q0_q100_pin_min_max():
+    xs = [5.0, 1.0, 9.0, 3.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 9.0
+
+def test_percentile_median_nearest_rank():
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0
+    assert percentile([4.0, 1.0], 100) == 4.0
+    assert percentile([4.0, 1.0], 0) == 1.0
+
+
+# ----------------------------------------------------------- test fixtures
+
+def _metrics_with_latencies(lat_steps, start_id=0):
+    """A ServeMetrics whose finished records have the given step latencies
+    (arrival 0, finish at `lat`), with enough token/dispatch traffic to
+    exercise every derived rate."""
+    m = ServeMetrics()
+    for i, lat in enumerate(lat_steps):
+        rid = start_id + i
+        m.on_submit(rid, 0, n_prompt=4)
+        m.on_start(rid, 0)
+        m.on_token(rid, 0)
+        m.on_finish(rid, int(lat))
+        m.records[rid].finish_step = int(lat)
+        m.on_decode_step(1, 2)
+        m.on_host_sync("decode")
+        m.on_host_sync("prefill")
+    return m
+
+
+# ---------------------------------------------------------- schema parity
+
+def test_aggregate_schema_matches_report():
+    """aggregate() keys == report() keys + documented fleet-only keys.
+    This is the drift this PR fixed (host_syncs_prefill and the
+    tokens_per_step alias were missing from the fleet report)."""
+    m1 = _metrics_with_latencies([3, 5])
+    m2 = _metrics_with_latencies([4], start_id=10)
+    rep = m1.report()
+    agg = ServeMetrics.aggregate([m1, m2])
+    assert set(agg) - set(rep) == FLEET_ONLY_KEYS
+    assert set(rep) - set(agg) == set()
+
+def test_aggregate_has_fixed_keys():
+    agg = ServeMetrics.aggregate([_metrics_with_latencies([2])])
+    for key in ("host_syncs_prefill", "tokens_per_step",
+                "tokens_per_dispatch", "host_syncs_decode"):
+        assert key in agg
+    assert agg["tokens_per_step"] == agg["tokens_per_dispatch"]
+
+
+# ------------------------------------------------------ pooling discipline
+
+def test_fleet_percentile_pools_records_not_means():
+    """Skewed fixture: replica A has 9 fast requests, replica B has 1 slow
+    one. The fleet p99 over the pooled union is the slow request; the mean
+    of per-replica p99s is far lower. aggregate() must produce the former."""
+    fast = _metrics_with_latencies([1] * 9)
+    slow = _metrics_with_latencies([100], start_id=50)
+    pooled = ServeMetrics.aggregate([fast, slow])
+    p99_fast = fast.report()["latency_steps_p99"]
+    p99_slow = slow.report()["latency_steps_p99"]
+    mean_of_p99s = (p99_fast + p99_slow) / 2          # 50.5 — the WRONG way
+    assert pooled["latency_steps_p99"] == 100.0
+    assert pooled["latency_steps_p99"] != pytest.approx(mean_of_p99s)
+    # p50 of the pooled union is still a fast request
+    assert pooled["latency_steps_p50"] == 1.0
+
+def test_aggregate_counters_sum():
+    a = _metrics_with_latencies([1, 2])
+    b = _metrics_with_latencies([3], start_id=20)
+    agg = ServeMetrics.aggregate([a, b])
+    assert agg["tokens_generated"] == 3.0
+    assert agg["requests_completed"] == 3.0
+    assert agg["host_syncs_prefill"] == 3.0
+    assert agg["n_replicas"] == 2.0
+
+
+# ------------------------------------------------------- monotonic clocks
+
+def test_latency_monotonic_under_wall_clock_jump(monkeypatch):
+    """time.time() jumping BACKWARDS between submit and finish must not
+    yield a negative latency: intervals are perf_counter-based."""
+    m = ServeMetrics()
+    walls = iter([1e9, 1e9 - 3600.0])     # submit, then a 1h backwards slew
+    monkeypatch.setattr(time, "time", lambda: next(walls))
+    m.on_submit(0, 0, n_prompt=2)
+    m.on_start(0, 0)
+    m.on_token(0, 1)
+    m.on_finish(0, 2)
+    rep = m.report()
+    assert rep["latency_s_p50"] >= 0.0
+    assert rep["latency_s_p99"] >= 0.0
+
+def test_submit_wall_timestamp_still_wall_clock(monkeypatch):
+    """The human-readable submit_time log anchor stays time.time()."""
+    m = ServeMetrics()
+    monkeypatch.setattr(time, "time", lambda: 1234.5)
+    m.on_submit(0, 0, n_prompt=1)
+    assert m.records[0].submit_time == 1234.5
+    # ... while the interval baseline is a separate monotonic stamp
+    assert m.records[0].submit_mono != 1234.5
+
+def test_record_fields_document_clock_split():
+    rec = RequestRecord(request_id=0, arrival_step=0)
+    assert hasattr(rec, "submit_mono") and hasattr(rec, "submit_time")

@@ -1,0 +1,146 @@
+"""benchmarks/qor.py: direction-aware QoR gates against golden records.
+
+Pure-python (no engine): gates must fail on regressions past tolerance,
+pass on improvements and within-tolerance noise, treat exact metrics as
+behavior identity, never gate wall-clock/info metrics, and fail loudly
+when a gated metric or a whole golden record silently disappears."""
+
+import json
+
+import pytest
+
+from benchmarks import qor
+
+
+def _rec(**over):
+    rec = {
+        "arch": "h2o-danube-1.8b", "spec": "dense", "mode": "device",
+        "decode_chunk": 4, "n_replicas": 1,
+        "tokens_generated": 91.0, "decode_steps": 10.0,
+        "tokens_per_step": 9.1, "tokens_per_dispatch": 9.1,
+        "mean_occupancy": 0.6, "host_syncs_per_dispatch": 1.0,
+        "host_syncs_per_token": 0.12, "latency_steps_p50": 25.0,
+        "wall_tok_s": 5.2,
+    }
+    rec.update(over)
+    return rec
+
+
+def _files(golden_recs, new_recs):
+    return {"records": golden_recs}, {"records": new_recs}
+
+
+# ------------------------------------------------------------ compare_metric
+
+def test_higher_metric_regression_fails():
+    assert qor.compare_metric("tokens_per_step", 10.0, 9.0) is not None
+
+def test_higher_metric_within_tolerance_passes():
+    # tokens_per_step tol is 2%
+    assert qor.compare_metric("tokens_per_step", 10.0, 9.81) is None
+
+def test_higher_metric_improvement_passes():
+    assert qor.compare_metric("tokens_per_step", 10.0, 14.0) is None
+
+def test_lower_metric_regression_fails():
+    assert qor.compare_metric("latency_steps_p50", 20.0, 23.0) is not None
+
+def test_lower_metric_improvement_passes():
+    assert qor.compare_metric("latency_steps_p50", 20.0, 12.0) is None
+
+def test_exact_metric_any_drift_fails():
+    assert qor.compare_metric("tokens_generated", 91.0, 92.0) is not None
+    assert qor.compare_metric("tokens_generated", 91.0, 90.9999) is not None
+    assert qor.compare_metric("tokens_generated", 91.0, 91.0) is None
+
+def test_info_and_unknown_metrics_never_gate():
+    assert qor.compare_metric("wall_tok_s", 100.0, 1.0) is None
+    assert qor.compare_metric("some_future_metric", 5.0, -5.0) is None
+
+def test_tol_scale_widens_gates():
+    # 5% regression fails at tol 2% but passes with --tol-scale 3
+    assert qor.compare_metric("tokens_per_step", 10.0, 9.5) is not None
+    assert qor.compare_metric("tokens_per_step", 10.0, 9.5,
+                              tol_scale=3.0) is None
+
+
+# ----------------------------------------------------------- compare_records
+
+def test_degraded_record_fails_with_named_metric():
+    fails = qor.compare_records(_rec(), _rec(tokens_per_step=7.0,
+                                             tokens_per_dispatch=7.0))
+    assert fails
+    assert any("tokens_per_step" in m for m in fails)
+
+def test_identical_record_passes():
+    assert qor.compare_records(_rec(), _rec()) == []
+
+def test_missing_gated_metric_fails():
+    new = _rec()
+    del new["mean_occupancy"]
+    fails = qor.compare_records(_rec(), new)
+    assert any("mean_occupancy" in m and "missing" in m for m in fails)
+
+def test_missing_info_metric_is_fine():
+    new = _rec()
+    del new["wall_tok_s"]
+    assert qor.compare_records(_rec(), new) == []
+
+
+# ------------------------------------------------------------- compare_files
+
+def test_record_matching_by_identity_key():
+    g, n = _files([_rec(), _rec(mode="host", decode_steps=25.0,
+                                tokens_per_step=3.6)],
+                  [_rec(mode="host", decode_steps=25.0, tokens_per_step=3.6),
+                   _rec()])           # order must not matter
+    assert qor.compare_files(g, n) == []
+
+def test_vanished_golden_record_fails():
+    g, n = _files([_rec(), _rec(mode="host")], [_rec()])
+    fails = qor.compare_files(g, n)
+    assert len(fails) == 1 and "no match" in fails[0]
+
+def test_extra_new_records_pass():
+    g, n = _files([_rec()], [_rec(), _rec(mode="static")])
+    assert qor.compare_files(g, n) == []
+
+def test_mesh_shape_list_vs_tuple_normalized():
+    assert qor.record_key(_rec(mesh_shape=[2, 2])) \
+        == qor.record_key(_rec(mesh_shape=(2, 2)))
+
+
+# ----------------------------------------------------------------- main/CLI
+
+def _write(path, recs):
+    with open(path, "w") as f:
+        json.dump({"records": recs}, f)
+    return str(path)
+
+def test_main_pass_and_fail_exit_codes(tmp_path):
+    golden = _write(tmp_path / "golden.json", [_rec()])
+    good = _write(tmp_path / "good.json", [_rec(tokens_per_step=9.2,
+                                                tokens_per_dispatch=9.2)])
+    bad = _write(tmp_path / "bad.json", [_rec(tokens_generated=90.0)])
+    assert qor.main([good, "--golden", golden]) == 0
+    assert qor.main([bad, "--golden", golden]) == 1
+
+def test_main_missing_golden_fails(tmp_path):
+    bench = _write(tmp_path / "b.json", [_rec()])
+    assert qor.main([bench, "--golden", str(tmp_path / "nope.json")]) == 1
+
+def test_main_unreadable_bench_fails(tmp_path):
+    assert qor.main([str(tmp_path / "missing.json")]) == 1
+
+def test_main_update_seeds_golden(tmp_path):
+    bench = _write(tmp_path / "b.json", [_rec()])
+    golden = str(tmp_path / "g.json")
+    assert qor.main([bench, "--golden", golden, "--update"]) == 0
+    assert json.load(open(golden))["records"] == [_rec()]
+    # and the seeded golden now gates
+    assert qor.main([bench, "--golden", golden]) == 0
+
+def test_gated_metrics_lists_only_gated(tmp_path):
+    names = qor.gated_metrics({"records": [_rec()]})
+    assert "tokens_generated" in names and "tokens_per_step" in names
+    assert "wall_tok_s" not in names
