@@ -78,6 +78,19 @@ POLICY: Dict[str, Tuple[str, float]] = {
     "spec_vs_plain_dispatch": ("higher", 0.05),
     "draft_verify_flop_ratio": ("lower", 0.02),
     "draft_rolled_back": ("lower", 0.25),
+    # resilience economy (overload trace): all step-clock deterministic —
+    # shedding/demotion decisions ride the engine-step clock, so the
+    # counts are behavior identity, and goodput/step is the gated win
+    "goodput_tokens": ("exact", 0.0),
+    "served_in_deadline": ("exact", 0.0),
+    "deadline_missed_completions": ("exact", 0.0),
+    "shed": ("exact", 0.0),
+    "deadline_missed": ("exact", 0.0),
+    "shed_pool_pressure": ("exact", 0.0),
+    "tier_demotions": ("exact", 0.0),
+    "tier_promotions": ("exact", 0.0),
+    "goodput_tok_per_step": ("higher", 0.02),
+    "resilient_vs_baseline_goodput": ("higher", 0.02),
     # prefix economy
     "prefix_hit_rate": ("higher", 0.02),
     "prefill_skip_fraction": ("higher", 0.02),

@@ -55,6 +55,17 @@ Every JSON record carries the prefill FLOPs saved (2 * N_active * skipped
 tokens) and the page-pool occupancy; `--out results/BENCH_prefix.json` is
 the CI artifact.
 
+Overload-trace mode (PR 7): `--overload-trace` replays a 2x SATURATING
+Poisson trace (token arrivals at twice the chunk-1 slab's service rate)
+through a baseline engine that admits everything and through the resilient
+engine (per-request deadlines + QoS tier ladder + bounded pool-wait
+retries). Gates: resilient >= 1.2x GOODPUT per engine step — deadline-met
+generated tokens on the deterministic step clock — and ZERO completions
+served past their deadline on the resilient side (admission-time doom
+shedding + per-step expiry make that exact at decode_chunk=1). Wall tok/s
+is reported ungated; `--out results/BENCH_overload.json` is the CI
+artifact.
+
 Provenance (PR 4): every JSON record is stamped with the git commit, jax
 version and rng seed, so BENCH trajectories are comparable across runs.
 
@@ -384,6 +395,128 @@ def run_prefix_trace(arch: str, n_requests: int, n_slots: int, seed: int,
     return ok
 
 
+def run_overload_trace(arch: str, n_requests: int, n_slots: int, seed: int,
+                       out: str = "", gate: float = 1.2,
+                       deadline_steps: int = 0) -> bool:
+    """Resilient vs non-degrading engine under 2x saturating Poisson load.
+
+    One trace whose token arrival rate is TWICE the chunk-1 service
+    capacity (n_slots tokens/step) replayed through (a) a BASELINE engine
+    that admits everything and serves it however late, and (b) a RESILIENT
+    engine with per-request deadlines (admission-time doom shedding +
+    in-flight expiry), the QoS tier ladder, and bounded pool-wait retries.
+
+    The gated metric is GOODPUT per engine step — generated tokens of
+    completions that finished BY their deadline, per step on the
+    deterministic engine-step clock. Under 2x load the baseline's queue
+    grows without bound, so late admissions complete far past deadline:
+    their tokens count zero while they still consumed slots. The resilient
+    engine sheds exactly that doomed work at admission, so surviving
+    requests run sooner and finish inside their deadline — the gate is
+    resilient >= `gate`x baseline goodput/step, plus ZERO deadline-missed
+    completions served on the resilient side (at decode_chunk=1 the
+    per-step doom check is exact: any request not shed finishes in time).
+    Wall tok/s is reported ungated (tier demotion's wall benefit needs
+    the packed Pallas kernels, which engage off the ref CPU backend)."""
+    from repro.serve import QoSConfig
+    registry = ModelRegistry()
+    tiers = (DraftSpec.from_args(8, 0.5, 0), DraftSpec.from_args(8, 0.75, 0))
+    model = registry.load(arch, tier_specs=tiers)
+    prompt_range, gen_range = (4, 12), (8, 17)
+    mean_gen = (gen_range[0] + gen_range[1] - 1) / 2.0
+    # 2x saturating: mean token arrival rate = 2 * the n_slots tok/step
+    # that a full chunk-1 slab can serve
+    trace = poisson_trace(n_requests, mean_gen / (2.0 * n_slots),
+                          prompt_range, gen_range, model.cfg.vocab, seed)
+    max_len = model.cfg.n_img_tokens + prompt_range[1] + gen_range[1] + 8
+    # tight enough that the baseline's growing backlog dooms the later
+    # arrivals (queue wait alone exceeds it), loose enough that an
+    # immediately-admitted request finishes comfortably inside it
+    D = deadline_steps or int(2 * mean_gen)
+    prov = provenance(seed)
+
+    def run_side(resilient: bool):
+        cfg = EngineConfig(
+            n_slots=n_slots, max_len=max_len, decode_chunk=1,
+            qos=QoSConfig(demote_depth=4, promote_depth=1, hysteresis=2)
+            if resilient else None,
+            pool_wait_retries=3 if resilient else None)
+        eng = InferenceEngine(model, cfg)
+        t0 = time.time()
+        for arrival, prompt, gen in trace:
+            eng.submit(prompt, gen, arrival_step=arrival,
+                       deadline_steps=D if resilient else None)
+        eng.run()
+        dt = max(time.time() - t0, 1e-9)
+        met_tokens, served, late = 0, 0, 0
+        for r in eng.requests.values():
+            if r.state != "done":
+                continue
+            fin = eng.metrics.records[r.id].finish_step
+            if fin <= r.arrival_step + D:
+                met_tokens += len(r.generated)
+                served += 1
+            else:
+                late += 1
+        rep = eng.metrics.report()
+        return {"engine": eng, "report": rep, "wall_s": dt,
+                "goodput_tokens": met_tokens,
+                "goodput_tok_per_step": met_tokens / max(1, eng.step_count),
+                "served_in_deadline": served,
+                "deadline_missed_completions": late,
+                "steps": eng.step_count}
+
+    base = run_side(False)
+    res = run_side(True)
+    ratio = res["goodput_tok_per_step"] / max(1e-9,
+                                              base["goodput_tok_per_step"])
+    zero_late = res["deadline_missed_completions"] == 0
+    ok = ratio >= gate and zero_late
+    rep_r, rep_b = res["report"], base["report"]
+    print(f"# overload-trace[{arch}] 2x load, D={D} steps: resilient "
+          f"{res['goodput_tok_per_step']:.2f} goodput tok/step vs baseline "
+          f"{base['goodput_tok_per_step']:.2f} ({ratio:.2f}x, gate >= "
+          f"{gate:g}x) [{'PASS' if ratio >= gate else 'FAIL'}] | late "
+          f"completions served {res['deadline_missed_completions']} "
+          f"(baseline {base['deadline_missed_completions']}) "
+          f"[{'PASS' if zero_late else 'FAIL'} == 0] | shed "
+          f"{int(rep_r['shed'])} (deadline {int(rep_r['deadline_missed'])}, "
+          f"pool {int(rep_r['shed_pool_pressure'])}), demotions "
+          f"{int(rep_r['tier_demotions'])} | wall "
+          f"{rep_r['tokens_generated'] / res['wall_s']:.1f} vs "
+          f"{rep_b['tokens_generated'] / base['wall_s']:.1f} tok/s "
+          "(reported not gated)")
+    records = [{
+        "arch": arch, "mode": mode, "decode_chunk": 1,
+        "deadline_steps": D, "mesh_shape": [1, 1], "n_replicas": 1, **prov,
+        "tokens_generated": r["tokens_generated"],
+        "decode_steps": r["decode_steps"],
+        "goodput_tokens": side["goodput_tokens"],
+        "goodput_tok_per_step": side["goodput_tok_per_step"],
+        "served_in_deadline": side["served_in_deadline"],
+        "deadline_missed_completions": side["deadline_missed_completions"],
+        "shed": r["shed"], "deadline_missed": r["deadline_missed"],
+        "shed_pool_pressure": r["shed_pool_pressure"],
+        "tier_demotions": r["tier_demotions"],
+        "tier_promotions": r["tier_promotions"],
+        "wall_tok_s": r["tokens_generated"] / side["wall_s"],
+        "resilient_vs_baseline_goodput": ratio,
+    } for mode, side, r in (("baseline", base, rep_b),
+                            ("resilient", res, rep_r))]
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "n_slots": n_slots,
+                       "deadline_steps": D, "gate": gate,
+                       "resilient_vs_baseline_goodput": ratio, **prov,
+                       "records": records}, f, indent=2)
+        print(f"# wrote {out} ({len(records)} records)")
+    print(f"# serve_bench --overload-trace: {'PASS' if ok else 'FAIL'} — "
+          f"resilient >= {gate:g}x goodput tok/step under 2x load, zero "
+          "deadline-missed completions served")
+    return ok
+
+
 def run_speculative(arch: str, n_requests: int, n_slots: int, seed: int,
                     speculate: int, draft: DraftSpec, out: str = "",
                     gate: float = 1.2) -> bool:
@@ -686,6 +819,14 @@ def main() -> None:
                          "modes")
     ap.add_argument("--page-size", type=int, default=8,
                     help="KV page size for --prefix-trace")
+    ap.add_argument("--overload-trace", action="store_true",
+                    help="resilience mode: deadline+QoS engine vs non-"
+                         "degrading engine under 2x saturating Poisson "
+                         "load, gated >= 1.2x goodput tok/step with zero "
+                         "deadline-missed completions served; skips "
+                         "regular modes")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="--overload-trace deadline (0 = 3x mean gen len)")
     ap.add_argument("--draft-bits", type=int, default=8,
                     help="draft weight bits (0 = native)")
     ap.add_argument("--draft-sparsity", type=float, default=0.0)
@@ -698,6 +839,11 @@ def main() -> None:
                          "tracer: JSONL + Chrome traces and one telemetry "
                          "snapshot per mode land here (CI artifacts)")
     a = ap.parse_args()
+    if a.overload_trace:
+        ok = run_overload_trace(a.arch or "h2o-danube-1.8b",
+                                a.requests or 40, a.slots, a.seed,
+                                out=a.out, deadline_steps=a.deadline_steps)
+        sys.exit(0 if ok else 1)
     if a.prefix_trace:
         ok = run_prefix_trace(a.arch or "nemotron-4-340b",
                               a.requests or 24, a.slots, a.seed,

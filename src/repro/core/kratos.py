@@ -142,8 +142,12 @@ def apply(params: Dict[str, Any], x: jnp.ndarray, spec: KratosSpec = DENSE,
     every model call site stays oblivious.
     """
     if isinstance(params, PackedLinear):
-        return apply_packed(params.buffers, x, spec, params.n_in,
-                            params.n_out, backend=backend)
+        # packed buffers are only meaningful under their pack-time spec —
+        # the arch-wide `spec` argument may describe a DIFFERENT tier of
+        # the same weights (serve.qos tier swaps)
+        return apply_packed(params.buffers, x,
+                            spec if params.spec is None else params.spec,
+                            params.n_in, params.n_out, backend=backend)
     w = params["w"]
     n_in, n_out = w.shape
     lead = x.shape[:-1]
@@ -192,20 +196,31 @@ class PackedLinear:
 
     Stacked scan-block projections keep a leading layer axis on every buffer;
     `lax.scan` slices the leaves per layer while (n_in, n_out) stay static.
+
+    `spec` is the PACK-TIME spec (serving_spec-degraded): the buffers are
+    only meaningful under the plan/bit-layout it describes, so `apply`
+    consults it — not the arch-wide spec of the surrounding config — when
+    dispatching a PackedLinear. This is what lets a QoS tier swap
+    (serve.qos) re-point a live model at a tree packed under a DIFFERENT
+    (sparsity, bits) point: the spec rides in pytree aux-data, so jit
+    retraces against the right plan automatically.
     """
 
     buffers: Dict[str, Any]
     n_in: int
     n_out: int
+    spec: Optional[KratosSpec] = None
 
     def tree_flatten(self):
         keys = tuple(sorted(self.buffers))
-        return tuple(self.buffers[k] for k in keys), (keys, self.n_in, self.n_out)
+        return (tuple(self.buffers[k] for k in keys),
+                (keys, self.n_in, self.n_out, self.spec))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        keys, n_in, n_out = aux
-        return cls(buffers=dict(zip(keys, children)), n_in=n_in, n_out=n_out)
+        keys, n_in, n_out, spec = aux
+        return cls(buffers=dict(zip(keys, children)), n_in=n_in, n_out=n_out,
+                   spec=spec)
 
     @property
     def packed_bytes(self) -> int:
@@ -239,7 +254,7 @@ def pack_linear(params: Dict[str, Any], spec: KratosSpec) -> PackedLinear:
         buffers = jax.vmap(lambda wl: pack({"w": wl}, spec))(w)
     else:
         buffers = pack(params, spec)
-    return PackedLinear(buffers=buffers, n_in=n_in, n_out=n_out)
+    return PackedLinear(buffers=buffers, n_in=n_in, n_out=n_out, spec=spec)
 
 
 def serving_spec(n_in: int, n_out: int, spec: KratosSpec) -> KratosSpec:

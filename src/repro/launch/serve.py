@@ -9,7 +9,19 @@
       [--page-size P [--n-pages N] [--no-prefix-cache]] \
       [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run] \
       [--trace-out T.jsonl] [--trace-chrome T.json] [--profile-dir D] \
-      [--telemetry-port P] [--telemetry-jsonl S.jsonl]
+      [--telemetry-port P] [--telemetry-jsonl S.jsonl] \
+      [--tiers 8:0.5,8:0.75 [--qos-*]] [--deadline-steps D] \
+      [--pool-wait-retries R] [--auto-restart]
+
+Resilience (PR 7): `--tiers bits:sparsity[,...]` loads a QoS degradation
+ladder — the same weights re-packed at cheaper (sparsity, bits) points,
+all resident — and the engine demotes the live decode down the ladder
+under sustained queue depth / page pressure (hysteresis via --qos-*),
+re-promoting when load clears; in-flight streams continue across swaps.
+`--deadline-steps` sheds doomed work at admission and cancels expired
+work in flight; `--pool-wait-retries` bounds PoolExhausted requeues with
+exponential backoff; `--auto-restart` rebuilds a replica the router
+marked dead (serve.qos, serve.chaos, router failover).
 
 Observability: `--trace-out` / `--trace-chrome` switch the engines to the
 ring-buffer tracer (serve.trace) and export every lifecycle/dispatch edge
@@ -64,10 +76,11 @@ import numpy as np
 
 from repro.core.kratos import KratosSpec
 from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
-                         LocalBackend, ModelRegistry, ReplicaRouter,
-                         ShardedBackend, StaticScheduler, TelemetryConfig,
-                         TelemetryExporter, TraceConfig, engine_sample,
-                         export_chrome, export_jsonl, router_sample)
+                         LocalBackend, ModelRegistry, QoSConfig,
+                         ReplicaRouter, ShardedBackend, StaticScheduler,
+                         TelemetryConfig, TelemetryExporter, TraceConfig,
+                         engine_sample, export_chrome, export_jsonl,
+                         parse_tiers, router_sample)
 
 
 def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
@@ -221,6 +234,33 @@ def main() -> None:
                     help="telemetry snapshot cadence, seconds")
     ap.add_argument("--telemetry-jsonl", default="",
                     help="append one JSON metrics snapshot per interval here")
+    ap.add_argument("--tiers", default="",
+                    help="QoS degradation ladder: 'bits:sparsity[,...]' "
+                         "cheapest-last (e.g. '8:0.5,8:0.75') — the registry "
+                         "keeps each tier resident and the engine demotes "
+                         "the live decode to it under load (serve.qos)")
+    ap.add_argument("--qos-demote-depth", type=int, default=8,
+                    help="waiting-queue depth that (with hysteresis) demotes "
+                         "one tier")
+    ap.add_argument("--qos-promote-depth", type=int, default=1,
+                    help="queue depth at/below which the engine re-promotes")
+    ap.add_argument("--qos-hysteresis", type=int, default=4,
+                    help="consecutive steps over/under threshold before a "
+                         "tier change")
+    ap.add_argument("--qos-page-pressure", type=float, default=0.95,
+                    help="page-pool occupancy fraction that also counts as "
+                         "overload (paged engines)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request deadline in engine steps (0 = none): "
+                         "doomed work is shed at admission, expired work "
+                         "cancelled in flight")
+    ap.add_argument("--pool-wait-retries", type=int, default=-1,
+                    help="bound PoolExhausted requeues per request with "
+                         "exponential backoff; past the cap the request is "
+                         "shed (-1 = unbounded legacy wait)")
+    ap.add_argument("--auto-restart", action="store_true",
+                    help="router: rebuild a replica marked dead by a "
+                         "ReplicaFault instead of serving degraded")
     args = ap.parse_args()
 
     from repro.launch import mesh as M
@@ -233,12 +273,18 @@ def main() -> None:
     if args.speculate:
         draft = DraftSpec.from_args(args.draft_bits, args.draft_sparsity,
                                     args.draft_keep_layers)
+    tier_specs = parse_tiers(args.tiers) if args.tiers else ()
     registry = ModelRegistry()
-    model = registry.load(args.arch, spec, seed=args.seed, draft_spec=draft)
+    model = registry.load(args.arch, spec, seed=args.seed, draft_spec=draft,
+                          tier_specs=tier_specs)
     print(f"[serve] {model.name}: {model.n_packed} packed projections, "
           f"{model.packed_bytes / 1e6:.2f} MB packed vs "
           f"{model.dense_bytes / 1e6:.2f} MB dense "
           f"({model.compression:.2f}x)")
+    if tier_specs:
+        print(f"[serve] QoS ladder: tier 0 (target) + "
+              + ", ".join(f"tier {i + 1} = {t.tag}"
+                          for i, t in enumerate(tier_specs)))
     if draft is not None:
         print(f"[serve] self-draft {draft.tag}: {model.draft_packed} packed "
               f"projections, draft/verify flops "
@@ -251,6 +297,11 @@ def main() -> None:
         out=args.trace_out or None, chrome=args.trace_chrome or None,
         profile_dir=args.profile_dir or None,
         profile_dispatches=args.profile_dispatches) if tracing else None
+    qos = QoSConfig(demote_depth=args.qos_demote_depth,
+                    promote_depth=args.qos_promote_depth,
+                    hysteresis=args.qos_hysteresis,
+                    page_pressure=args.qos_page_pressure) \
+        if tier_specs else None
     cfg = EngineConfig(n_slots=args.slots, max_len=max_len, seed=args.seed,
                        device_loop=not args.host_loop,
                        decode_chunk=args.decode_chunk,
@@ -259,7 +310,9 @@ def main() -> None:
                        page_size=args.page_size or None,
                        n_pages=args.n_pages or None,
                        prefix_cache=not args.no_prefix_cache,
-                       trace=trace_cfg)
+                       pool_wait_retries=args.pool_wait_retries
+                       if args.pool_wait_retries >= 0 else None,
+                       qos=qos, trace=trace_cfg)
     mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
 
     if args.dry_run:
@@ -303,10 +356,12 @@ def main() -> None:
             model, cfg, args.replicas,
             backend_factory=backend_for,
             scheduler_factory=(lambda i: StaticScheduler()) if args.static
-            else None)
+            else None,
+            auto_restart=args.auto_restart)
         telemetry = telemetry_for(lambda: router_sample(router))
         reqs = [router.submit(p, g, arrival_step=at,
-                              temperature=args.temperature)
+                              temperature=args.temperature,
+                              deadline_steps=args.deadline_steps or None)
                 for p, g, at in trace()]
         router.run()
         if telemetry is not None:
@@ -326,8 +381,10 @@ def main() -> None:
             # client would — step the engine until the submit is accepted
             while True:
                 try:
-                    reqs.append(engine.submit(p, g, arrival_step=at,
-                                              temperature=args.temperature))
+                    reqs.append(engine.submit(
+                        p, g, arrival_step=at,
+                        temperature=args.temperature,
+                        deadline_steps=args.deadline_steps or None))
                     break
                 except EngineSaturated:
                     engine.step()

@@ -94,6 +94,20 @@ Layout:
                  ServeMetrics + page pool + router queue depths on a
                  cadence; Prometheus text over stdlib http.server
                  (`GET /metrics`) and JSONL time-series snapshots.
+  qos.py         QoS degradation tiers (PR 7): the registry keeps 2-3
+                 packed (sparsity, bits) tiers of the same weights
+                 resident (`tier_specs=`, KV-compatible by construction);
+                 `QoSController` demotes/promotes the live decode between
+                 them off queue depth + page pressure with hysteresis —
+                 in-flight streams continue across swaps. Plus per-request
+                 deadlines (`deadline_steps` / `deadline_ms`), admission-
+                 time doom shedding, mid-flight cancellation, and bounded
+                 PoolExhausted retries (`pool_wait_retries`).
+  chaos.py       deterministic fault injection (PR 7): a scheduled storm
+                 (replica crash, NaN logits at the sync boundary, page-
+                 pool squeeze, slow dispatch) driven between router steps;
+                 recovery is exact — failover re-admits evacuated requests
+                 token-identically, pools drain to pristine.
 
 Quickstart:
 
@@ -112,9 +126,12 @@ Quickstart:
 from repro.serve.backend import (ExecutionBackend, LocalBackend,
                                  ShardedBackend)
 from repro.serve.cache_pool import CachePool, PoolExhausted
+from repro.serve.chaos import ChaosHarness, Fault, seeded_schedule
 from repro.serve.engine import (EngineConfig, EngineSaturated,
-                                InferenceEngine)
+                                InferenceEngine, ReplicaFault)
 from repro.serve.metrics import ServeMetrics
+from repro.serve.qos import (QoSConfig, QoSController, check_tier_spec,
+                             parse_tiers)
 from repro.serve.paging import PagedCachePool, PageLayout, prefix_supported
 from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
@@ -130,11 +147,13 @@ from repro.serve.trace import (NULL_TRACER, TraceConfig, Tracer,
 
 __all__ = [
     "CachePool", "PoolExhausted", "DraftSpec", "EngineConfig",
-    "EngineSaturated", "InferenceEngine", "ExecutionBackend", "LocalBackend",
-    "ShardedBackend", "PagedCachePool", "PageLayout", "PrefixIndex",
-    "prefix_supported", "ReplicaRouter", "ServeMetrics", "ModelRegistry",
-    "PackedModel", "pack_model_params", "ContinuousScheduler",
-    "StaticScheduler", "Request", "replica_load",
+    "EngineSaturated", "InferenceEngine", "ReplicaFault", "ExecutionBackend",
+    "LocalBackend", "ShardedBackend", "PagedCachePool", "PageLayout",
+    "PrefixIndex", "prefix_supported", "ReplicaRouter", "ServeMetrics",
+    "ModelRegistry", "PackedModel", "pack_model_params",
+    "ContinuousScheduler", "StaticScheduler", "Request", "replica_load",
+    "QoSConfig", "QoSController", "check_tier_spec", "parse_tiers",
+    "ChaosHarness", "Fault", "seeded_schedule",
     "NULL_TRACER", "TraceConfig", "Tracer", "export_chrome", "export_jsonl",
     "TelemetryConfig", "TelemetryExporter", "TelemetryRegistry",
     "engine_sample", "router_sample",

@@ -115,6 +115,7 @@ class ExecutionBackend:
         self.draft_pool: Optional[CachePool] = None   # speculative slab
         self.draft_params: Any = None
         self._pending_draft: Any = None        # draft prefill awaiting slot
+        self.tier = 0                          # active QoS tier (0 = full)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -161,6 +162,32 @@ class ExecutionBackend:
             self.state = self._install(self.state, slot, token, index,
                                        temperature, eos, remaining,
                                        spec_limit)
+
+    def release_slot(self, slot: int) -> None:
+        """Park a mid-flight slot's loop-state row inert (cancel / shed /
+        evacuate): remaining=0 means the fused step treats the row exactly
+        like a finished request's — its writes land in positions nothing
+        will ever read, the same guarantee `_emit`'s done path relies on."""
+        self.install(slot, 0, 0, 0.0, -1, 0, 0)
+
+    # -- QoS tiers (serve.qos) ----------------------------------------------
+
+    @property
+    def n_tiers(self) -> int:
+        """Resident quality tiers this backend can swap between."""
+        return 1
+
+    def set_tier(self, tier: int) -> None:
+        """Swap the live decode onto packed tier `tier` (0 = full quality).
+
+        KV-compatible by construction (qos.check_tier_spec): only the
+        params operand of the compiled steps changes — slab/pages, page
+        tables, and the loop state stay put, so every resident request's
+        token stream continues from its exact position."""
+        if tier != 0:
+            raise NotImplementedError(
+                f"{self.name} backend was built without tier_specs "
+                "(registry.load(..., tier_specs=...))")
 
     # -- decode -------------------------------------------------------------
 
@@ -262,6 +289,10 @@ class LocalBackend(ExecutionBackend):
     def build(self, model, cfg) -> None:
         self.model, self.cfg = model, cfg
         self.params = model.params
+        # QoS ladder: the compiled steps take params as a non-donated
+        # operand, so a tier swap is a pointer swap; each tier's distinct
+        # packed-buffer shapes land in their own jit-cache entry.
+        self._tier_params = [model.params, *model.tier_params]
         mcfg = model.cfg
         # speculate=K pads the slab: the verify writes K+1 positions from a
         # per-slot clock that can sit at max_len-1; rollback masks them.
@@ -335,6 +366,17 @@ class LocalBackend(ExecutionBackend):
             jnp.asarray(tokens), jnp.asarray(indices))
         return np.asarray(logits[:, -1])
 
+    @property
+    def n_tiers(self) -> int:
+        return len(self._tier_params)
+
+    def set_tier(self, tier: int) -> None:
+        if not 0 <= tier < self.n_tiers:
+            raise ValueError(f"tier {tier} out of range "
+                             f"(n_tiers={self.n_tiers})")
+        self.params = self._tier_params[tier]
+        self.tier = tier
+
 
 class ShardedBackend(ExecutionBackend):
     """Mesh placement: the donated decode step runs SPMD over (data, model).
@@ -401,41 +443,18 @@ class ShardedBackend(ExecutionBackend):
                 ST.make_decode_state(cfg.n_slots, cfg.seed),
                 self.state_shardings)
             slot_spec = SH.batch_pspec(mesh, cfg.n_slots)
-            tok_sharding = NamedSharding(mesh, P(None, *tuple(slot_spec)))
-            # donation + sharding: out_shardings for (slab, state) — and
-            # the page store / table in paged mode — must equal the donated
-            # inputs' shardings or the aliasing is lost (XLA would copy
-            # into the re-placed output buffer).
-            if cfg.page_size:
-                self._decode = jax.jit(
-                    ST.make_paged_decode_step(mcfg, cfg.backend,
-                                              n_steps=cfg.decode_chunk,
-                                              layout=self.pool.layout),
-                    donate_argnums=(1, 2, 3),
-                    in_shardings=(self.param_shardings, self.pool.shardings,
-                                  self.pool.table_sharding,
-                                  self.state_shardings),
-                    out_shardings=(tok_sharding, self.pool.shardings,
-                                   self.pool.table_sharding,
-                                   self.state_shardings))
-                if self.pool.index is not None:
-                    self._suffix_prefill = jax.jit(
-                        ST.make_suffix_prefill_step(
-                            mcfg, cfg.backend, layout=self.pool.layout),
-                        donate_argnums=(2,),
-                        # logits replicated; store pinned to the donated
-                        # input placement so aliasing survives pjit
-                        out_shardings=(NamedSharding(mesh, P()),
-                                       self.pool.shardings))
-            else:
-                self._decode = jax.jit(
-                    ST.make_decode_step(mcfg, cfg.backend,
-                                        n_steps=cfg.decode_chunk),
-                    donate_argnums=(1, 2),
-                    in_shardings=(self.param_shardings, self.pool.shardings,
-                                  self.state_shardings),
-                    out_shardings=(tok_sharding, self.pool.shardings,
-                                   self.state_shardings))
+            self._slot_spec = slot_spec
+            self._tok_sharding = NamedSharding(
+                mesh, P(None, *tuple(slot_spec)))
+            if cfg.page_size and self.pool.index is not None:
+                self._suffix_prefill = jax.jit(
+                    ST.make_suffix_prefill_step(
+                        mcfg, cfg.backend, layout=self.pool.layout),
+                    donate_argnums=(2,),
+                    # logits replicated; store pinned to the donated
+                    # input placement so aliasing survives pjit
+                    out_shardings=(NamedSharding(mesh, P()),
+                                   self.pool.shardings))
             self._install = jax.jit(ST.install_slot, donate_argnums=(0,),
                                     out_shardings=self.state_shardings)
             # batch-1 prefill: nothing to shard on the request axis; params
@@ -452,18 +471,128 @@ class ShardedBackend(ExecutionBackend):
             self._sample_first = jax.jit(T.sample_tokens)
             self._first_key = jax.random.PRNGKey(cfg.seed)
             if cfg.speculate:
-                self._build_speculative(mesh, cache_len, slot_spec)
+                self._build_speculative(mesh, cache_len)
+            # QoS ladder: each tier's packed tree has its OWN pytree
+            # structure (PackedLinear leaf sets differ per (sparsity,
+            # bits)) and therefore its own sharding tree — and the hot
+            # dispatches pin params via explicit in_shardings — so a tier
+            # swap re-jits the dispatches (lazily, cached per tier in
+            # `_tier_steps`) instead of pointer-swapping like LocalBackend.
+            self._tier_placed = [self.params]
+            self._tier_shardings = [self.param_shardings]
+            for tp in model.tier_params:
+                sh = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s),
+                    SH.param_pspecs(tp, mesh))
+                self._tier_placed.append(jax.device_put(tp, sh))
+                self._tier_shardings.append(sh)
+            self._tier_steps: Dict[int, Dict[str, Any]] = {}
+            self.set_tier(0)
 
-    def _build_speculative(self, mesh, cache_len, slot_spec) -> None:
-        """Draft side on the mesh: draft params REPLICATED (the draft is
-        small by design; replication keeps its packed-kernel contract and
-        removes its collectives from the hot cycle), draft slab sharded
-        exactly like the target slab, and the fused propose-then-verify
-        step jitted with out_shardings pinned to the three donated inputs
-        so slab/state aliasing survives pjit."""
+    def _compile_dispatch(self) -> Dict[str, Any]:
+        """Jit the hot dispatches (decode, and the fused speculative cycle
+        when built with speculate) against the CURRENT
+        `self.param_shardings`. Called once per active tier — the params
+        operand's in_shardings are tier-specific — with the executables
+        cached in `_tier_steps`.
+
+        donation + sharding: out_shardings for (slab, state) — and the
+        page store / table in paged mode — must equal the donated inputs'
+        shardings or the aliasing is lost (XLA would copy into the
+        re-placed output buffer)."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        cfg, model, mcfg = self.cfg, self.model, self.model.cfg
+        cfg, mcfg, mesh = self.cfg, self.model.cfg, self.mesh
+        tok_sharding = self._tok_sharding
+        if cfg.page_size:
+            decode = jax.jit(
+                ST.make_paged_decode_step(mcfg, cfg.backend,
+                                          n_steps=cfg.decode_chunk,
+                                          layout=self.pool.layout),
+                donate_argnums=(1, 2, 3),
+                in_shardings=(self.param_shardings, self.pool.shardings,
+                              self.pool.table_sharding,
+                              self.state_shardings),
+                out_shardings=(tok_sharding, self.pool.shardings,
+                               self.pool.table_sharding,
+                               self.state_shardings))
+        else:
+            decode = jax.jit(
+                ST.make_decode_step(mcfg, cfg.backend,
+                                    n_steps=cfg.decode_chunk),
+                donate_argnums=(1, 2),
+                in_shardings=(self.param_shardings, self.pool.shardings,
+                              self.state_shardings),
+                out_shardings=(tok_sharding, self.pool.shardings,
+                               self.state_shardings))
+        steps = {"decode": decode}
+        if cfg.speculate:
+            dcfg = self.model.draft_cfg
+            slot_spec = self._slot_spec
+            vec_sharding = NamedSharding(mesh, slot_spec)
+            commit_sharding = NamedSharding(mesh, P(*tuple(slot_spec), None))
+            if cfg.page_size:
+                steps["spec"] = jax.jit(
+                    ST.make_paged_speculative_decode_step(
+                        mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
+                        layout=self.pool.layout),
+                    donate_argnums=(2, 3, 4, 5),
+                    in_shardings=(self.param_shardings,
+                                  self.draft_shardings,
+                                  self.pool.shardings,
+                                  self.pool.table_sharding,
+                                  self.draft_pool.shardings,
+                                  self.state_shardings),
+                    out_shardings=(commit_sharding, vec_sharding,
+                                   vec_sharding, self.pool.shardings,
+                                   self.pool.table_sharding,
+                                   self.draft_pool.shardings,
+                                   self.state_shardings))
+            else:
+                steps["spec"] = jax.jit(
+                    ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
+                                                    n_draft=cfg.speculate),
+                    donate_argnums=(2, 3, 4),
+                    in_shardings=(self.param_shardings,
+                                  self.draft_shardings,
+                                  self.pool.shardings,
+                                  self.draft_pool.shardings,
+                                  self.state_shardings),
+                    out_shardings=(commit_sharding, vec_sharding,
+                                   vec_sharding, self.pool.shardings,
+                                   self.draft_pool.shardings,
+                                   self.state_shardings))
+        return steps
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self._tier_placed)
+
+    def set_tier(self, tier: int) -> None:
+        if not 0 <= tier < self.n_tiers:
+            raise ValueError(f"tier {tier} out of range "
+                             f"(n_tiers={self.n_tiers})")
+        self.params = self._tier_placed[tier]
+        self.param_shardings = self._tier_shardings[tier]
+        if tier not in self._tier_steps:
+            with self._ctx():
+                self._tier_steps[tier] = self._compile_dispatch()
+        steps = self._tier_steps[tier]
+        self._decode = steps["decode"]
+        if "spec" in steps:
+            self._spec_decode = steps["spec"]
+        self.tier = tier
+
+    def _build_speculative(self, mesh, cache_len) -> None:
+        """Draft side on the mesh: draft params REPLICATED (the draft is
+        small by design; replication keeps its packed-kernel contract and
+        removes its collectives from the hot cycle) and the draft slab
+        sharded exactly like the target slab. The fused propose-then-verify
+        jit itself lives in `_compile_dispatch` — its params in_shardings
+        are per-tier."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg, model = self.cfg, self.model
         dcfg = model.draft_cfg
         self.draft_shardings = jax.tree_util.tree_map(
             lambda _: NamedSharding(mesh, P()), model.draft_params)
@@ -475,33 +604,6 @@ class ShardedBackend(ExecutionBackend):
         self._draft_prefill = jax.jit(
             ST.make_prefill_step(dcfg, cfg.backend, last_only=True,
                                  cache_len=cache_len, cache_dtype=ddtype))
-        vec_sharding = NamedSharding(mesh, slot_spec)
-        commit_sharding = NamedSharding(mesh, P(*tuple(slot_spec), None))
-        if cfg.page_size:
-            self._spec_decode = jax.jit(
-                ST.make_paged_speculative_decode_step(
-                    mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
-                    layout=self.pool.layout),
-                donate_argnums=(2, 3, 4, 5),
-                in_shardings=(self.param_shardings, self.draft_shardings,
-                              self.pool.shardings, self.pool.table_sharding,
-                              self.draft_pool.shardings,
-                              self.state_shardings),
-                out_shardings=(commit_sharding, vec_sharding, vec_sharding,
-                               self.pool.shardings, self.pool.table_sharding,
-                               self.draft_pool.shardings,
-                               self.state_shardings))
-        else:
-            self._spec_decode = jax.jit(
-                ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
-                                                n_draft=cfg.speculate),
-                donate_argnums=(2, 3, 4),
-                in_shardings=(self.param_shardings, self.draft_shardings,
-                              self.pool.shardings, self.draft_pool.shardings,
-                              self.state_shardings),
-                out_shardings=(commit_sharding, vec_sharding, vec_sharding,
-                               self.pool.shardings, self.draft_pool.shardings,
-                               self.state_shardings))
 
     def describe(self):
         return {"backend": self.name,

@@ -81,6 +81,21 @@ instead of queueing unboundedly — the rejection is the signal the replica
 router (serve.router) uses to spill traffic to a sibling engine. The
 default (None) keeps the open-ended queue for single-engine use.
 
+Resilience (PR 7): requests can carry deadlines (`deadline_steps` on the
+deterministic engine-step clock, `deadline_ms` on the wall) — admission
+sheds already-doomed work immediately and a per-step sweep cancels
+mid-flight requests whose remaining budget no longer fits, freeing their
+slot/pages cleanly (`Request.state == "shed"` + `shed_reason`; ServeMetrics
+`shed` / `deadline_missed`). `EngineConfig.pool_wait_retries` bounds the
+PoolExhausted requeue loop with exponential step backoff (then sheds as
+`shed_pool_pressure`). `EngineConfig.qos` (serve.qos) enables load-driven
+QUALITY degradation: the engine swaps the live decode onto a cheaper
+resident (sparsity, bits) tier of the same weights under queue/page
+pressure — KV-compatible, so every in-flight stream continues — and
+re-promotes with hysteresis. A corrupted decode sync (out-of-vocab tokens:
+NaN logits, device fault) raises `ReplicaFault`, the signal the replica
+router's failover path (serve.router) turns into evacuate-and-re-admit.
+
 Prefill compile-shape policy: prompts are right-padded to power-of-two
 buckets (full-logits prefill, read at the true prompt end; the padded cache
 tail is never valid under the per-slot masks) so a mixed-length trace
@@ -103,6 +118,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -119,6 +135,13 @@ from repro.serve.trace import NULL_TRACER, TraceConfig, Tracer
 
 class EngineSaturated(RuntimeError):
     """The bounded waiting deque is full: admission must spill or retry."""
+
+
+class ReplicaFault(RuntimeError):
+    """The replica produced provably-corrupt output (out-of-vocab decode
+    sync — NaN logits argmax, device fault) or its dispatch crashed. The
+    router catches this around `engine.step()`, marks the replica dead,
+    and re-admits its evacuated requests to survivors."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +174,14 @@ class EngineConfig:
     page_size: Optional[int] = None
     n_pages: Optional[int] = None
     prefix_cache: bool = True
+    # resilience (serve.qos): pool_wait_retries bounds the PoolExhausted
+    # requeue loop per request — None keeps the legacy unbounded
+    # requeue-at-front; N parks the retry behind an exponential step
+    # backoff and sheds the request (`shed_pool_pressure`) past N retries.
+    # qos (a qos.QoSConfig) enables load-driven tier degradation; requires
+    # a model loaded with registry.load(..., tier_specs=...).
+    pool_wait_retries: Optional[int] = None
+    qos: Optional[Any] = None
     # tracing (serve.trace): None = OFF, served by the shared no-op tracer —
     # the hot path's only residue is one attribute lookup + a fixed-arity
     # no-op call per edge (allocation-free, gated by test_trace). Set a
@@ -187,6 +218,9 @@ class InferenceEngine:
         if cfg.n_pages is not None and not cfg.page_size:
             raise ValueError("n_pages without page_size: the slab pool has "
                              "no page geometry")
+        if cfg.pool_wait_retries is not None and cfg.pool_wait_retries < 0:
+            raise ValueError(f"pool_wait_retries must be >= 0 or None, got "
+                             f"{cfg.pool_wait_retries}")
         if cfg.speculate:
             from repro.serve import speculative as SP
             if not cfg.device_loop:
@@ -211,6 +245,13 @@ class InferenceEngine:
         self.backend = backend or LocalBackend()
         self.backend.build(model, cfg)
         self.pool = self.backend.pool
+        if cfg.qos is not None:
+            from repro.serve.qos import QoSController
+            self._qos = QoSController(cfg.qos, self.backend.n_tiers)
+        else:
+            self._qos = None
+        self._vocab = model.cfg.vocab
+        self._has_deadlines = False     # arms the per-step deadline sweep
         self.trace = Tracer(cfg.trace) if cfg.trace is not None \
             else NULL_TRACER
         self.pool.tracer = self.trace
@@ -261,26 +302,38 @@ class InferenceEngine:
                arrival_step: int = 0, temperature: float = 0.0,
                eos_id: Optional[int] = None,
                extras: Optional[Dict[str, Any]] = None,
-               on_token=None, speculate: Optional[int] = None) -> Request:
+               on_token=None, speculate: Optional[int] = None,
+               deadline_steps: Optional[int] = None,
+               deadline_ms: Optional[float] = None,
+               slo: str = "") -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         r = Request(id=-1, prompt=prompt,
                     max_new_tokens=max_new_tokens, arrival_step=arrival_step,
                     temperature=temperature, eos_id=eos_id, extras=extras,
-                    on_token=on_token, speculate=speculate)
+                    on_token=on_token, speculate=speculate,
+                    deadline_steps=deadline_steps, deadline_ms=deadline_ms,
+                    slo=slo)
         return self.adopt(r)
 
     def adopt(self, r: Request) -> Request:
-        """Validate + enqueue a Request object (fresh submit, or a waiting
-        request moved here by the replica router's rebalancer). Raises
-        EngineSaturated when the bounded waiting deque is full — counted as
-        a rejection; the router spills the request to a sibling replica."""
+        """Validate + enqueue a Request object (fresh submit, a waiting
+        request moved here by the replica router's rebalancer, or a request
+        evacuated off a dead replica — `failover_from` set — resuming its
+        generation here). Raises EngineSaturated when the bounded waiting
+        deque is full — counted as a rejection; the router spills the
+        request to a sibling replica. A request whose deadline provably
+        cannot be met is shed HERE (terminal state, never queued) and
+        returned — admission-time load shedding."""
         if r.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        need = self.model.cfg.n_img_tokens + len(r.prompt) + r.max_new_tokens
+        # evacuated requests fold prior output into the prompt and keep
+        # `generated`, so the budget below is what is still owed
+        budget = r.max_new_tokens - len(r.generated)
+        need = self.model.cfg.n_img_tokens + len(r.prompt) + budget
         if self._len_bounded and need > self.cfg.max_len:
             raise ValueError(
                 f"request needs {need} cache positions "
-                f"(img + prompt {len(r.prompt)} + gen {r.max_new_tokens}) "
+                f"(img + prompt {len(r.prompt)} + gen {budget}) "
                 f"but max_len={self.cfg.max_len}")
         # no page-capacity check needed: `need` clamps at max_len, so a
         # request can require at most pages_per_slot pages, and the paged
@@ -295,9 +348,22 @@ class InferenceEngine:
         r.id = self._next_id
         self._next_id += 1
         self.requests[r.id] = r
-        self._waiting.append(r)
         self.metrics.on_submit(r.id, r.arrival_step, len(r.prompt))
         self.trace.submit(r.id, len(r.prompt), r.arrival_step)
+        if r.failover_from >= 0:
+            # counted on the DESTINATION replica (sums cleanly in
+            # aggregate); the source's counters died with it
+            self.metrics.on_failover()
+            self.trace.failover(r.id, r.failover_from)
+            r.failover_from = -1
+        if r.deadline_steps is not None or r.deadline_ms is not None:
+            self._has_deadlines = True
+            if self._doomed(r):
+                # already-doomed work: shedding it NOW costs nothing and
+                # frees the queue slot for requests that can still make it
+                self._shed(r, "deadline")
+                return r
+        self._waiting.append(r)
         return r
 
     def steal_waiting(self, n: int) -> List[Request]:
@@ -315,6 +381,77 @@ class InferenceEngine:
             out.append(r)
         return out[::-1]                # preserve relative arrival order
 
+    def cancel(self, r: Request, reason: str = "cancel") -> None:
+        """Explicit in-flight cancellation: a terminal 'shed' state with
+        the slot, pages (and the draft slab row — it shares the slot id),
+        and prefix-tree refcounts all released cleanly. Idempotent on
+        finished requests."""
+        if r.finished or r.id not in self.requests:
+            return
+        if r.state == "waiting":
+            try:
+                self._waiting.remove(r)
+            except ValueError:
+                pass
+        self._shed(r, reason)
+
+    def evacuate(self) -> List[Request]:
+        """Strip every non-finished request off this engine for
+        re-admission elsewhere (router failover). A running request folds
+        what it already generated into its prompt and resets to waiting —
+        the survivor's greedy re-prefill of the full history reconstructs
+        the causal cache exactly (the same property prefix reuse relies
+        on), so the resumed stream is token-identical to an uninterrupted
+        run. Requests/records are de-registered here (the router re-adopts
+        them, so completions are never double-counted)."""
+        out: List[Request] = []
+        for slot, r in enumerate(self._slots):
+            if r is None:
+                continue
+            try:
+                if self.cfg.device_loop:
+                    self.backend.release_slot(slot)
+                self.pool.free(slot)
+            except Exception:
+                pass    # a crashed backend may refuse the dispatch; this
+                #         replica is being torn down anyway
+            self._slots[slot] = None
+            if r.generated:
+                r.prompt = np.concatenate(
+                    [r.prompt, np.asarray(r.generated, np.int32)])
+            r.state = "waiting"
+            r.slot, r.index, r.prefix_matched = -1, 0, 0
+            out.append(r)
+        out.extend(self._waiting)
+        self._waiting.clear()
+        for r in out:
+            self.requests.pop(r.id, None)
+            self.metrics.records.pop(r.id, None)
+            r.id = -1
+        return out
+
+    # -- QoS tiers (serve.qos) ----------------------------------------------
+
+    @property
+    def tier(self) -> int:
+        """Active quality tier (0 = the model's own spec, full quality)."""
+        return self.backend.tier
+
+    def set_tier(self, tier: int) -> None:
+        """Swap the live decode onto packed tier `tier`. KV-compatible by
+        construction: resident requests continue from their exact stream
+        position; each one records the cheapest tier it ever decoded on."""
+        old = self.backend.tier
+        if tier == old:
+            return
+        self.backend.set_tier(tier)
+        self.metrics.on_tier_change(old, tier)
+        self.trace.tier_change(old, tier, len(self._waiting))
+        for r in self._slots:
+            if r is not None and tier > r.tier:
+                r.tier = tier
+                self.trace.req_tier(r.id, tier)
+
     @property
     def n_active(self) -> int:
         return sum(r is not None for r in self._slots)
@@ -326,8 +463,12 @@ class InferenceEngine:
     def step(self) -> None:
         """One engine step: admissions, then one slab decode dispatch."""
         self.trace.step = self.step_count
+        self._expire_deadlines()
+        if self._qos is not None:
+            self._qos_tick()
         arrived = [r for r in self._waiting
-                   if r.arrival_step <= self.step_count]
+                   if r.arrival_step <= self.step_count
+                   and r.retry_at_step <= self.step_count]
         admitted = self.scheduler.admissible(arrived, self.pool.n_active,
                                              self.pool.n_free)
         if admitted:
@@ -345,8 +486,22 @@ class InferenceEngine:
                     # even after LRU prefix eviction): requeue this and the
                     # remaining admissions at the FRONT in arrival order —
                     # finishing requests release pages, so they retry on
-                    # the very next step instead of crashing it.
-                    for rr in reversed(admitted[i:]):
+                    # the very next step instead of crashing it. With
+                    # pool_wait_retries set, the failed admission instead
+                    # parks behind an exponential step backoff (other
+                    # arrivals keep getting tried — no head-of-line
+                    # starvation) and is shed past the retry cap.
+                    cap = self.cfg.pool_wait_retries
+                    r.pool_retries += 1
+                    rest = admitted[i + 1:]
+                    if cap is not None and r.pool_retries > cap:
+                        self._shed(r, "pool")
+                    else:
+                        if cap is not None:
+                            r.retry_at_step = self.step_count + min(
+                                1 << r.pool_retries, 64)
+                        rest = [r] + rest
+                    for rr in reversed(rest):
                         self._waiting.appendleft(rr)
                     self.metrics.on_pool_wait()
                     self.trace.pool_wait()
@@ -408,6 +563,74 @@ class InferenceEngine:
         g = self._rng.gumbel(size=logits.shape)
         return int(np.argmax(logits + g))
 
+    def _doomed(self, r: Request) -> bool:
+        """True when the request provably cannot finish by its deadline.
+
+        Step clock: a live slot emits at least one token per engine step
+        (up to 1 + spec_limit when speculating — the OPTIMISTIC bound, so a
+        salvageable request is never shed early), so the earliest possible
+        finish is start + ceil(remaining / per_step) - 1. Wall clock: the
+        elapsed time since submit (records' monotonic baseline) against
+        deadline_ms."""
+        if r.deadline_ms is not None:
+            rec = self.metrics.records.get(r.id)
+            if rec is not None and (time.perf_counter() - rec.submit_mono) \
+                    * 1e3 > r.deadline_ms:
+                return True
+        d = r.deadline_step()
+        if d is None:
+            return False
+        rem = r.max_new_tokens - len(r.generated)
+        per = 1 + self._spec_limit(r)
+        start = max(self.step_count, r.arrival_step)
+        return start - (-rem // per) - 1 > d        # ceil division
+
+    def _shed(self, r: Request, reason: str) -> None:
+        """Terminal 'shed' disposition ('deadline' | 'pool' | 'failover' |
+        'cancel'): release everything the request holds — slot row parked
+        inert on device, pool slot/pages freed (prefix-tree refs drop with
+        them), record kept for observability. Never counts as a
+        completion."""
+        if r.state == "running":
+            if self.cfg.device_loop:
+                self.backend.release_slot(r.slot)
+            self.pool.free(r.slot)
+            self._slots[r.slot] = None
+        r.state = "shed"
+        r.shed_reason = reason
+        self.metrics.on_shed(reason)
+        self.trace.shed(r.id, r.slot, reason, len(r.generated))
+
+    def _expire_deadlines(self) -> None:
+        """Per-step sweep (armed only once a deadline exists): shed waiting
+        AND running requests the moment they become doomed — mid-flight
+        cancellation frees the slot for work that can still meet its SLO,
+        and no completion is ever served past its deadline."""
+        if not self._has_deadlines:
+            return
+        expired = [r for r in self._waiting if self._doomed(r)]
+        if expired:
+            dead = {r.id for r in expired}
+            self._waiting = collections.deque(
+                r for r in self._waiting if r.id not in dead)
+            for r in expired:
+                self._shed(r, "deadline")
+        for r in list(self._slots):
+            if r is not None and self._doomed(r):
+                self._shed(r, "deadline")
+
+    def _qos_tick(self) -> None:
+        """Feed the tier controller this step's load signal (queue depth +
+        page-pool fullness) and apply its verdict."""
+        stats = self.backend.page_stats()
+        frac = 0.0
+        if stats is not None:
+            used, usable = stats
+            frac = used / max(1, usable)
+        want = self._qos.observe(len(self._waiting), frac)
+        if want != self.backend.tier:
+            self.set_tier(want)
+
     def _emit(self, r: Request, tok: int, step: int) -> None:
         r.generated.append(tok)
         self.metrics.on_token(r.id, step)
@@ -431,6 +654,9 @@ class InferenceEngine:
         slot = self.pool.alloc()
         s0 = len(r.prompt)
         n_img = self.model.cfg.n_img_tokens
+        # what is still owed: a failover-resumed request already generated
+        # part of its budget (now folded into the prompt)
+        budget = r.max_new_tokens - len(r.generated)
         # paged admission: longest page-aligned cached prefix, then the
         # slot's page-table row (shared prefix pages refcount-bumped, fresh
         # private pages for suffix + generation + speculative headroom).
@@ -439,7 +665,7 @@ class InferenceEngine:
             self.backend.prefix_match(r.prompt)
         try:
             self.backend.alloc_slot_pages(
-                slot, n_img + s0 + r.max_new_tokens + self.cfg.speculate,
+                slot, n_img + s0 + budget + self.cfg.speculate,
                 shared)
         except PoolExhausted:
             self.pool.free(slot)
@@ -480,9 +706,11 @@ class InferenceEngine:
         r.prefix_matched = matched
         r.state, r.slot = "running", slot
         r.index = n_img + s0
+        r.tier = max(r.tier, self.backend.tier)
         self._slots[slot] = r
         self.metrics.on_start(r.id, self.step_count)
         self.trace.admit(r.id, slot, matched, s0)
+        self.trace.req_tier(r.id, self.backend.tier)
         if matched:
             self.trace.prefill(r.id, slot, s_sfx, sp_sfx, True)
         else:
@@ -493,7 +721,7 @@ class InferenceEngine:
             self.trace.host_sync("prefill", 4)
             eos = -1 if r.eos_id is None else int(r.eos_id)
             rem = 0 if (r.eos_id is not None and tok == r.eos_id) \
-                else r.max_new_tokens - 1
+                else budget - 1
             self.backend.install(slot, tok, r.index, r.temperature, eos, rem,
                                  self._spec_limit(r))
         else:
@@ -516,6 +744,17 @@ class InferenceEngine:
         self.trace.decode_dispatch(k, n_active, self.cfg.n_slots)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
+        # fault detection at the host/device boundary: a healthy fused step
+        # emits argmax/Gumbel-argmax indices, ALWAYS in [0, vocab) — an
+        # out-of-range token in a live column is proof of a corrupted
+        # dispatch (NaN logits, device fault), never a sampling outcome.
+        live = [s for s in range(self.cfg.n_slots)
+                if self._slots[s] is not None]
+        sub = block[:, live]
+        if sub.size and (int(sub.min()) < 0 or int(sub.max()) >= self._vocab):
+            raise ReplicaFault(
+                f"decode sync outside [0, {self._vocab}): corrupted "
+                "dispatch (NaN logits or device fault)")
         for j in range(k):
             step = self.step_count + j
             for slot in range(self.cfg.n_slots):
@@ -556,6 +795,19 @@ class InferenceEngine:
         self.trace.spec_dispatch(k, n_active, self.cfg.n_slots)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
+        # fault detection (see _decode_block): validate every live slot's
+        # committed prefix BEFORE any emission side effects
+        for slot in range(self.cfg.n_slots):
+            r = self._slots[slot]
+            if r is None:
+                continue
+            m = int(n_commit[slot])
+            if not 0 <= m <= k + 1 or (m and (
+                    int(block[slot, :m].min()) < 0
+                    or int(block[slot, :m].max()) >= self._vocab)):
+                raise ReplicaFault(
+                    f"speculative sync outside [0, {self._vocab}) or commit "
+                    f"count {m} out of [0, {k + 1}]: corrupted dispatch")
         advanced, proposed, accepted = 1, 0, 0
         for slot in range(self.cfg.n_slots):
             r = self._slots[slot]

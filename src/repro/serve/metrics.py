@@ -85,6 +85,17 @@ class ServeMetrics:
         self.pool_waits = 0                   # admissions requeued on pages
         self.page_samples: List[int] = []     # pages_in_use per dispatch
         self.page_capacity = 0                # usable pages in the pool
+        # resilience (serve.qos / chaos / failover)
+        self.tier_demotions = 0               # engine moved to a cheaper tier
+        self.tier_promotions = 0              # ... back toward full quality
+        self.shed = 0                         # requests given a terminal
+        #                                       "shed" state (all reasons)
+        self.deadline_missed = 0              # ... shed on deadline expiry
+        self.shed_pool_pressure = 0           # ... shed after the
+        #                                       pool_wait_retries cap
+        self.failovers = 0                    # requests re-admitted HERE off
+        #                                       a dead replica (destination-
+        #                                       side count: sums cleanly)
 
     # -- recording hooks (called by the engine) -----------------------------
 
@@ -161,6 +172,31 @@ class ServeMetrics:
         eviction) and was requeued — free slots existed, pages didn't."""
         self.pool_waits += 1
 
+    def on_tier_change(self, old_tier: int, new_tier: int) -> None:
+        """The engine swapped its resident packed tier (serve.qos): a move
+        to a HIGHER tier index is a demotion (cheaper Kratos point), a move
+        back toward tier 0 a promotion."""
+        if new_tier > old_tier:
+            self.tier_demotions += 1
+        elif new_tier < old_tier:
+            self.tier_promotions += 1
+
+    def on_shed(self, reason: str) -> None:
+        """A request reached the terminal "shed" state instead of "done".
+        `reason` is 'deadline' (expired before/while running), 'pool'
+        (pool_wait_retries exhausted under page pressure), or 'failover'
+        (could not be re-homed off a dead replica)."""
+        self.shed += 1
+        if reason == "deadline":
+            self.deadline_missed += 1
+        elif reason == "pool":
+            self.shed_pool_pressure += 1
+
+    def on_failover(self) -> None:
+        """A request evacuated off a dead replica was re-admitted HERE
+        (counted on the destination so fleet sums stay exact)."""
+        self.failovers += 1
+
     def on_pages(self, in_use: int, capacity: int) -> None:
         """Per-dispatch page-pool gauge (pages referenced by live slots or
         retained by the prefix index, out of the usable pool)."""
@@ -228,6 +264,13 @@ class ServeMetrics:
                                / (len(self.page_samples)
                                   * self.page_capacity))
             if (self.page_samples and self.page_capacity) else 0.0,
+            # resilience: QoS tier churn, shed/deadline accounting, failover
+            "tier_demotions": float(self.tier_demotions),
+            "tier_promotions": float(self.tier_promotions),
+            "shed": float(self.shed),
+            "deadline_missed": float(self.deadline_missed),
+            "shed_pool_pressure": float(self.shed_pool_pressure),
+            "failovers": float(self.failovers),
         }
 
     @staticmethod
@@ -309,6 +352,18 @@ class ServeMetrics:
             "pool_waits": float(sum(m.pool_waits for m in metrics_list)),
             "pages_in_use": page_num / page_den if page_den else 0.0,
             "page_occupancy": page_num / page_cap if page_cap else 0.0,
+            # resilience counters sum exactly (failovers are counted on the
+            # destination replica only, shed on the shedding replica only)
+            "tier_demotions": float(sum(m.tier_demotions
+                                        for m in metrics_list)),
+            "tier_promotions": float(sum(m.tier_promotions
+                                         for m in metrics_list)),
+            "shed": float(sum(m.shed for m in metrics_list)),
+            "deadline_missed": float(sum(m.deadline_missed
+                                         for m in metrics_list)),
+            "shed_pool_pressure": float(sum(m.shed_pool_pressure
+                                            for m in metrics_list)),
+            "failovers": float(sum(m.failovers for m in metrics_list)),
             "mean_occupancy": occ_num / occ_den if occ_den else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
             "latency_steps_p99": percentile(lat_steps, 99),
@@ -329,6 +384,12 @@ class ServeMetrics:
             spec += (f" | prefix hit {r['prefix_hit_rate']:.2f} "
                      f"({int(r['prefill_tokens_skipped'])} prefill toks "
                      f"skipped, pages {r['page_occupancy']:.2f} full)")
+        if self.shed or self.tier_demotions or self.failovers:
+            spec += (f" | shed {self.shed} "
+                     f"(deadline {self.deadline_missed}, "
+                     f"pool {self.shed_pool_pressure})"
+                     f" | demotions {self.tier_demotions}"
+                     f" | failovers {self.failovers}")
         return (f"{int(r['requests_completed'])} reqs, "
                 f"{int(r['tokens_generated'])} toks in {r['wall_seconds']:.2f}s"
                 f" | {r['tok_per_s']:.1f} tok/s wall, "

@@ -1,0 +1,144 @@
+"""QoS tiers: the Kratos (sparsity, bits) grid as a live degradation ladder.
+
+The paper's core result is that fine-grained sparsity and low bit-width
+trade bounded accuracy for large area/frequency wins. At serve time that
+grid is a RESILIENCE mechanism: the registry keeps 2-3 packed tiers of the
+same trained weights resident (`ModelRegistry.load(..., tier_specs=...)`,
+re-using the self-draft re-packing machinery), and the engine degrades to a
+cheaper tier under measured load instead of saturating.
+
+Tier semantics:
+
+  * tier 0 is the model's own `KratosSpec` — full quality, the only tier a
+    request ever runs on when the fleet has headroom;
+  * tier i >= 1 is `tier_specs[i-1]` applied to the SAME dense weights — a
+    cheaper (sparsity, bits) point, full depth, same cache layout.
+
+KV-compatible swap: tier specs must keep full depth (`keep_layers=None`)
+and the engine's cache dtype (`cache_dtype=None`), so every tier shares one
+KV cache tree shape. A tier swap is then just re-pointing the params
+operand of the compiled decode step — the slab/page store and the device
+loop state are untouched, and every in-flight token stream continues from
+its exact position (the continuity story; no re-prefill). The params are
+jit argument 0 and are NOT donated, so the swap is safe mid-serve; each
+tier's distinct packed-buffer shapes simply compile their own executable
+(cached after the first swap — pre-warm tiers before latency-sensitive
+traffic).
+
+Hysteresis: `QoSController` demotes after `hysteresis` CONSECUTIVE steps
+with the waiting deque at/above `demote_depth` (or the page pool at/above
+`page_pressure` full), and re-promotes one tier after `hysteresis`
+consecutive steps at/below `promote_depth`. The dead band between the two
+watermarks resets both streaks — load oscillating inside it never flaps the
+tier. One step per observation keeps the controller on the deterministic
+engine-step clock, so degradation decisions are reproducible and QoR-
+gateable.
+
+Per-request accounting: `Request.tier` records the cheapest (highest) tier
+the request ever decoded on; ServeMetrics counts `tier_demotions` /
+`tier_promotions`; the tracer records `tier_change` events plus a
+`req_tier` edge per resident request, so spans show exactly which requests
+rode out a degraded window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.serve.speculative import DraftSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSConfig:
+    """Degradation policy knobs, carried by `EngineConfig.qos` (None = no
+    degradation; the engine then never leaves tier 0)."""
+
+    demote_depth: int = 8        # waiting-deque watermark to degrade at
+    promote_depth: int = 1       # ... to recover at (must be < demote)
+    hysteresis: int = 4          # consecutive steps past a watermark
+    page_pressure: float = 0.95  # page-pool fullness that also demotes
+
+    def __post_init__(self):
+        if self.promote_depth >= self.demote_depth:
+            raise ValueError(
+                f"promote_depth ({self.promote_depth}) must be below "
+                f"demote_depth ({self.demote_depth}) — equal watermarks "
+                "would flap the tier every hysteresis window")
+        if self.hysteresis < 1:
+            raise ValueError(f"hysteresis must be >= 1, got "
+                             f"{self.hysteresis}")
+
+
+class QoSController:
+    """Hysteresis ladder over `n_tiers` packed tiers (tier 0 = best)."""
+
+    def __init__(self, cfg: QoSConfig, n_tiers: int) -> None:
+        if n_tiers < 2:
+            raise ValueError(f"QoS needs >= 2 resident tiers to ladder "
+                             f"between, got {n_tiers} (load the model with "
+                             "registry.load(..., tier_specs=...))")
+        self.cfg = cfg
+        self.n_tiers = n_tiers
+        self.tier = 0
+        self._over = 0           # consecutive observations above demote
+        self._under = 0          # consecutive observations below promote
+
+    def observe(self, queue_depth: int, page_frac: float = 0.0) -> int:
+        """One engine step's load signal -> the tier the engine should run.
+        Deterministic: same (depth, page_frac) sequence, same tier path."""
+        over = (queue_depth >= self.cfg.demote_depth
+                or page_frac >= self.cfg.page_pressure)
+        under = (queue_depth <= self.cfg.promote_depth
+                 and page_frac < self.cfg.page_pressure)
+        if over:
+            self._over += 1
+            self._under = 0
+            if self._over >= self.cfg.hysteresis \
+                    and self.tier < self.n_tiers - 1:
+                self.tier += 1
+                self._over = 0
+        elif under:
+            self._under += 1
+            self._over = 0
+            if self._under >= self.cfg.hysteresis and self.tier > 0:
+                self.tier -= 1
+                self._under = 0
+        else:
+            self._over = self._under = 0        # dead band: no streaks
+        return self.tier
+
+
+def check_tier_spec(ts: DraftSpec) -> DraftSpec:
+    """Validate one tier spec for KV-compatible swapping (registry.load).
+
+    Layer truncation or a different cache dtype would change the cache tree
+    a resident request's history lives in — a swap would corrupt every
+    in-flight stream — so both are refused here rather than at swap time.
+    """
+    if ts.keep_layers is not None:
+        raise ValueError(
+            f"tier spec {ts.tag}: keep_layers is a draft-only axis — a "
+            "truncated tier has a different cache tree, so an in-place "
+            "tier swap would orphan every resident request's KV history")
+    if ts.cache_dtype is not None:
+        raise ValueError(
+            f"tier spec {ts.tag}: cache_dtype must inherit the engine's "
+            "(None) — tiers share one live KV cache across swaps")
+    return ts
+
+
+def parse_tiers(arg: str) -> Tuple[DraftSpec, ...]:
+    """CLI tier ladder: 'bits:sparsity[,bits:sparsity...]', cheapest last
+    (e.g. '8:0.5,8:0.75' = two degradation tiers below the full model).
+    bits=0 means native precision, like the --draft-* flags."""
+    tiers = []
+    for part in arg.split(","):
+        if not part.strip():
+            continue
+        bits_s, _, sp_s = part.partition(":")
+        tiers.append(check_tier_spec(
+            DraftSpec.from_args(int(bits_s), float(sp_s or 0.0), 0)))
+    if not tiers:
+        raise ValueError(f"no tiers in {arg!r}")
+    return tuple(tiers)

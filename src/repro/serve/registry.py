@@ -82,7 +82,14 @@ class PackedModel:
     carries a self-draft: the same dense weights re-packed at the draft's
     (sparsity, bits) point — optionally layer-truncated — used by the
     speculative decode path. The draft is part of the artifact identity
-    (registry key + name), never a mutation of a cached target."""
+    (registry key + name), never a mutation of a cached target.
+
+    With `tier_specs` (serve.qos) the artifact carries a QoS degradation
+    LADDER: the same dense weights re-packed at 1-2 cheaper (sparsity,
+    bits) points, full depth, same cache layout (qos.check_tier_spec), so
+    an overloaded engine can swap the live decode step onto tier i without
+    touching resident KV state. tier 0 is `params` itself; `tier_params[i]`
+    backs engine tier i+1."""
 
     name: str
     cfg: T.ModelConfig
@@ -95,6 +102,8 @@ class PackedModel:
     draft_cfg: Optional[T.ModelConfig] = None
     draft_params: Optional[Dict[str, Any]] = None
     draft_packed: int = 0           # projections packed in the draft tree
+    tier_specs: Tuple = ()          # QoS ladder (DraftSpec per cheap tier)
+    tier_params: Tuple = ()         # matching packed trees (same cache tree)
 
     @property
     def compression(self) -> float:
@@ -103,6 +112,15 @@ class PackedModel:
     @property
     def has_draft(self) -> bool:
         return self.draft_params is not None
+
+    @property
+    def n_tiers(self) -> int:
+        """Resident quality tiers: the full-quality tree plus the ladder."""
+        return 1 + len(self.tier_params)
+
+    def tier_tree(self, tier: int) -> Dict[str, Any]:
+        """Packed parameter tree backing engine tier `tier` (0 = full)."""
+        return self.params if tier == 0 else self.tier_params[tier - 1]
 
     def draft_cost_fraction(self) -> float:
         """Analytic draft/target FLOPs-per-token ratio (speculative)."""
@@ -136,7 +154,7 @@ class ModelRegistry:
     def load(self, arch: str, spec: Optional[kr.KratosSpec] = None, *,
              params: Optional[Dict[str, Any]] = None, seed: int = 0,
              name: Optional[str] = None, smoke: bool = True,
-             draft_spec=None) -> PackedModel:
+             draft_spec=None, tier_specs=None) -> PackedModel:
         """Load (or return the cached) packed model for (arch, spec).
 
         params: trained parameter tree; freshly initialized when omitted
@@ -146,12 +164,17 @@ class ModelRegistry:
         `EngineConfig.speculate`. The draft spec is part of the cache key
         AND the default name (`_spec_tag`), so a drafted and an undrafted
         artifact of the same (arch, spec) never collide in `get`.
+        tier_specs (tuple of DraftSpec, cheapest LAST): also keep a QoS
+        degradation ladder resident — the same dense weights packed at
+        each cheaper (sparsity, bits) point, validated KV-compatible by
+        `qos.check_tier_spec`. Required by `EngineConfig.qos`.
         """
         getter = C.get_smoke if smoke else C.get_config
         cfg = getter(arch)
         spec = cfg.kratos if spec is None else spec
         cfg = dataclasses.replace(cfg, kratos=spec)
-        key = (arch, spec, smoke, seed, draft_spec)
+        tier_specs = tuple(tier_specs or ())
+        key = (arch, spec, smoke, seed, draft_spec, tier_specs)
         if key in self._models and params is None:
             return self._models[key]
         if params is None:
@@ -167,18 +190,29 @@ class ModelRegistry:
             dcfg, dparams, dn = SP.derive_draft(params, cfg, spec, draft_spec)
             draft = dict(draft_spec=draft_spec, draft_cfg=dcfg,
                          draft_params=dparams, draft_packed=dn)
+        tier_params = ()
+        if tier_specs:
+            from repro.serve import qos as Q
+            # pack the ladder off the DENSE tree, before the target pack
+            # consumes `params` by reference (pack_model_params is pure, but
+            # each tier must see the dense leaves, not PackedLinear ones)
+            tier_params = tuple(
+                pack_model_params(params, Q.check_tier_spec(ts)
+                                  .kratos_spec(spec))[0]
+                for ts in tier_specs)
         packed, n_packed = pack_model_params(params, spec)
         if n_packed == 0:
             raise ValueError(f"{arch}: no packable projections found — "
                              "packed serving would be a no-op")
         packed_bytes = sum(pl.packed_bytes for pl in _iter_packed(packed))
-        default_name = (f"{arch}@{_spec_tag(spec, draft_spec)}"
+        default_name = (f"{arch}@{_spec_tag(spec, draft_spec, tier_specs)}"
                         + ("" if smoke else "-full")
                         + (f"#s{seed}" if seed else ""))
         model = PackedModel(
             name=name or default_name, cfg=cfg, params=packed,
             spec=spec, n_packed=n_packed, packed_bytes=packed_bytes,
-            dense_bytes=dense_bytes, **draft)
+            dense_bytes=dense_bytes, tier_specs=tier_specs,
+            tier_params=tier_params, **draft)
         self._models[key] = model
         self._by_name[model.name] = model
         return model
@@ -195,15 +229,17 @@ class ModelRegistry:
         return len(self._by_name)
 
 
-def _spec_tag(spec: kr.KratosSpec, draft_spec=None) -> str:
+def _spec_tag(spec: kr.KratosSpec, draft_spec=None, tier_specs=()) -> str:
     """Artifact-identity tag: every field that changes the serving buffers.
 
     The draft-spec fields are INCLUDED when present — a drafted artifact
     and its plain twin are different serving models and must never collide
-    under one name in `Registry.get`."""
+    under one name in `Registry.get`. Same for the QoS tier ladder."""
     tag = kr.spec_tag(spec.sparsity, spec.bits, spec.act_bits, spec.impl)
     if draft_spec is not None:
         tag += f"+draft[{draft_spec.tag}]"
+    if tier_specs:
+        tag += "+tiers[" + ",".join(ts.tag for ts in tier_specs) + "]"
     return tag
 
 

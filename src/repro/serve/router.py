@@ -31,6 +31,19 @@ replicas (replicas with no work skip their dispatch rather than burn an
 idle step). `report()` adds `tokens_per_router_step` — aggregate tokens
 over lockstep rounds, directly comparable to a single engine's
 tokens_per_step on the same trace; N saturated replicas approach N x.
+
+Failover (PR 7): a replica whose step raises `ReplicaFault` (crashed
+dispatch, or the engine's decode-sync validation caught corrupt output) is
+marked dead — `alive[i] = False`, excluded from admission / rebalance /
+stepping — and its non-finished requests are EVACUATED
+(`engine.evacuate`: running requests fold generated output into their
+prompts, so a survivor's greedy re-prefill resumes the stream
+token-identically) and re-admitted through the normal `_place` path with
+`failover_from` stamped (the adopting engine counts `failovers`). With
+`auto_restart` and an `engine_factory`, the dead replica is replaced by a
+fresh engine (its metrics retire into the fleet aggregate — counters are
+never lost). `run()` raises rather than spins when work remains and no
+replica is alive.
 """
 
 from __future__ import annotations
@@ -40,7 +53,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serve.engine import EngineConfig, EngineSaturated, InferenceEngine
+from repro.serve.engine import (EngineConfig, EngineSaturated,
+                                InferenceEngine, ReplicaFault)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, replica_load
 
@@ -49,19 +63,32 @@ class ReplicaRouter:
     """Least-loaded request routing + drain/rebalance over engine replicas."""
 
     def __init__(self, replicas: Sequence[InferenceEngine], *,
-                 hold_overflow: bool = True):
+                 hold_overflow: bool = True, engine_factory=None,
+                 auto_restart: bool = False):
         if not replicas:
             raise ValueError("router needs at least one replica")
+        if auto_restart and engine_factory is None:
+            raise ValueError("auto_restart needs an engine_factory(i) to "
+                             "build the replacement replica")
         self.replicas = list(replicas)
         for i, eng in enumerate(self.replicas):
             eng.trace.replica = i      # stamps events + Chrome process ids
         self.hold_overflow = hold_overflow
+        self.engine_factory = engine_factory
+        self.auto_restart = auto_restart
+        self.alive: List[bool] = [True] * len(self.replicas)
         self._overflow: collections.deque = collections.deque()
         self._rr = 0                      # rotating tiebreak for equal loads
         self.step_count = 0
         self.spills = 0                   # submits bounced to a sibling
         self.overflowed = 0               # submits parked in the router deque
         self.rebalanced = 0               # waiting requests moved mid-run
+        self.rejected_fleet = 0           # submits EVERY replica rejected
+        self.replica_deaths = 0           # ReplicaFault -> marked dead
+        self.restarts = 0                 # dead replicas replaced fresh
+        # metrics of replaced replicas: a restart must never lose counters
+        # from the fleet aggregate
+        self._retired_metrics: List[ServeMetrics] = []
         self.requests: List[Request] = []
 
     @classmethod
@@ -70,13 +97,17 @@ class ReplicaRouter:
               **kwargs) -> "ReplicaRouter":
         """N identical replicas of (model, cfg). backend_factory(i) returns
         the i-th replica's ExecutionBackend (None = LocalBackend each);
-        scheduler_factory(i) likewise for admission policy."""
-        replicas = [
-            InferenceEngine(
+        scheduler_factory(i) likewise for admission policy. The same
+        closure becomes the router's `engine_factory`, so `auto_restart`
+        works out of the box."""
+        def engine_factory(i: int) -> InferenceEngine:
+            return InferenceEngine(
                 model, cfg,
                 scheduler=scheduler_factory(i) if scheduler_factory else None,
                 backend=backend_factory(i) if backend_factory else None)
-            for i in range(n_replicas)]
+
+        replicas = [engine_factory(i) for i in range(n_replicas)]
+        kwargs.setdefault("engine_factory", engine_factory)
         return cls(replicas, **kwargs)
 
     # ------------------------------------------------------------------ API
@@ -89,7 +120,10 @@ class ReplicaRouter:
                     eos_id=kw.pop("eos_id", None),
                     extras=kw.pop("extras", None),
                     on_token=kw.pop("on_token", None),
-                    speculate=kw.pop("speculate", None))
+                    speculate=kw.pop("speculate", None),
+                    deadline_steps=kw.pop("deadline_steps", None),
+                    deadline_ms=kw.pop("deadline_ms", None),
+                    slo=kw.pop("slo", ""))
         if kw:
             raise TypeError(f"unknown submit kwargs: {sorted(kw)}")
         self.requests.append(r)
@@ -98,6 +132,11 @@ class ReplicaRouter:
             return r
         if not self.hold_overflow:
             self.requests.pop()
+            # counted ONCE at the router: the per-replica `rejected`
+            # counters record every bounce (one submit can bounce off all
+            # N), so the fleet-level refusal needs its own counter for
+            # per-replica/fleet totals to reconcile
+            self.rejected_fleet += 1
             raise EngineSaturated("all replicas rejected the request")
         self._overflow.append(r)
         self.overflowed += 1
@@ -121,14 +160,23 @@ class ReplicaRouter:
         self.step_count += 1
         self._drain_overflow()
         self._rebalance()
-        for eng in self.replicas:
-            eng.step()
+        for i, eng in enumerate(self.replicas):
+            if not self.alive[i]:
+                continue
+            try:
+                eng.step()
+            except ReplicaFault as e:
+                self._fail(i, e)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         limit = max_steps if max_steps is not None else \
             10 * sum(r.max_new_tokens + 2 for r in self.requests) \
             + max([r.arrival_step for r in self.requests], default=0)
         while self.n_waiting or self.n_active:
+            if not any(self.alive):
+                raise RuntimeError(
+                    "every replica is dead with work remaining — enable "
+                    "auto_restart or drain the overflow elsewhere")
             if limit <= 0:
                 raise RuntimeError("router did not drain within step limit")
             self.step()
@@ -136,7 +184,11 @@ class ReplicaRouter:
         return {i: list(r.generated) for i, r in enumerate(self.requests)}
 
     def report(self) -> Dict[str, Any]:
-        rep = ServeMetrics.aggregate([e.metrics for e in self.replicas])
+        pool = self._retired_metrics + [e.metrics for e in self.replicas]
+        rep = ServeMetrics.aggregate(pool)
+        # retired metrics joined the pool above; the fleet SIZE is the
+        # replica count, not the metrics count
+        rep["n_replicas"] = float(len(self.replicas))
         rep.update({
             "router_steps": float(self.step_count),
             "tokens_per_router_step": rep["tokens_generated"]
@@ -144,6 +196,9 @@ class ReplicaRouter:
             "spills": float(self.spills),
             "overflowed": float(self.overflowed),
             "rebalanced": float(self.rebalanced),
+            "rejected_fleet": float(self.rejected_fleet),
+            "replica_deaths": float(self.replica_deaths),
+            "restarts": float(self.restarts),
         })
         return rep
 
@@ -164,7 +219,11 @@ class ReplicaRouter:
                 f" | occupancy {r['mean_occupancy']:.2f}"
                 f" | spills {int(r['spills'])}, "
                 f"rebalanced {int(r['rebalanced'])}, "
-                f"rejected {int(r['rejected'])}")
+                f"rejected {int(r['rejected'])}"
+                + (f" | deaths {int(r['replica_deaths'])}, "
+                   f"restarts {int(r['restarts'])}, "
+                   f"failovers {int(r['failovers'])}"
+                   if r["replica_deaths"] else ""))
 
     # ------------------------------------------------------------- internals
 
@@ -174,7 +233,38 @@ class ReplicaRouter:
                  for e in self.replicas]
         order = sorted(range(n), key=lambda i: (loads[i], (i - self._rr) % n))
         self._rr = (self._rr + 1) % n
-        return order
+        return [i for i in order if self.alive[i]]
+
+    def _fail(self, i: int, err: Exception) -> None:
+        """Health-check verdict: mark replica `i` dead, evacuate its
+        non-finished requests, optionally restart it, then re-admit every
+        orphan to a survivor (failover_from stamped — the adopting engine
+        counts the failover). Orphans nobody can take park in overflow, or
+        — with hold_overflow off — shed terminally on the dead replica's
+        metrics so no request ever silently vanishes."""
+        eng = self.replicas[i]
+        self.alive[i] = False
+        self.replica_deaths += 1
+        eng.trace.fault("replica_dead", str(err))
+        orphans = eng.evacuate()
+        if self.auto_restart:
+            self._retired_metrics.append(eng.metrics)
+            fresh = self.engine_factory(i)
+            fresh.trace.replica = i
+            self.replicas[i] = fresh
+            self.alive[i] = True
+            self.restarts += 1
+        for r in orphans:
+            r.failover_from = i
+            if self._place(r):
+                continue
+            if self.hold_overflow:
+                self._overflow.append(r)
+                self.overflowed += 1
+            else:
+                r.state, r.shed_reason = "shed", "failover"
+                eng.metrics.on_shed("failover")
+                eng.trace.shed(r.id, -1, "failover", len(r.generated))
 
     def _place(self, r: Request) -> bool:
         for i in self._order():
@@ -208,11 +298,12 @@ class ReplicaRouter:
     def _rebalance(self) -> None:
         """Move tail-of-queue waiting requests from replicas that cannot
         admit them soon (waiting > free slots) to replicas that can."""
-        for src in self.replicas:
+        live = [e for i, e in enumerate(self.replicas) if self.alive[i]]
+        for src in live:
             excess = src.n_waiting - src.pool.n_free
             if excess <= 0:
                 continue
-            for dst in sorted(self.replicas,
+            for dst in sorted(live,
                               key=lambda e: replica_load(
                                   e.pool.n_active, e.pool.n_free,
                                   e.n_waiting)):

@@ -63,19 +63,53 @@ class Request:
     # runs exactly one plain target step per cycle). No effect when the
     # engine isn't speculating.
     speculate: Optional[int] = None
+    # QoS / deadlines (serve.qos): `deadline_steps` is RELATIVE to
+    # arrival_step on the deterministic engine-step clock (the clock tests
+    # and benches gate on); `deadline_ms` is a wall-clock bound from submit
+    # (perf_counter). Either expiring sheds the request — at admission if
+    # it is already doomed (cannot finish in the remaining budget), or
+    # mid-flight with its slot/pages freed. None = no deadline. `slo` is a
+    # free-form class label carried into spans/records.
+    deadline_steps: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    slo: str = ""
 
     # engine-managed
-    state: str = "waiting"                  # waiting | running | done
+    state: str = "waiting"                  # waiting | running | done | shed
     slot: int = -1
     index: int = 0                          # next cache write position
     generated: List[int] = dataclasses.field(default_factory=list)
     # paged engines: prompt tokens whose prefill was skipped because their
     # KV came from shared prefix pages (serve.paging) — 0 on a miss/slab
     prefix_matched: int = 0
+    # terminal disposition detail when state == "shed":
+    # 'deadline' | 'pool' | 'failover' | 'cancel'
+    shed_reason: str = ""
+    # cheapest (highest) engine tier this request ever decoded on — tier 0
+    # unless a QoS demotion happened while it was resident
+    tier: int = 0
+    # PoolExhausted backoff (EngineConfig.pool_wait_retries): requeue count
+    # and the earliest step the engine may retry the admission
+    pool_retries: int = 0
+    retry_at_step: int = 0
+    # set by ReplicaRouter._fail on evacuation; the adopting engine counts
+    # metrics.on_failover() once and clears it
+    failover_from: int = -1
 
     @property
     def done(self) -> bool:
         return self.state == "done"
+
+    @property
+    def finished(self) -> bool:
+        """Terminal either way: completed ('done') or shed ('shed')."""
+        return self.state in ("done", "shed")
+
+    def deadline_step(self) -> Optional[int]:
+        """Absolute step-clock deadline, or None."""
+        if self.deadline_steps is None:
+            return None
+        return self.arrival_step + self.deadline_steps
 
 
 def replica_load(n_active: int, n_free: int, n_waiting: int) -> int:

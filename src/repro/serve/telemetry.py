@@ -190,6 +190,8 @@ def router_sample(router) -> Dict[str, float]:
     for i, eng in enumerate(router.replicas):
         s[f"replica{i}_n_active"] = float(eng.pool.n_active)
         s[f"replica{i}_n_waiting"] = float(eng.n_waiting)
+        s[f"replica{i}_alive"] = float(router.alive[i])
+        s[f"replica{i}_tier"] = float(eng.tier)
     return s
 
 
@@ -203,6 +205,10 @@ _COUNTER_KEYS = frozenset((
     "host_syncs_prefill", "spec_dispatches", "draft_proposed",
     "draft_accepted", "draft_rolled_back", "prefill_tokens_skipped",
     "pool_waits", "spills", "overflowed", "rebalanced", "router_steps",
+    # resilience: QoS tier churn, shed/deadline accounting, failover
+    "tier_demotions", "tier_promotions", "shed", "deadline_missed",
+    "shed_pool_pressure", "failovers", "rejected_fleet", "replica_deaths",
+    "restarts",
 ))
 
 

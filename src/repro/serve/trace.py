@@ -145,6 +145,23 @@ class NullTracer:
     def pool_wait(self):
         pass
 
+    # -- resilience edges (serve.qos / chaos / failover) --------------------
+
+    def tier_change(self, old_tier, new_tier, load):
+        pass
+
+    def req_tier(self, rid, tier):
+        pass
+
+    def shed(self, rid, slot, reason, n_generated):
+        pass
+
+    def failover(self, rid, src_replica):
+        pass
+
+    def fault(self, kind, detail):
+        pass
+
     # -- introspection (empty on the null tracer) ---------------------------
 
     def request_spans(self) -> Dict[int, Dict[str, Any]]:
@@ -258,6 +275,28 @@ class Tracer(NullTracer):
     def pool_wait(self):
         self._push({"ev": "pool_wait", "step": self.step, "t": self._t()})
 
+    def tier_change(self, old_tier, new_tier, load):
+        self._push({"ev": "tier_change", "step": self.step, "t": self._t(),
+                    "old_tier": old_tier, "new_tier": new_tier,
+                    "load": load})
+
+    def req_tier(self, rid, tier):
+        self._push({"ev": "req_tier", "step": self.step, "t": self._t(),
+                    "rid": rid, "tier": tier})
+
+    def shed(self, rid, slot, reason, n_generated):
+        self._push({"ev": "shed", "step": self.step, "t": self._t(),
+                    "rid": rid, "slot": slot, "reason": reason,
+                    "n_generated": n_generated})
+
+    def failover(self, rid, src_replica):
+        self._push({"ev": "failover", "step": self.step, "t": self._t(),
+                    "rid": rid, "src_replica": src_replica})
+
+    def fault(self, kind, detail):
+        self._push({"ev": "fault", "step": self.step, "t": self._t(),
+                    "kind": kind, "detail": detail})
+
     # -- profiler bracket ---------------------------------------------------
 
     def _profiler_start(self) -> bool:
@@ -324,6 +363,16 @@ class Tracer(NullTracer):
             elif kind == "finish":
                 s.update(finish_step=ev["step"], finish_t=ev["t"],
                          tokens=ev["n_generated"])
+            elif kind == "req_tier":
+                # tier transitions in admission order: [admit tier, ...]
+                s.setdefault("tiers", []).append(ev["tier"])
+            elif kind == "shed":
+                s.update(shed_step=ev["step"], shed_t=ev["t"],
+                         shed_reason=ev["reason"],
+                         tokens=ev["n_generated"])
+            elif kind == "failover":
+                s.update(failover_step=ev["step"],
+                         failover_from=ev["src_replica"])
         for s in spans.values():
             if "admit_step" in s:
                 s["queue_steps"] = s["admit_step"] - s["arrival_step"]

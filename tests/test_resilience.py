@@ -1,0 +1,318 @@
+"""Resilience layer (PR 7): QoS tier ladder + hysteresis controller,
+deadline semantics (admission doom-shed, in-flight expiry), mid-flight
+cancellation hygiene across serving modes, pool-wait backoff + shedding.
+
+The hygiene contract under test: every shed/cancel path releases its slot
+(and pages, on a paged pool) so the pool drains to PRISTINE — no leaked
+refcounts, no stranded slots — and the terminal state is explicit
+(`Request.state == "shed"` with a `shed_reason`), never a hang.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
+                         ModelRegistry, QoSConfig, QoSController,
+                         check_tier_spec, parse_tiers)
+
+ARCH = "h2o-danube-1.8b"
+_REGISTRY = ModelRegistry()
+TIERS = (DraftSpec.from_args(8, 0.5, 0), DraftSpec.from_args(8, 0.75, 0))
+
+
+def _model(**kw):
+    return _REGISTRY.load(ARCH, **kw)
+
+
+def _prompt(model, n=6, seed=0):
+    return np.random.default_rng(seed).integers(0, model.cfg.vocab, n)
+
+
+def _assert_pristine(eng):
+    """After a full drain every pool resource is back: all slots free, and
+    on a paged pool every non-sink page refcount is zero with the whole
+    free list restored."""
+    assert eng.pool.n_active == 0
+    assert eng.pool.n_free == eng.cfg.n_slots
+    if hasattr(eng.pool, "_free_pages"):
+        assert int(np.asarray(eng.pool.refs)[1:].sum()) == 0
+        assert len(eng.pool._free_pages) == eng.pool.n_usable_pages
+
+
+# ---------------------------------------------------------------------------
+# QoS controller unit behavior
+# ---------------------------------------------------------------------------
+
+def test_qos_config_validates():
+    with pytest.raises(ValueError, match="promote_depth"):
+        QoSConfig(demote_depth=2, promote_depth=2)
+    with pytest.raises(ValueError, match="hysteresis"):
+        QoSConfig(hysteresis=0)
+
+
+def test_qos_controller_needs_a_ladder():
+    with pytest.raises(ValueError, match="2 resident tiers"):
+        QoSController(QoSConfig(), n_tiers=1)
+
+
+def test_qos_hysteresis_demote_promote_and_dead_band():
+    cfg = QoSConfig(demote_depth=4, promote_depth=1, hysteresis=2)
+    c = QoSController(cfg, n_tiers=3)
+    # demotion needs `hysteresis` CONSECUTIVE over-watermark steps
+    assert c.observe(9) == 0
+    assert c.observe(9) == 1
+    # the streak resets on a change: one more pair demotes again, then the
+    # ladder clamps at its cheapest tier
+    assert c.observe(9) == 1
+    assert [c.observe(9) for _ in range(4)] == [2, 2, 2, 2]
+    # dead band (between the watermarks) resets BOTH streaks: an
+    # oscillating queue never flaps the tier
+    assert c.observe(0) == 2
+    assert c.observe(3) == 2              # dead band wipes the under-streak
+    assert c.observe(0) == 2
+    assert c.observe(0) == 1              # two consecutive idle steps
+    assert c.observe(0) == 1
+    assert c.observe(0) == 0
+    assert c.observe(0) == 0              # clamped at tier 0
+
+
+def test_qos_page_pressure_also_demotes():
+    c = QoSController(QoSConfig(demote_depth=50, hysteresis=1,
+                                page_pressure=0.9), n_tiers=2)
+    assert c.observe(0, page_frac=0.5) == 0
+    assert c.observe(0, page_frac=0.95) == 1    # full pool, empty queue
+    # a full pool also BLOCKS re-promotion even at zero queue depth
+    assert c.observe(0, page_frac=0.95) == 1
+    assert c.observe(0, page_frac=0.1) == 0
+
+
+def test_check_tier_spec_refuses_cache_shape_changes():
+    with pytest.raises(ValueError, match="keep_layers"):
+        check_tier_spec(DraftSpec.from_args(8, 0.5, 2))
+    with pytest.raises(ValueError, match="cache_dtype"):
+        check_tier_spec(DraftSpec(cache_dtype="bfloat16"))
+    ts = DraftSpec.from_args(8, 0.5, 0)
+    assert check_tier_spec(ts) is ts
+
+
+def test_parse_tiers():
+    tiers = parse_tiers("8:0.5,8:0.75")
+    assert len(tiers) == 2
+    assert tiers[0].sparsity == 0.5 and tiers[1].sparsity == 0.75
+    assert all(t.bits == 8 for t in tiers)
+    with pytest.raises(ValueError, match="no tiers"):
+        parse_tiers(" , ")
+
+
+# ---------------------------------------------------------------------------
+# tier swaps on a live engine
+# ---------------------------------------------------------------------------
+
+def test_registry_keeps_tiers_resident():
+    m = _model(tier_specs=TIERS)
+    assert m.n_tiers == 3
+    assert m.tier_tree(0) is m.params
+    assert m.tier_tree(1) is m.tier_params[0]
+    assert "tiers[" in m.name
+    # tiers re-pack the SAME dense weights; packed trees are distinct
+    assert m.tier_params[0] is not m.params
+
+
+def test_engine_degrades_and_recovers_under_load():
+    """Saturating submit burst -> the engine demotes down the ladder;
+    streams keep decoding across the swap (token continuity: every request
+    completes its full budget); queue drain re-promotes back to tier 0.
+    Tier churn lands in metrics, per-request tiers in trace-visible
+    Request.tier."""
+    m = _model(tier_specs=TIERS)
+    eng = InferenceEngine(
+        m, EngineConfig(n_slots=2, max_len=48,
+                        qos=QoSConfig(demote_depth=3, promote_depth=0,
+                                      hysteresis=2)))
+    rng = np.random.default_rng(1)
+    reqs = [eng.submit(rng.integers(0, m.cfg.vocab, 6), 8)
+            for _ in range(8)]
+    eng.run()
+    assert all(r.state == "done" and len(r.generated) == 8 for r in reqs)
+    assert eng.metrics.tier_demotions >= 1
+    assert eng.metrics.tier_promotions >= 1
+    assert eng.tier == 0                         # drained: recovered
+    # the burst's tail rode a degraded window; Request.tier records the
+    # cheapest tier each request ever decoded on
+    assert max(r.tier for r in reqs) >= 1
+    _assert_pristine(eng)
+
+
+def test_tier_zero_run_is_unchanged_by_resident_tiers():
+    """Loading tiers must not perturb tier-0 serving: greedy outputs match
+    a model loaded without tiers, token for token."""
+    plain = _model()
+    tiered = _model(tier_specs=TIERS)
+
+    def run(m):
+        eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=48))
+        rs = [eng.submit(_prompt(m, seed=s), 6) for s in range(3)]
+        eng.run()
+        return [tuple(r.generated) for r in rs]
+
+    assert run(plain) == run(tiered)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: admission doom-shed + in-flight expiry
+# ---------------------------------------------------------------------------
+
+def test_doomed_at_admission_is_shed_before_occupying_a_slot():
+    m = _model()
+    eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=48))
+    r = eng.submit(_prompt(m), 12, deadline_steps=3)   # needs >= 12 steps
+    assert r.state == "shed" and r.shed_reason == "deadline"
+    assert eng.n_waiting == 0                # never queued
+    assert eng.metrics.shed == 1 and eng.metrics.deadline_missed == 1
+    # a feasible deadline admits normally and completes
+    ok = eng.submit(_prompt(m), 4, deadline_steps=50)
+    eng.run()
+    assert ok.state == "done" and len(ok.generated) == 4
+    _assert_pristine(eng)
+
+
+def test_queued_request_expires_when_backlog_dooms_it():
+    """A request whose deadline was feasible at submit but is overtaken by
+    queue wait is shed IN THE QUEUE (not after wasting a slot)."""
+    m = _model()
+    eng = InferenceEngine(m, EngineConfig(n_slots=1, max_len=48))
+    front = eng.submit(_prompt(m), 10)
+    late = eng.submit(_prompt(m, seed=1), 10, deadline_steps=12)
+    eng.run()
+    assert front.state == "done"
+    assert late.state == "shed" and late.shed_reason == "deadline"
+    assert eng.metrics.deadline_missed == 1
+    _assert_pristine(eng)
+
+
+def test_completions_never_served_past_deadline():
+    """decode_chunk=1 makes the per-step doom check exact: every request
+    either finishes by its deadline or sheds — no late completions."""
+    m = _model()
+    eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=48))
+    rng = np.random.default_rng(3)
+    D = 14
+    reqs = [eng.submit(rng.integers(0, m.cfg.vocab, 5), 8,
+                       deadline_steps=D) for _ in range(6)]
+    eng.run()
+    assert all(r.state in ("done", "shed") for r in reqs)
+    for r in reqs:
+        if r.state == "done":
+            fin = eng.metrics.records[r.id].finish_step
+            assert fin <= r.arrival_step + D
+    assert any(r.state == "done" for r in reqs)
+    _assert_pristine(eng)
+
+
+# ---------------------------------------------------------------------------
+# cancellation hygiene across serving modes
+# ---------------------------------------------------------------------------
+
+def _mk_engine(mode, paging):
+    kw = dict(n_slots=2, max_len=48)
+    model_kw = {}
+    if mode == "spec":
+        model_kw["draft_spec"] = DraftSpec.from_args(8, 0.0, 0)
+        kw["speculate"] = 3
+        # full-attention arch: the speculative verify block needs a
+        # non-circular cache
+        arch = "nemotron-4-340b"
+    else:
+        arch = ARCH
+    if paging == "paged":
+        kw["page_size"] = 8
+    m = _REGISTRY.load(arch, **model_kw)
+    return m, InferenceEngine(m, EngineConfig(**kw))
+
+
+@pytest.mark.parametrize("mode", ["plain", "spec"])
+@pytest.mark.parametrize("paging", ["slab", "paged"])
+def test_midflight_cancel_is_clean(mode, paging):
+    """Cancel one running and one queued request mid-decode: both get the
+    explicit terminal state, the survivors complete their full budgets,
+    and the pool drains to pristine (slots AND page refcounts)."""
+    m, eng = _mk_engine(mode, paging)
+    reqs = [eng.submit(_prompt(m, seed=s), 8, arrival_step=0)
+            for s in range(4)]
+    for _ in range(3):                   # two running, two queued
+        eng.step()
+    running = next(r for r in reqs if r.state == "running")
+    queued = next(r for r in reqs if r.state == "waiting")
+    eng.cancel(running)
+    eng.cancel(queued)
+    assert running.state == "shed" and running.shed_reason == "cancel"
+    assert queued.state == "shed" and queued.shed_reason == "cancel"
+    eng.cancel(running)                  # idempotent on terminal requests
+    eng.run()
+    survivors = [r for r in reqs if r not in (running, queued)]
+    assert all(r.state == "done" and len(r.generated) == 8
+               for r in survivors)
+    assert eng.metrics.shed == 2
+    _assert_pristine(eng)
+
+
+def test_cancel_does_not_change_survivor_tokens():
+    """Greedy tokens of surviving requests are identical with and without
+    a mid-flight cancellation next to them."""
+    m = _model()
+
+    def run(cancel):
+        eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=48))
+        keep = eng.submit(_prompt(m, seed=0), 8)
+        victim = eng.submit(_prompt(m, seed=1), 8)
+        if cancel:
+            for _ in range(2):
+                eng.step()
+            eng.cancel(victim)
+        eng.run()
+        return tuple(keep.generated)
+
+    assert run(cancel=False) == run(cancel=True)
+
+
+# ---------------------------------------------------------------------------
+# PoolExhausted backoff + pool-pressure shedding
+# ---------------------------------------------------------------------------
+
+def test_pool_wait_backoff_then_shed():
+    """With `pool_wait_retries`, a request that keeps finding the page pool
+    full retries on an exponential backoff schedule (no head-of-line
+    spinning every step) and is shed with reason 'pool' past the cap.
+
+    Full-attention arch: an SWA cache is circular/resident, so only here
+    does the paged pool actually budget pages per token."""
+    m = _REGISTRY.load("nemotron-4-340b")
+    # page pool sized so one long resident starves the second admission
+    eng = InferenceEngine(
+        m, EngineConfig(n_slots=2, max_len=48, page_size=8, n_pages=7,
+                        pool_wait_retries=2))
+    hog = eng.submit(_prompt(m), 20)
+    starved = eng.submit(_prompt(m, seed=1), 20)
+    eng.run()
+    assert hog.state == "done" and len(hog.generated) == 20
+    assert starved.state == "shed" and starved.shed_reason == "pool"
+    assert starved.pool_retries == 3      # cap+1 attempts, then shed
+    assert eng.metrics.shed_pool_pressure == 1
+    assert eng.metrics.pool_waits >= 3
+    _assert_pristine(eng)
+
+
+def test_pool_wait_unbounded_legacy_waits_it_out():
+    """pool_wait_retries=None (default) preserves the pre-PR-7 behavior:
+    the starved request waits at the deque front and runs when pages
+    free — nothing is shed."""
+    m = _REGISTRY.load("nemotron-4-340b")
+    eng = InferenceEngine(
+        m, EngineConfig(n_slots=2, max_len=48, page_size=8, n_pages=7))
+    hog = eng.submit(_prompt(m), 20)
+    starved = eng.submit(_prompt(m, seed=1), 20)
+    eng.run()
+    assert hog.state == "done" and starved.state == "done"
+    assert len(starved.generated) == 20
+    assert eng.metrics.shed == 0
+    _assert_pristine(eng)

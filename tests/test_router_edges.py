@@ -114,3 +114,28 @@ def test_adopt_rehomes_stolen_requests_and_validates():
     with pytest.raises(EngineSaturated):
         tight.submit(_prompt(m), 2)
     assert tight.metrics.rejected == 1
+
+
+def test_fleet_rejection_reconciles():
+    """One submit that every replica bounces: each replica counts its OWN
+    bounce in `rejected` (a single submit can bounce off all N), and the
+    router counts the fleet-level refusal exactly once in
+    `rejected_fleet` — so per-replica and fleet totals reconcile instead
+    of the refusal vanishing from the aggregate."""
+    m = _model()
+    n = 2
+    router = ReplicaRouter.build(
+        m, EngineConfig(n_slots=1, max_len=24, max_waiting=0), n,
+        hold_overflow=False)
+    refused = 3
+    for _ in range(refused):
+        with pytest.raises(EngineSaturated):
+            router.submit(_prompt(m), 3)
+    per_replica = [e.metrics.rejected for e in router.replicas]
+    rep = router.report()
+    assert router.rejected_fleet == refused
+    assert rep["rejected_fleet"] == float(refused)
+    # every replica bounced every refused submit
+    assert per_replica == [refused] * n
+    assert rep["rejected"] == float(sum(per_replica)) == float(refused * n)
+    assert router.requests == []         # refused submits are not tracked

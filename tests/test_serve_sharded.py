@@ -156,3 +156,59 @@ def test_router_over_disjoint_replica_submeshes():
         assert {e.backend.name for e in router.replicas} == {"sharded"}
         print("router over submeshes OK, spills", int(rep["spills"]))
     """)
+
+
+def test_sharded_tier_swap_and_cancel_hygiene():
+    """PR 7 grid, sharded leg: the QoS tier swap re-jits the decode step
+    per tier on the mesh (params are a pinned non-donated operand, so the
+    swap is KV-safe), mid-flight cancel + deadline shed release slots
+    cleanly, and a tier-0 sharded run stays token-identical to local."""
+    run_script("""
+        import numpy as np
+        from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
+                                 ModelRegistry, QoSConfig, ShardedBackend)
+        tiers = (DraftSpec.from_args(8, 0.5, 0),)
+        m = ModelRegistry().load("h2o-danube-1.8b", tier_specs=tiers)
+        rng = np.random.default_rng(2)
+        jobs = [(rng.integers(0, m.cfg.vocab, 6), 6) for _ in range(6)]
+
+        # degradation under load on the mesh: all complete across the swap
+        eng = InferenceEngine(
+            m, EngineConfig(n_slots=2, max_len=32,
+                            qos=QoSConfig(demote_depth=2, promote_depth=0,
+                                          hysteresis=1)),
+            backend=ShardedBackend(mesh_shape=(4, 2)))
+        reqs = [eng.submit(p, g) for p, g in jobs]
+        eng.run()
+        assert all(r.state == "done" and len(r.generated) == 6
+                   for r in reqs)
+        assert eng.metrics.tier_demotions >= 1
+        assert eng.tier == 0                    # drained: re-promoted
+        assert eng.pool.n_free == 2
+
+        # cancel + doomed deadline on the sharded engine: explicit
+        # terminal states, slots released, survivor completes
+        eng2 = InferenceEngine(
+            m, EngineConfig(n_slots=2, max_len=32),
+            backend=ShardedBackend(mesh_shape=(4, 2)))
+        keep = eng2.submit(jobs[0][0], 6)
+        victim = eng2.submit(jobs[1][0], 6)
+        doomed = eng2.submit(jobs[2][0], 10, deadline_steps=2)
+        assert doomed.state == "shed" and doomed.shed_reason == "deadline"
+        for _ in range(2):
+            eng2.step()
+        eng2.cancel(victim)
+        assert victim.state == "shed" and victim.shed_reason == "cancel"
+        eng2.run()
+        assert keep.state == "done" and len(keep.generated) == 6
+        assert eng2.pool.n_active == 0 and eng2.pool.n_free == 2
+
+        # tier-0 sharded output with resident tiers == plain local output
+        local = InferenceEngine(
+            ModelRegistry().load("h2o-danube-1.8b"),
+            EngineConfig(n_slots=2, max_len=32))
+        lk = local.submit(jobs[0][0], 6)
+        local.run()
+        assert tuple(keep.generated) == tuple(lk.generated)
+        print("sharded tier swap + cancel hygiene OK")
+    """)

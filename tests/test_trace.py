@@ -67,6 +67,12 @@ def test_null_tracer_zero_alloc():
         t.spec_dispatch(4, 2, 2)
         t.spec_slot(0, 3, 4, 4)
         t.reject(5)
+        # resilience hooks (PR 7) ride the same zero-alloc contract
+        t.tier_change(0, 1, 9)
+        t.req_tier(1, 1)
+        t.shed(1, 0, "deadline", 3)
+        t.failover(1, 0)
+        t.fault("crash", "injected")
 
     deltas = []
     for _ in range(3):
