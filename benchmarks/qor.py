@@ -96,6 +96,15 @@ POLICY: Dict[str, Tuple[str, float]] = {
     "prefill_skip_fraction": ("higher", 0.02),
     "prefill_tokens_skipped": ("higher", 0.02),
     "pool_waits": ("lower", 0.25),
+    # page-table-native decode + whole-conversation reuse (PR 8):
+    # conversation hits/reuse ride the same deterministic token clock as
+    # tokens_generated; gather events on the native hot path must stay
+    # EXACTLY zero, and the avoided-traffic ledger may only grow (it is
+    # bytes/dispatch * decode_steps, so it inherits dispatch-count drift)
+    "conversation_prefix_hits": ("exact", 0.0),
+    "conversation_tokens_reused": ("exact", 0.0),
+    "decode_gather_events": ("exact", 0.0),
+    "gather_bytes_avoided": ("higher", 0.05),
     # wall clock: never gated (CI hardware varies run to run)
     "wall_tok_s": ("info", 0.0),
     "admitted_tok_s": ("info", 0.0),

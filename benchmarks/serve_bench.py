@@ -55,6 +55,20 @@ Every JSON record carries the prefill FLOPs saved (2 * N_active * skipped
 tokens) and the page-pool occupancy; `--out results/BENCH_prefix.json` is
 the CI artifact.
 
+Conversation-trace mode (PR 8): `--conversation-trace` drives multi-turn
+CHATS — each turn's prompt is the whole prior conversation (prompt +
+the engine's own reply) plus a short follow-up, so the trace cannot be
+precomputed: later turns are built live from the tokens the engine
+emitted. The paged engine publishes every finished request's FULL
+conversation into the radix prefix tree (generated tokens included), so
+turn t matches every full page of turns 1..t-1 and prefills only the
+follow-up. Gates: >= 70% of ALL prompt tokens skipped at prefill, ZERO
+gather/scatter events on the page-table-native decode hot path (with
+`gather_bytes_avoided` exactly accounting the traffic the legacy wrap
+would have moved), and greedy token-identity against a slab engine fed
+the same per-turn prompts. `--out results/BENCH_conv.json` is the CI
+artifact, diffed against its golden by benchmarks/qor.py.
+
 Overload-trace mode (PR 7): `--overload-trace` replays a 2x SATURATING
 Poisson trace (token arrivals at twice the chunk-1 slab's service rate)
 through a baseline engine that admits everything and through the resilient
@@ -392,6 +406,149 @@ def run_prefix_trace(arch: str, n_requests: int, n_slots: int, seed: int,
     print(f"# serve_bench --prefix-trace: {'PASS' if ok else 'FAIL'} — "
           f"paged+prefix >= {gate:g}x admitted tok/s, >= {skip_gate:.0%} "
           "prefill tokens skipped, greedy token-identical")
+    return ok
+
+
+def conversation_turns(n_conversations: int, n_turns: int, utt_range,
+                       gen_range, vocab: int, seed: int):
+    """Per-conversation turn schedules [(utterance, gen_len), ...]. Only
+    the NEW user text per turn is drawn here — each turn's full prompt is
+    assembled live from the engine's own prior replies, because a chat's
+    turn-t prompt contains the turn-(t-1) output."""
+    rng = np.random.default_rng(seed)
+    return [[(rng.integers(0, vocab, int(rng.integers(*utt_range))),
+              int(rng.integers(*gen_range))) for _ in range(n_turns)]
+            for _ in range(n_conversations)]
+
+
+def run_conversation_trace(arch: str, n_conversations: int, n_turns: int,
+                           n_slots: int, seed: int, page_size: int,
+                           out: str = "", skip_gate: float = 0.7) -> bool:
+    """Multi-turn chats resuming their own history through the paged
+    native engine, vs a slab engine fed the same per-turn prompts.
+
+    The chat shape: short user follow-ups, longer assistant replies —
+    so by turn t the prompt is dominated by the prior conversation. With
+    whole-conversation publishing (prompt + GENERATED tokens land in the
+    prefix tree at finish) every full page of the prior exchange is
+    served from cache; prompt-only publishing would re-prefill every
+    past reply. Gates, all deterministic: >= `skip_gate` of all prompt
+    tokens skipped at prefill; ZERO gather/scatter events on the
+    page-table-native decode path with `gather_bytes_avoided` exactly
+    2*slab_view_bytes per dispatch; greedy token-identity vs the slab."""
+    from repro.serve.paging import GATHER_EVENTS
+    registry = ModelRegistry()
+    model = registry.load(arch)
+    # follow-ups much shorter than replies: the regime where reusing the
+    # whole conversation (not just its prompts) carries the economics
+    utt_range, gen_range = (4, 9), (18, 25)
+    convs = conversation_turns(n_conversations, n_turns, utt_range,
+                               gen_range, model.cfg.vocab, seed)
+    max_len = n_turns * (utt_range[1] + gen_range[1]) + 8
+    pp = -(-max_len // page_size)
+    # every retired conversation stays resident in the prefix tree until
+    # its last turn, plus the live slots' working pages
+    n_pages = (n_conversations + n_slots) * pp + 1
+    prov = provenance(seed)
+
+    eng = InferenceEngine(model, EngineConfig(
+        n_slots=n_slots, max_len=max_len, decode_chunk=4,
+        page_size=page_size, n_pages=n_pages))
+    GATHER_EVENTS.clear()
+    histories = [np.zeros(0, np.int32) for _ in convs]
+    prompts, paged_reqs = [], []
+    t0 = time.time()
+    for t in range(n_turns):
+        round_reqs = []
+        for c, turns in enumerate(convs):
+            utt, gen = turns[t]
+            prompt = np.concatenate([histories[c], utt]).astype(np.int32)
+            prompts.append((prompt, gen))
+            round_reqs.append((c, eng.submit(prompt, gen)))
+        eng.run()                     # turn t finishes fleet-wide before
+        for c, r in round_reqs:       # turn t+1 resumes the conversation
+            histories[c] = np.concatenate(
+                [histories[c], convs[c][t][0],
+                 np.asarray(r.generated, np.int32)]).astype(np.int32)
+            paged_reqs.append(r)
+    wall = max(time.time() - t0, 1e-9)
+    rep = eng.metrics.report()
+
+    # slab oracle: the SAME per-turn prompts (histories included), no
+    # paging — greedy outputs must match token for token
+    slab_eng = InferenceEngine(model, EngineConfig(n_slots=n_slots,
+                                                   max_len=max_len,
+                                                   decode_chunk=4))
+    slab_reqs = [slab_eng.submit(p, g) for p, g in prompts]
+    slab_eng.run()
+    same = all(pr.generated == sr.generated
+               for pr, sr in zip(paged_reqs, slab_reqs))
+    rep_s = slab_eng.metrics.report()
+
+    skip = rep["prefill_skip_fraction"]
+    gather_events = len(GATHER_EVENTS)
+    avoided = rep["gather_bytes_avoided"]
+    avoided_exact = avoided == eng.backend.gather_bytes_per_dispatch() \
+        * rep["decode_steps"]
+    native_ok = gather_events == 0 and avoided > 0 and avoided_exact
+    ok = same and skip >= skip_gate and native_ok
+    print(f"# conversation-trace[{arch}] {n_conversations} chats x "
+          f"{n_turns} turns, P={page_size}: prefill skipped "
+          f"{int(rep['prefill_tokens_skipped'])} of "
+          f"{eng.metrics.prefill_tokens_skipped + eng.metrics.prefill_tokens_computed} "
+          f"prompt toks ({skip:.2f}, gate >= {skip_gate:g}) "
+          f"[{'PASS' if skip >= skip_gate else 'FAIL'}] | conversation "
+          f"hits {int(rep['conversation_prefix_hits'])}, tokens reused "
+          f"{int(rep['conversation_tokens_reused'])} | gather events "
+          f"{gather_events}, avoided {avoided / 1e6:.2f} MB over "
+          f"{int(rep['decode_steps'])} dispatches "
+          f"[{'PASS' if native_ok else 'FAIL'} == 0 events, exact ledger]"
+          f" | token-identical [{'PASS' if same else 'FAIL'}] | "
+          f"{rep['tokens_generated'] / wall:.1f} tok/s wall, pages "
+          f"{rep['pages_in_use']:.1f}/{eng.pool.n_usable_pages}, pool "
+          f"waits {int(rep['pool_waits'])}")
+    common = {"arch": arch, "decode_chunk": 4, "mesh_shape": [1, 1],
+              "n_replicas": 1, "n_conversations": n_conversations,
+              "n_turns": n_turns, **prov}
+    records = [
+        {**common, "mode": "conversation-native", "page_size": page_size,
+         "n_pages": n_pages,
+         "tokens_generated": rep["tokens_generated"],
+         "decode_steps": rep["decode_steps"],
+         "tokens_per_dispatch": rep["tokens_per_dispatch"],
+         "wall_tok_s": rep["tok_per_s"],
+         "prefix_hit_rate": rep["prefix_hit_rate"],
+         "prefill_tokens_skipped": rep["prefill_tokens_skipped"],
+         "prefill_skip_fraction": skip,
+         "conversation_prefix_hits": rep["conversation_prefix_hits"],
+         "conversation_tokens_reused": rep["conversation_tokens_reused"],
+         "gather_bytes_avoided": avoided,
+         "decode_gather_events": float(gather_events),
+         "pages_in_use": rep["pages_in_use"],
+         "page_occupancy": rep["page_occupancy"],
+         "pool_waits": rep["pool_waits"]},
+        {**common, "mode": "slab", "page_size": 0, "n_pages": 0,
+         "tokens_generated": rep_s["tokens_generated"],
+         "decode_steps": rep_s["decode_steps"],
+         "tokens_per_dispatch": rep_s["tokens_per_dispatch"],
+         "wall_tok_s": rep_s["tok_per_s"],
+         "prefill_tokens_skipped": rep_s["prefill_tokens_skipped"],
+         "prefill_skip_fraction": rep_s["prefill_skip_fraction"],
+         "gather_bytes_avoided": rep_s["gather_bytes_avoided"]}]
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "n_slots": n_slots,
+                       "n_conversations": n_conversations,
+                       "n_turns": n_turns, "page_size": page_size,
+                       "n_pages": n_pages, "skip_gate": skip_gate,
+                       "prefill_skip_fraction": skip,
+                       "gather_bytes_avoided": avoided, **prov,
+                       "records": records}, f, indent=2)
+        print(f"# wrote {out} ({len(records)} records)")
+    print(f"# serve_bench --conversation-trace: {'PASS' if ok else 'FAIL'}"
+          f" — >= {skip_gate:.0%} prompt tokens skipped across multi-turn "
+          "chats, zero decode gather/scatter, greedy token-identical")
     return ok
 
 
@@ -818,7 +975,18 @@ def main() -> None:
                          "tokens skipped + token-identity; skips regular "
                          "modes")
     ap.add_argument("--page-size", type=int, default=8,
-                    help="KV page size for --prefix-trace")
+                    help="KV page size for --prefix-trace / "
+                         "--conversation-trace")
+    ap.add_argument("--conversation-trace", action="store_true",
+                    help="multi-turn chat mode: each turn's prompt is the "
+                         "whole prior conversation (engine replies "
+                         "included) + a follow-up, through the page-table-"
+                         "native paged engine; gated >= 70% prompt tokens "
+                         "skipped, zero decode gather/scatter events, "
+                         "greedy token-identity vs the slab; skips "
+                         "regular modes")
+    ap.add_argument("--turns", type=int, default=4,
+                    help="turns per conversation for --conversation-trace")
     ap.add_argument("--overload-trace", action="store_true",
                     help="resilience mode: deadline+QoS engine vs non-"
                          "degrading engine under 2x saturating Poisson "
@@ -843,6 +1011,11 @@ def main() -> None:
         ok = run_overload_trace(a.arch or "h2o-danube-1.8b",
                                 a.requests or 40, a.slots, a.seed,
                                 out=a.out, deadline_steps=a.deadline_steps)
+        sys.exit(0 if ok else 1)
+    if a.conversation_trace:
+        ok = run_conversation_trace(a.arch or "nemotron-4-340b",
+                                    a.requests or 6, a.turns, a.slots,
+                                    a.seed, a.page_size, out=a.out)
         sys.exit(0 if ok else 1)
     if a.prefix_trace:
         ok = run_prefix_trace(a.arch or "nemotron-4-340b",

@@ -305,20 +305,23 @@ def page_pspecs(caches, layout, mesh: Mesh, n_pages: int) -> list:
 
     `caches` is the slab template (`T.make_caches(cfg, n_slots, cache_len)`
     shapes), `layout` a `serve.paging.PageLayout` over it. Paged leaves
-    shard their leading PAGE axis exactly like the slab shards its slot
-    axis (`batch_pspec(mesh, n_pages)` — replicated fallback when the page
+    shard their PAGE axis — which sits exactly where the slab's slot axis
+    sat (PageLayout.store_shapes) — the way the slab shards its slot axis
+    (`batch_pspec(mesh, n_pages)` — replicated fallback when the page
     count doesn't divide the dp axes, so the donated paged decode step
     always has a legal placement); the rest of a paged leaf's spec is the
-    slab rule (`cache_pspecs(slab=True)`) with the slot and sequence
-    entries removed — kv-heads stay on 'model', the page-interior position
-    axis is never sharded (every page is written at dynamic offsets).
-    Resident leaves keep their slab spec unchanged. Returns a flat list
-    aligned with the store's leaf order.
+    slab rule (`cache_pspecs(slab=True)`) with the sequence entry cleared
+    — kv-heads stay on 'model', the page-interior position axis is never
+    sharded (every page is written at dynamic offsets, and the Pallas
+    kernel's index map addresses whole pages). Resident leaves keep their
+    slab spec unchanged. Returns a flat list aligned with the store's leaf
+    order.
     """
     slab_specs = jax.tree_util.tree_leaves(
         cache_pspecs(caches, mesh, layout.n_slots, slab=True),
         is_leaf=lambda x: isinstance(x, P))
-    page_entry = tuple(batch_pspec(mesh, n_pages)) or (None,)
+    page_entry = batch_pspec(mesh, n_pages)
+    page_ent = tuple(page_entry)[0] if len(tuple(page_entry)) else None
     out = []
     store_shapes = layout.store_shapes(n_pages)
     for spec, slab_shape, store_shape, ls in zip(
@@ -327,10 +330,9 @@ def page_pspecs(caches, layout, mesh: Mesh, n_pages: int) -> list:
             out.append(spec)
             continue
         ent = list(spec) + [None] * (len(slab_shape) - len(spec))
-        del ent[ls.batch_axis]
+        ent[ls.batch_axis] = page_ent      # page axis replaces slot axis
         ent[-2] = None                     # page interior: never sharded
-        out.append(_sanitize_spec(P(*(page_entry + tuple(ent))),
-                                  store_shape, mesh))
+        out.append(_sanitize_spec(P(*ent), store_shape, mesh))
     return out
 
 

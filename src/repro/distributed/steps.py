@@ -166,7 +166,8 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
 
 
 def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
-                     n_steps: Optional[int] = None):
+                     n_steps: Optional[int] = None,
+                     pages_meta: Optional[Dict[str, int]] = None):
     """Compiled slab decode. Two forms:
 
     n_steps=None (legacy, lock-step launch path):
@@ -190,10 +191,23 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
     steps. Slots that finish mid-block (EOS or length) freeze their token /
     index / rng-free state; the host catches up from the synced block and
     frees them retroactively.
+
+    pages_meta={'size': page_size, 'len': cache_len} (n_steps form only)
+    builds the NATIVE PAGED variant: the returned fn takes an extra
+    `page_table` operand after `caches` —
+        decode(params, caches, page_table, state)
+            -> (tok_block, caches, page_table, state)
+    — and every forward threads pages={'table', 'size', 'len'} so the
+    attention layers read/write the page-major cache leaves through the
+    table (models.attention). The table is loop-invariant inside the
+    dispatch (admission updates it between dispatches) and passes through
+    so it stays aliased to its donated buffer.
     """
     cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
 
     if n_steps is None:
+        if pages_meta is not None:
+            raise ValueError("pages_meta requires the n_steps form")
         def decode(params, caches, token, index):
             logits, _, caches = T.forward(
                 params, token, cfg, backend=backend, caches=caches,
@@ -204,12 +218,15 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
     if n_steps < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
 
-    def decode(params, caches, state):
+    def decode(params, caches, state, page_table=None):
+        pages = None if page_table is None else dict(pages_meta,
+                                                     table=page_table)
+
         def micro(carry, _):
             caches, st = carry
             logits, _, caches = T.forward(
                 params, st["tokens"][:, None], cfg, backend=backend,
-                caches=caches, index=st["index"])
+                caches=caches, index=st["index"], pages=pages)
             key, sub = jax.random.split(st["key"])
             tok = T.sample_tokens(logits[:, -1], sub, st["temperature"])
             active = st["active"]
@@ -233,6 +250,12 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
             micro, (caches, state), None, length=n_steps)
         return tok_block, caches, state
 
+    if pages_meta is not None:
+        def paged_decode(params, caches, page_table, state):
+            tok_block, caches, state = decode(params, caches, state,
+                                              page_table)
+            return tok_block, caches, page_table, state
+        return paged_decode
     return decode
 
 
@@ -300,7 +323,7 @@ def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
 # ---------------------------------------------------------------------------
 
 def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
-                           n_steps: int, layout):
+                           n_steps: int, layout, native: bool = True):
     """Paged form of the device-resident loop (serve.paging):
 
         decode(params, store, page_table, state)
@@ -308,14 +331,39 @@ def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
 
     `store` is the page-major KV store (flat leaf list), `page_table` the
     (n_slots, pages_per_slot) int32 table — BOTH donated device state, like
-    the slab and the loop state today. Inside the one dispatch: gather each
-    slot's pages into exactly the slab layout (`layout.gather` slices the
-    view to cache_len, so the inner step compiles the very same program the
-    unpaged slab runs — that is what makes paged greedy decode
-    token-identical), run the unchanged K-micro-step fused decode, scatter
-    the touched pages back. The table passes through unchanged (admission
-    and slot release update it between dispatches); returning it keeps it
-    aliased to its donated buffer so it stays device-resident."""
+    the slab and the loop state today.
+
+    native=True (default): NO gather/scatter. The store leaves pass
+    straight into the forward as the cache tree (`layout.as_tree` — the
+    page axis sits where the slot axis sat, so the treedef is unchanged)
+    and the attention layers read/write them THROUGH the table
+    (models.attention paged branches / kernels.ops.paged_attention): new-
+    token writes are in-place page-indexed scatters that preserve the
+    donated store's buffer aliasing, and no per-dispatch slab view ever
+    materializes.
+
+    native=False keeps the legacy wrap for A/B tests: gather each slot's
+    pages into exactly the slab layout, run the unchanged fused decode,
+    scatter the touched pages back (traces serve.paging.GATHER_EVENTS).
+    Both forms are greedy token-identical to the slab — the native ref
+    read is the same sliced-view attention program the gather produced.
+
+    The table passes through unchanged (admission and slot release update
+    it between dispatches); returning it keeps it aliased to its donated
+    buffer so it stays device-resident."""
+    if native:
+        meta = {"size": layout.page_size, "len": layout.cache_len}
+        inner = make_decode_step(cfg, backend, n_steps=n_steps,
+                                 pages_meta=meta)
+
+        def decode(params, store, page_table, state):
+            caches = layout.as_tree(store)
+            tok_block, caches, page_table, state = inner(
+                params, caches, page_table, state)
+            return tok_block, layout.from_tree(caches), page_table, state
+
+        return decode
+
     inner = make_decode_step(cfg, backend, n_steps=n_steps)
 
     def decode(params, store, page_table, state):
@@ -330,20 +378,44 @@ def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
 def make_paged_speculative_decode_step(cfg: T.ModelConfig,
                                        draft_cfg: T.ModelConfig,
                                        backend: str = "ref", *,
-                                       n_draft: int, layout):
+                                       n_draft: int, layout,
+                                       native: bool = True):
     """Paged form of the fused propose-then-verify cycle:
 
         spec_decode(params, draft_params, store, page_table, draft_caches,
                     state) -> (commit, n_commit, n_accept, store,
                                page_table, draft_caches, state)
 
-    Only the TARGET slab is paged (it is the memory that scales with
+    Only the TARGET store is paged (it is the memory that scales with
     prompts; the draft slab is small by construction and keeps the plain
-    slab layout + slot clocks). Rollback semantics survive paging for free:
-    a rejected suffix is a per-slot index rewind that never frees a page,
-    and the speculative write headroom lands in the slot's PRIVATE tail
-    pages (prefix sharing only ever publishes full prompt pages), so a
-    rolled-back write can never have touched a shared page."""
+    slab layout + slot clocks — its forwards never see `pages`). Rollback
+    semantics survive paging for free: a rejected suffix is a per-slot
+    index rewind that never frees a page, and the speculative write
+    headroom lands in the slot's PRIVATE tail pages (prefix sharing only
+    ever publishes pages with complete final KV), so a rolled-back write
+    can never have touched a shared page.
+
+    native=True: the verify forwards consume the page table directly (same
+    contract as make_paged_decode_step) — the K+1-token block write is one
+    page-indexed scatter per leaf. native=False keeps the legacy
+    gather/scatter wrap for A/B tests."""
+    if native:
+        meta = {"size": layout.page_size, "len": layout.cache_len}
+        inner = make_speculative_decode_step(cfg, draft_cfg, backend,
+                                             n_draft=n_draft,
+                                             pages_meta=meta)
+
+        def spec_decode(params, draft_params, store, page_table,
+                        draft_caches, state):
+            caches = layout.as_tree(store)
+            commit, m, acc, caches, page_table, draft_caches, state = inner(
+                params, draft_params, caches, page_table, draft_caches,
+                state)
+            return (commit, m, acc, layout.from_tree(caches), page_table,
+                    draft_caches, state)
+
+        return spec_decode
+
     inner = make_speculative_decode_step(cfg, draft_cfg, backend,
                                          n_draft=n_draft)
 
@@ -457,12 +529,18 @@ def _restore(caches, paths, init_leaves, step_stacks, g):
 
 def make_speculative_decode_step(cfg: T.ModelConfig,
                                  draft_cfg: T.ModelConfig,
-                                 backend: str = "ref", *, n_draft: int):
+                                 backend: str = "ref", *, n_draft: int,
+                                 pages_meta: Optional[Dict[str, int]] = None):
     """Fused propose-then-verify decode (serve.speculative):
 
         spec_decode(params, draft_params, caches, draft_caches, state)
             -> (commit (B, K+1), n_commit (B,), n_accept (B,),
                 caches, draft_caches, state)
+
+    pages_meta={'size', 'len'} builds the NATIVE PAGED variant (an extra
+    `page_table` operand after `caches`, threaded into the TARGET forwards
+    as the `pages` operand and passed through the return — see
+    make_decode_step; the draft keeps its slab).
 
     ONE dispatch per cycle, everything on device:
 
@@ -505,7 +583,10 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
     k = n_draft
     recurrent = bool(cfg.is_ssm or cfg.attn_period)
 
-    def spec_decode(params, draft_params, caches, draft_caches, state):
+    def spec_decode(params, draft_params, caches, draft_caches, state,
+                    page_table=None):
+        pages = None if page_table is None else dict(pages_meta,
+                                                     table=page_table)
         b = state["tokens"].shape[0]
         active = state["active"]
         idx0 = state["index"]
@@ -540,7 +621,7 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
         if not recurrent:
             logits, _, caches = T.forward(
                 params, tok_in, cfg, backend=backend, caches=caches,
-                index=idx0)
+                index=idx0, pages=pages)
             z = logits                                  # (B, K+1, vocab)
             t_snaps = []
         else:
@@ -549,7 +630,7 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
                 idx_j = jnp.where(active, idx0 + j, idx0)
                 lg, _, vcaches = T.forward(
                     params, tok_j[:, None], cfg, backend=backend,
-                    caches=vcaches, index=idx_j)
+                    caches=vcaches, index=idx_j, pages=pages)
                 return vcaches, (lg[:, -1], _snapshot(vcaches, t_paths))
 
             caches, (zs, t_snaps) = jax.lax.scan(
@@ -642,4 +723,13 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
 
         return commit, m, n_accept, caches, draft_caches, new_state
 
+    if pages_meta is not None:
+        def paged_spec_decode(params, draft_params, caches, page_table,
+                              draft_caches, state):
+            commit, m, acc, caches, draft_caches, state = spec_decode(
+                params, draft_params, caches, draft_caches, state,
+                page_table)
+            return (commit, m, acc, caches, page_table, draft_caches,
+                    state)
+        return paged_spec_decode
     return spec_decode

@@ -34,7 +34,13 @@ from repro.kernels.quant_matmul import (
     bsr_quant_matmul as _bsr_quant_pallas,
 )
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
-from repro.kernels.pallas_compat import SKINNY_M_EVENTS  # noqa: F401 (re-export)
+from repro.kernels.flash_attention import (
+    paged_flash_attention as _paged_fa_pallas,
+)
+from repro.kernels.pallas_compat import (  # noqa: F401 (re-export)
+    PAGED_ATTN_EVENTS,
+    SKINNY_M_EVENTS,
+)
 
 VALID_BACKENDS = ("auto", "ref", "pallas", "interpret")
 
@@ -148,3 +154,24 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
         causal=causal, window=window, softcap=softcap, q_offset=q_offset,
         scale=scale, bq=bq, bkv=bkv, interpret=(bk == "interpret"))
     return out.reshape(b, h, sq, d)
+
+
+def paged_attention(q, k_pages, v_pages, table, last, *, window=None,
+                    softcap=None, scale=None, backend: str = "auto"):
+    """Page-table-native decode attention.
+
+    q: (b, h, sq, d); k_pages/v_pages: (n_pages, h_kv, P, d) page-major
+    store leaves; table: (b, pp) int32 page ids; last: (b,) int32 absolute
+    position of each slot's final query token. Returns (b, h, sq, d).
+    Causal by construction. Records a PAGED_ATTN_EVENTS entry at trace time
+    so serving tests/benchmarks can assert the gather-free path dispatched.
+    """
+    bk = resolve_backend(backend)
+    PAGED_ATTN_EVENTS.append((bk, q.shape[0], table.shape[1]))
+    if bk == "ref":
+        return _ref.paged_attention_ref(
+            q, k_pages, v_pages, table, last,
+            window=window, softcap=softcap, scale=scale)
+    return _paged_fa_pallas(
+        q, k_pages, v_pages, table, last, window=window, softcap=softcap,
+        scale=scale, interpret=(bk == "interpret"))

@@ -45,6 +45,13 @@ _SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
 # time, like kratos.apply_packed instrumentation. Callers may clear it.
 SKINNY_M_EVENTS: List[Tuple[str, int, int]] = []
 
+# (backend, n_slots, pages_per_slot) appended whenever the paged-attention
+# decode path traces — same trace-time idiom as SKINNY_M_EVENTS. Benchmarks
+# and tests assert page-table-native decode really dispatched (and that the
+# gather/scatter wrap did NOT) by inspecting this alongside
+# serve.paging.GATHER_EVENTS. Callers may clear it.
+PAGED_ATTN_EVENTS: List[Tuple[str, int, int]] = []
+
 
 def sublane(dtype) -> int:
     """Minimum sublane multiple for `dtype` (second-to-minor tile extent)."""

@@ -145,3 +145,61 @@ def attention_ref(
     s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def paged_view(pages: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Contiguous per-slot view of a page-major K/V leaf.
+
+    pages: (n_pages, h_kv, P, d); table: (b, pp) int32 page ids. Returns
+    (b, h_kv, pp * P, d) — slot b's logical KV stream in position order.
+    Table entries pointing at the sink page (page 0) yield garbage rows that
+    the caller's position mask must exclude.
+    """
+    g = pages[table]                          # (b, pp, h_kv, P, d)
+    g = jnp.moveaxis(g, 1, -3)                # (b, h_kv, pp, P, d)
+    b, h_kv = g.shape[0], g.shape[1]
+    return g.reshape(b, h_kv, g.shape[2] * g.shape[3], g.shape[4])
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # (b, h, sq, d)
+    k_pages: jnp.ndarray,      # (n_pages, h_kv, P, d)
+    v_pages: jnp.ndarray,      # (n_pages, h_kv, P, d)
+    table: jnp.ndarray,        # (b, pp) int32 page ids
+    last: jnp.ndarray,         # (b,) int32 absolute position of q[:, -1]
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Oracle for the page-table-native decode attention kernel.
+
+    Causal decode attention where K/V stream straight out of the page-major
+    store via `table` and per-slot validity comes from `last` (the vector
+    analogue of attention_ref's scalar q_offset): position j is live for
+    query row i iff j <= last[b] - (sq - 1) + i. Sink-page rows land at
+    positions past `last` and are masked out by the same test.
+    """
+    b, h, sq, d = q.shape
+    h_kv = k_pages.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    k = paged_view(k_pages, table)
+    v = paged_view(v_pages, table)
+    if h != h_kv:
+        g = h // h_kv
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    skv = k.shape[2]
+    qpos = (last[:, None] - (sq - 1) + jnp.arange(sq)[None, :])  # (b, sq)
+    kpos = jnp.arange(skv)
+    mask = kpos[None, None, :] <= qpos[:, :, None]               # (b, sq, skv)
+    if window is not None:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

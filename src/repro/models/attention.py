@@ -16,13 +16,19 @@ All projections are Kratos-able. Caches:
                   O(S * (r + dr)) instead of O(S * 2 * H * dh)
 
 Paged serving (serve.paging): the block-paged KV pool stores full-window and
-MLA caches page-major behind per-slot page tables, and its compiled steps
-GATHER each slot's pages back into exactly these layouts before calling in
-here — so every read below already went through page-table indirection, and
-the per-slot positional validity masks this module computes are what keep
-unallocated table tail entries (the shared garbage sink page) inert, the
-same way they keep the slab's unwritten tail inert. Nothing in this module
-knows about pages; the layout contract above IS the paging contract.
+MLA caches page-major behind per-slot page tables. Decode consumes the
+table NATIVELY here: when the forward threads a `pages` operand
+({'table': (B, pp) int32, 'size': page_size, 'len': cache_len}), the decode
+branches below write new K/V with in-place page-indexed scatters
+(position p lands in page table[b, p // P] at offset p % P) and read
+through the table — the Pallas kernel path (kernels.ops.paged_attention)
+streams pages via its BlockSpec index map; the XLA/ref path takes a sliced
+contiguous view that is bit-identical to the slab rows on every valid
+position, so greedy decode is token-identical to the slab. The per-slot
+positional validity masks are what keep unallocated table tail entries
+(the shared garbage sink page) inert, the same way they keep the slab's
+unwritten tail inert. Without `pages` the slab layout contract above holds
+unchanged (train / prefill / suffix-prefill slot views).
 """
 
 from __future__ import annotations
@@ -222,6 +228,39 @@ def _positions_for(index, s: int) -> jnp.ndarray:
     return index[:, None] + jnp.arange(s)[None, :]
 
 
+def _paged_leaf_view(leaf, table, cache_len: int):
+    """Contiguous (B, ..., cache_len, d) view of a page-major cache leaf.
+
+    leaf: (n_pages, ..., P, d); table: (B, pp) int32. The gathered view is
+    value-identical to the slab rows on every position the validity masks
+    admit (sink-page rows sit past the per-slot clocks), and slicing to
+    `cache_len` makes the downstream attention math compile to exactly the
+    slab program — the basis of paged/slab token-identity on the ref path.
+    """
+    g = leaf[table]                            # (B, pp, ..., P, d)
+    g = jnp.moveaxis(g, 1, -3)                 # (B, ..., pp, P, d)
+    g = g.reshape(*g.shape[:-3], g.shape[-3] * g.shape[-2], g.shape[-1])
+    return jax.lax.slice_in_dim(g, 0, cache_len, axis=-2)
+
+
+def _page_offsets(pages, index, b: int, s: int):
+    """(page, offset, last) int32 arrays for writing s tokens at `index`.
+
+    page/offset: (B, s) — position index[b] + j lands in page
+    table[b, pos // P] at row pos % P. Positions past the slot's allocated
+    footprint hit the table's sink-page tail (page 0): masked garbage, the
+    paged analogue of the slab's padded-tail writes. last: (B,) absolute
+    position of the final written token (the validity clock)."""
+    table = pages["table"]
+    psize = pages["size"]
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (b,))
+    pos = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    page = jnp.take_along_axis(table, pos // psize, axis=1)
+    return page, pos % psize, idx + (s - 1)
+
+
 def _split_heads(x, n, dh):
     b, s, _ = x.shape
     return x.reshape(b, s, n, dh).transpose(0, 2, 1, 3)
@@ -234,12 +273,17 @@ def _merge_heads(x):
 
 def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
               positions=None, cache=None, index=None,
-              kv_source=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+              kv_source=None, pages=None) -> Tuple[jnp.ndarray,
+                                                   Optional[Dict]]:
     """Full-sequence (train/prefill) or single-step (decode) GQA attention.
 
     cache: None (train) | dict with 'k','v' (and implicit layout by size).
     index: scalar int32 — tokens already in cache (decode), or None.
     kv_source: encoder output for cross-attention (whisper).
+    pages: page-table operand for NATIVE paged decode ({'table','size',
+    'len'} — see module docstring); the cache leaves are then page-major
+    (n_pages, KV, P, dh). Windowed layers with W < len stay resident slab
+    leaves and ignore it.
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -287,6 +331,12 @@ def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
         new_cache = _prefill_cache(cache, k, v, cfg)
         o = _sdpa(q, k, v, cfg, q_pos=positions, kv_pos=positions,
                   backend=backend, contiguous=True)
+    elif pages is not None and (cfg.window is None
+                                or cfg.window >= pages["len"]):
+        # NATIVE paged decode: cache leaves are page-major; write the new
+        # tokens straight into their pages, read through the table.
+        new_cache, o = _paged_gqa_decode(q, k, v, cfg, cache, index, pages,
+                                         positions, x.dtype, backend)
     else:
         # decode: write k/v at index (circular for windowed layers), attend
         new_cache, kv_pos, valid = _decode_cache_write(cache, k, v, cfg, index)
@@ -378,6 +428,43 @@ def _decode_cache_write(cache, k, v, cfg: AttnConfig, index):
     return {"k": ck, "v": cv}, kv_pos, valid
 
 
+def _paged_gqa_decode(q, k, v, cfg: AttnConfig, cache, index, pages,
+                      positions, out_dtype, backend):
+    """Page-table-native decode for full-window GQA layers.
+
+    cache['k']/cache['v']: (n_pages, KV, P, dh) page-major store leaves.
+    Writes the s new tokens with one in-place page-indexed scatter per leaf
+    (the donated store updates in place — no slab view ever materializes),
+    then attends: the Pallas/interpret path streams pages through
+    kernels.ops.paged_attention's index map; the ref path takes the sliced
+    contiguous view and runs the exact slab attention program (bit-identity
+    with the slab decode branch by construction)."""
+    b, s = q.shape[0], q.shape[2]
+    page, off, last = _page_offsets(pages, index, b, s)
+    k, v = jax.lax.optimization_barrier(
+        (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
+    # advanced indices (B,s) at axes 0/2 with a sliced head axis between
+    # them move to the front: the update operand is (B, s, KV, dh).
+    ck = cache["k"].at[page, :, off, :].set(k.transpose(0, 2, 1, 3))
+    cv = cache["v"].at[page, :, off, :].set(v.transpose(0, 2, 1, 3))
+    new_cache = {"k": ck, "v": cv}
+    if backend in ("pallas", "interpret") and q.shape[-1] == v.shape[-1]:
+        o = ops.paged_attention(
+            q, ck, cv, pages["table"], last, window=cfg.window,
+            softcap=cfg.softcap, scale=cfg.scale, backend=backend)
+        return new_cache, o.astype(q.dtype)
+    ops.PAGED_ATTN_EVENTS.append(("ref", b, pages["table"].shape[1]))
+    k_view = _paged_leaf_view(ck, pages["table"], pages["len"])
+    v_view = _paged_leaf_view(cv, pages["table"], pages["len"])
+    slots = jnp.arange(pages["len"])
+    valid = slots[None] <= last[:, None]
+    o = attention_positional(
+        q, k_view.astype(out_dtype), v_view.astype(out_dtype),
+        positions, slots, causal=cfg.causal, window=cfg.window,
+        softcap=cfg.softcap, extra_mask=valid, scale=cfg.scale)
+    return new_cache, o
+
+
 # ---------------------------------------------------------------------------
 # MLA (multi-head latent attention) — minicpm3, deepseek-v2
 # ---------------------------------------------------------------------------
@@ -425,7 +512,8 @@ def _mla_expand_kv(params, c_kv, cfg, spec, backend):
 
 def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
               positions=None, cache=None, index=None,
-              kv_source=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+              kv_source=None, pages=None) -> Tuple[jnp.ndarray,
+                                                   Optional[Dict]]:
     b, s, d = x.shape
     h = cfg.n_heads
     if positions is None:
@@ -442,7 +530,27 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
                           cfg.rope_theta)                      # (B,1,S,dr)
 
     new_cache = None
-    if cache is not None and index is not None:
+    if cache is not None and index is not None and pages is not None:
+        # NATIVE paged decode: append latents straight into their pages
+        # (in-place page-indexed scatter), read the sliced table view —
+        # value-identical to the slab rows, so the expand below compiles
+        # to the exact slab program. MLA stays on the XLA view path (the
+        # Pallas paged kernel is GQA-shaped: dk != dv and the latent
+        # expansion happens outside the kernel).
+        ops.PAGED_ATTN_EVENTS.append(("mla", b, pages["table"].shape[1]))
+        c_upd, r_upd = jax.lax.optimization_barrier(
+            (c_kv.astype(cache["c_kv"].dtype),
+             k_rope.astype(cache["k_rope"].dtype)))
+        page, off, last = _page_offsets(pages, index, b, c_upd.shape[1])
+        ck = cache["c_kv"].at[page, off, :].set(c_upd)
+        cr = cache["k_rope"].at[page, :, off, :].set(
+            r_upd.transpose(0, 2, 1, 3))
+        new_cache = {"c_kv": ck, "k_rope": cr}
+        c_all = _paged_leaf_view(ck, pages["table"], pages["len"])
+        kr_all = _paged_leaf_view(cr, pages["table"], pages["len"])
+        kv_pos = jnp.arange(pages["len"])
+        valid = kv_pos[None] <= last[:, None]
+    elif cache is not None and index is not None:
         # decode: append compressed latents, expand the whole cache (naive MLA)
         c_upd, r_upd = jax.lax.optimization_barrier(
             (c_kv.astype(cache["c_kv"].dtype),

@@ -273,8 +273,13 @@ def _layer_init(key, cfg: ModelConfig, i: int, cross: bool = False) -> Dict:
 
 def _layer_apply(p: Dict, x, cfg: ModelConfig, kind: Dict, *, backend="ref",
                  positions=None, cache=None, index=None, enc_out=None,
-                 cross_cache=None):
-    """One residual block. Returns (x, aux, new_cache, new_cross_cache)."""
+                 cross_cache=None, pages=None):
+    """One residual block. Returns (x, aux, new_cache, new_cross_cache).
+
+    pages: page-table operand for native paged decode — consumed by the
+    ATTENTION mixer only (mamba state is O(1) resident, cross caches are
+    written once at prefill; both keep the slab layout in the page store).
+    """
     aux = jnp.zeros((), jnp.float32)
     rs = jnp.asarray(cfg.residual_scale, x.dtype)
     # batch-pinning constraints are differentiable: the transpose constrains
@@ -287,7 +292,8 @@ def _layer_apply(p: Dict, x, cfg: ModelConfig, kind: Dict, *, backend="ref",
     if kind["mixer"] == "attn":
         h, new_cache = A.attn_apply(
             p["mixer"], h, attn_cfg_for(cfg, kind), spec=cfg.kratos,
-            backend=backend, positions=positions, cache=cache, index=index)
+            backend=backend, positions=positions, cache=cache, index=index,
+            pages=pages)
     else:
         h, new_cache = S.mamba_apply(
             p["mixer"], h, mamba_cfg_for(cfg), spec=cfg.kratos,
@@ -423,7 +429,7 @@ def encode(params, frames: jnp.ndarray, cfg: ModelConfig, *, backend="ref"):
 
 def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
             img_embeds=None, enc_out=None, caches=None, index=None,
-            last_only: bool = False,
+            last_only: bool = False, pages=None,
             ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
     """Decoder forward. tokens: (B, S_text). Returns (logits, aux, caches).
 
@@ -437,6 +443,11 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
     last_only: compute logits only for the final position (prefill) — the
     (B, S, vocab) logits tensor is by far the largest in a 32k prefill, and
     only the last column is consumed.
+    pages: native paged-decode operand ({'table': (B, pp) int32 page table,
+    'size': page_size, 'len': cache_len}); with it, `caches`' positional
+    attention leaves are PAGE-MAJOR store leaves (serve.paging
+    PageLayout.as_tree) that the attention layers read/write through the
+    table — no slab view is ever materialized. Requires `index` (decode).
     """
     x = L.embed(params["embed"], tokens, scale=cfg.emb_scale).astype(cfg.adtype())
     if img_embeds is not None:
@@ -465,7 +476,8 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
         mc = c.get("mixer") if c is not None else None
         x, aux, nm, ncr = _layer_apply(
             lp, x, cfg, kind, backend=backend, positions=positions,
-            cache=mc, index=index, enc_out=enc_out, cross_cache=cc)
+            cache=mc, index=index, enc_out=enc_out, cross_cache=cc,
+            pages=pages)
         aux_total += aux
         if caches is not None:
             entry = {"mixer": nm}
@@ -490,7 +502,8 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
                 lp, mc, cc = xs, None, None
             x, a, nm, ncr = _layer_apply(
                 lp, x, cfg, _kind, backend=backend, positions=positions,
-                cache=mc, index=index, enc_out=enc_out, cross_cache=cc)
+                cache=mc, index=index, enc_out=enc_out, cross_cache=cc,
+                pages=pages)
             out = None
             if caches is not None:
                 out = {"mixer": nm}

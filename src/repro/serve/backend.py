@@ -45,16 +45,24 @@ Paged KV + prefix reuse (EngineConfig.page_size, serve.paging): the pool
 becomes a `PagedCachePool` — fixed-size pages carved from one preallocated
 store, per-slot int32 page tables, refcounted sharing — and the decode /
 speculative dispatches become their paged twins
-(steps.make_paged_decode_step): gather the slots' pages into exactly the
-slab layout, run the UNCHANGED fused step, scatter back, with the store AND
-the page table donated device state. Admission grows a prefix path the
-engine drives: `prefix_match` (longest page-aligned cached prefix),
-`alloc_pages` (refcount-bump the shared pages + fresh private pages; LRU
-eviction of tree-only pages under pressure; `PoolExhausted` surfaces to the
-scheduler), `prefill_suffix` (only the unmatched suffix runs, through the
-decode-form block write), `prefix_insert` (publish the prompt's full pages
-into the radix tree). On the mesh the store's page axis shards exactly like
-the slab's slot axis (`sharding.page_pspecs`), with out_shardings pinned so
+(steps.make_paged_decode_step). In the NATIVE form (the default,
+EngineConfig.paged_native) the page table rides into the fused step as an
+operand and attention reads/writes the page-major store directly — no
+per-dispatch gather/scatter materialisation at all; the legacy
+gather-run-scatter wrap survives under paged_native=False as the measured
+baseline and the A/B oracle. Either way the store AND the page table are
+donated device state. Admission grows a prefix path the engine drives:
+`prefix_match` (longest page-aligned cached prefix, plus a flag for
+whether the hit crossed into a published CONVERSATION — generated tokens
+of a finished request), `alloc_pages` (refcount-bump the shared pages +
+fresh private pages; LRU eviction of tree-only pages under pressure;
+`PoolExhausted` surfaces to the scheduler), `prefill_suffix` (only the
+unmatched suffix runs, through the decode-form block write),
+`prefix_insert` (publish the prompt's full pages into the radix tree),
+`conversation_insert` (publish prompt + GENERATED pages at finish so the
+next turn of the same chat skips prefill over the whole prior
+conversation). On the mesh the store's page axis shards exactly like the
+slab's slot axis (`sharding.page_pspecs`), with out_shardings pinned so
 donation aliasing survives pjit. The draft slab of a speculating engine
 stays an unpaged CachePool (small by construction; its write headroom needs
 no sharing story).
@@ -236,9 +244,13 @@ class ExecutionBackend:
         return isinstance(self.pool, PagedCachePool)
 
     def prefix_match(self, prompt):
-        """(matched token count, shared page ids) — (0, []) without a
-        prefix-caching paged pool."""
-        return self.pool.prefix_match(prompt) if self.paged else (0, [])
+        """(matched token count, shared page ids, conversation hit) —
+        (0, [], False) without a prefix-caching paged pool. The third
+        element is True when the match runs through pages a finished
+        request PUBLISHED from its generated tokens (conversation_insert),
+        i.e. a multi-turn chat resuming its own history."""
+        return (self.pool.prefix_match(prompt) if self.paged
+                else (0, [], False))
 
     def alloc_slot_pages(self, slot: int, n_positions: int,
                          shared=()) -> None:
@@ -249,6 +261,21 @@ class ExecutionBackend:
 
     def prefix_insert(self, prompt, slot: int) -> int:
         return self.pool.prefix_insert(prompt, slot) if self.paged else 0
+
+    def conversation_insert(self, tokens, slot: int) -> int:
+        """Publish a finished request's full conversation (prompt +
+        generated tokens) into the radix tree from the slot's own pages;
+        a no-op without a prefix-caching paged pool."""
+        if self.paged and self.pool.index is not None:
+            return self.pool.conversation_insert(tokens, slot)
+        return 0
+
+    def gather_bytes_per_dispatch(self) -> int:
+        """Bytes a legacy gather+scatter decode dispatch would move
+        (0 on the slab pool, or when running the legacy paged path)."""
+        if self.paged and getattr(self.cfg, "paged_native", True):
+            return self.pool.gather_bytes_per_dispatch()
+        return 0
 
     def page_stats(self):
         """(pages_in_use, usable_pages) or None on the slab pool."""
@@ -320,9 +347,10 @@ class LocalBackend(ExecutionBackend):
         if cfg.device_loop:
             if cfg.page_size:
                 self._decode = jax.jit(
-                    ST.make_paged_decode_step(mcfg, cfg.backend,
-                                              n_steps=cfg.decode_chunk,
-                                              layout=self.pool.layout),
+                    ST.make_paged_decode_step(
+                        mcfg, cfg.backend, n_steps=cfg.decode_chunk,
+                        layout=self.pool.layout,
+                        native=getattr(cfg, "paged_native", True)),
                     donate_argnums=(1, 2, 3))  # store + table + state
                 if self.pool.index is not None:
                     self._suffix_prefill = jax.jit(
@@ -352,7 +380,8 @@ class LocalBackend(ExecutionBackend):
                 self._spec_decode = jax.jit(
                     ST.make_paged_speculative_decode_step(
                         mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
-                        layout=self.pool.layout),
+                        layout=self.pool.layout,
+                        native=getattr(cfg, "paged_native", True)),
                     donate_argnums=(2, 3, 4, 5))  # store+table+draft+state
             else:
                 self._spec_decode = jax.jit(
@@ -506,9 +535,10 @@ class ShardedBackend(ExecutionBackend):
         tok_sharding = self._tok_sharding
         if cfg.page_size:
             decode = jax.jit(
-                ST.make_paged_decode_step(mcfg, cfg.backend,
-                                          n_steps=cfg.decode_chunk,
-                                          layout=self.pool.layout),
+                ST.make_paged_decode_step(
+                    mcfg, cfg.backend, n_steps=cfg.decode_chunk,
+                    layout=self.pool.layout,
+                    native=getattr(cfg, "paged_native", True)),
                 donate_argnums=(1, 2, 3),
                 in_shardings=(self.param_shardings, self.pool.shardings,
                               self.pool.table_sharding,
@@ -535,7 +565,8 @@ class ShardedBackend(ExecutionBackend):
                 steps["spec"] = jax.jit(
                     ST.make_paged_speculative_decode_step(
                         mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
-                        layout=self.pool.layout),
+                        layout=self.pool.layout,
+                        native=getattr(cfg, "paged_native", True)),
                     donate_argnums=(2, 3, 4, 5),
                     in_shardings=(self.param_shardings,
                                   self.draft_shardings,

@@ -49,9 +49,16 @@ sharing a system prompt drop to zero. Page pressure surfaces as
 `PoolExhausted` at admission — `step()` requeues the admission at the
 front of the waiting deque (counted as `pool_waits`) instead of failing
 the step; LRU eviction of prefix pages nobody references runs first.
-Greedy decode stays token-identical to the slab: the paged dispatch
-gathers each slot's pages into exactly the slab layout and runs the
-unchanged fused step.
+Greedy decode stays token-identical to the slab: in the NATIVE paged form
+(PR 8, `EngineConfig.paged_native`, default) attention reads and writes
+the page-major store directly through the per-slot page table — no
+per-dispatch gather/scatter materialisation (`gather_bytes_avoided`
+counts what the legacy wrap would have moved) — and a finished request
+publishes its WHOLE conversation (prompt + generated tokens) into the
+prefix tree, so the next turn of the same chat skips prefill over the
+entire prior exchange (`conversation_prefix_hits`). `paged_native=False`
+keeps the PR-5 gather-run-scatter wrap as the measured baseline and the
+token-identity oracle.
 
 The `decode_chunk` knob is a latency/throughput trade: larger K amortizes
 dispatch + sync overhead over more tokens but coarsens the admission clock
@@ -174,6 +181,13 @@ class EngineConfig:
     page_size: Optional[int] = None
     n_pages: Optional[int] = None
     prefix_cache: bool = True
+    # paged_native=True (default) runs decode attention straight off the
+    # page-major store through the page table (kernels.ops.paged_attention
+    # / the page-table-native Pallas kernel) — no gather/scatter
+    # materialisation per dispatch. False keeps the PR-5
+    # gather-run-scatter wrap: the measured baseline and the
+    # token-identity oracle for the native path.
+    paged_native: bool = True
     # resilience (serve.qos): pool_wait_retries bounds the PoolExhausted
     # requeue loop per request — None keeps the legacy unbounded
     # requeue-at-front; N parks the retry behind an exponential step
@@ -213,7 +227,7 @@ class InferenceEngine:
             raise ValueError(f"page_size must be >= 1, got {cfg.page_size}")
         if cfg.page_size and not cfg.device_loop:
             raise ValueError("page_size requires device_loop=True (the "
-                             "paged gather/scatter lives inside the fused "
+                             "page-table decode lives inside the fused "
                              "dispatch; the host loop has no paged form)")
         if cfg.n_pages is not None and not cfg.page_size:
             raise ValueError("n_pages without page_size: the slab pool has "
@@ -245,6 +259,9 @@ class InferenceEngine:
         self.backend = backend or LocalBackend()
         self.backend.build(model, cfg)
         self.pool = self.backend.pool
+        # host-static per-dispatch ledger: bytes the legacy gather+scatter
+        # wrap would have moved (0 on the slab pool / legacy paged mode)
+        self._gather_bytes = self.backend.gather_bytes_per_dispatch()
         if cfg.qos is not None:
             from repro.serve.qos import QoSController
             self._qos = QoSController(cfg.qos, self.backend.n_tiers)
@@ -646,6 +663,17 @@ class InferenceEngine:
         if done:
             r.state = "done"
             self.trace.finish(r.id, r.slot, step, len(r.generated))
+            if self.backend.paged and not r.extras:
+                # publish the WHOLE conversation (prompt + generated) into
+                # the prefix tree BEFORE the slot's pages are freed — the
+                # next turn of this chat prefix-matches its entire prior
+                # exchange and skips that prefill. Only the finish path
+                # publishes: shed/cancel/evacuate never promise their
+                # pages' contents.
+                self.backend.conversation_insert(
+                    np.concatenate([r.prompt,
+                                    np.asarray(r.generated, np.int32)]),
+                    r.slot)
             self.pool.free(r.slot)
             self._slots[r.slot] = None
             self.metrics.on_finish(r.id, step)
@@ -660,9 +688,17 @@ class InferenceEngine:
         # paged admission: longest page-aligned cached prefix, then the
         # slot's page-table row (shared prefix pages refcount-bumped, fresh
         # private pages for suffix + generation + speculative headroom).
-        # PoolExhausted here propagates to step(), which requeues.
-        matched, shared = (0, ()) if r.extras else \
+        # `conv` flags a hit that ran through pages a finished request
+        # published from its GENERATED tokens — a chat resuming its own
+        # prior turn. PoolExhausted here propagates to step(), requeued.
+        matched, shared, conv = (0, (), False) if r.extras else \
             self.backend.prefix_match(r.prompt)
+        # Page allocation is sized from the TRUE request footprint — prompt
+        # + owed budget + speculative headroom — never from the pow2
+        # prefill bucket. Bucket padding is a compile-shape policy only:
+        # padded-tail writes land past the allocated footprint, where the
+        # page table reads the reserved sink page (masked garbage), so a
+        # bigger bucket must never cost real pages.
         try:
             self.backend.alloc_slot_pages(
                 slot, n_img + s0 + budget + self.cfg.speculate,
@@ -681,10 +717,12 @@ class InferenceEngine:
             # the same pow2 buckets as full prefills (real traffic produces
             # arbitrary suffix lengths — one compile per length would be a
             # compile-shape explosion). The logits column at the TRUE
-            # suffix end seeds sampling; the padded tail's writes land in
-            # the slot's private pages past the shared region and stay
-            # masked until decode overwrites them. `batch` still carries
-            # the full padded prompt for a speculating backend's draft.
+            # suffix end seeds sampling; the padded tail's writes land past
+            # the shared region — in the slot's private pages where the
+            # footprint still covers them, in the reserved sink page where
+            # it doesn't — masked garbage either way until decode
+            # overwrites the real positions. `batch` still carries the
+            # full padded prompt for a speculating backend's draft.
             s_sfx = s0 - matched
             sp_sfx = self._suffix_len(s_sfx, n_img + matched)
             sfx = np.zeros((1, sp_sfx), np.int32)
@@ -703,6 +741,9 @@ class InferenceEngine:
             self.backend.prefix_insert(r.prompt, slot)
         if self.backend.paged:
             self.metrics.on_prefix(matched, s0)
+            if conv and matched:
+                self.metrics.on_conversation_hit(matched)
+                self.trace.conversation_hit(r.id, matched)
         r.prefix_matched = matched
         r.state, r.slot = "running", slot
         r.index = n_img + s0
@@ -742,6 +783,9 @@ class InferenceEngine:
         self.trace.dispatch_begin()
         block = self.backend.decode_block()
         self.trace.decode_dispatch(k, n_active, self.cfg.n_slots)
+        if self._gather_bytes:
+            self.metrics.on_gather_avoided(self._gather_bytes)
+            self.trace.gather_avoided(self._gather_bytes)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
         # fault detection at the host/device boundary: a healthy fused step
@@ -793,6 +837,9 @@ class InferenceEngine:
         self.trace.dispatch_begin()
         block, n_commit, n_accept = self.backend.spec_decode_block()
         self.trace.spec_dispatch(k, n_active, self.cfg.n_slots)
+        if self._gather_bytes:
+            self.metrics.on_gather_avoided(self._gather_bytes)
+            self.trace.gather_avoided(self._gather_bytes)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
         # fault detection (see _decode_block): validate every live slot's

@@ -85,6 +85,12 @@ class ServeMetrics:
         self.pool_waits = 0                   # admissions requeued on pages
         self.page_samples: List[int] = []     # pages_in_use per dispatch
         self.page_capacity = 0                # usable pages in the pool
+        # page-table-native decode (PR 8): bytes the legacy gather+scatter
+        # wrap would have moved per dispatch (zero when running the legacy
+        # paged path or the slab), and whole-conversation prefix reuse
+        self.gather_bytes_avoided = 0         # summed across dispatches
+        self.conversation_prefix_hits = 0     # admissions resuming a chat
+        self.conversation_tokens_reused = 0   # ... tokens matched there
         # resilience (serve.qos / chaos / failover)
         self.tier_demotions = 0               # engine moved to a cheaper tier
         self.tier_promotions = 0              # ... back toward full quality
@@ -166,6 +172,19 @@ class ServeMetrics:
         self.prefix_hits += int(matched > 0)
         self.prefill_tokens_skipped += matched
         self.prefill_tokens_computed += n_prompt - matched
+
+    def on_gather_avoided(self, n_bytes: int) -> None:
+        """One page-table-native decode dispatch: `n_bytes` is what the
+        legacy gather+scatter wrap would have materialised (2x the slots'
+        slab view — gather in, scatter back) and the native path did not."""
+        self.gather_bytes_avoided += n_bytes
+
+    def on_conversation_hit(self, matched: int) -> None:
+        """A paged admission whose prefix match ran through pages a
+        finished request PUBLISHED from its generated tokens — a chat
+        resuming its own prior turn; `matched` tokens skipped prefill."""
+        self.conversation_prefix_hits += 1
+        self.conversation_tokens_reused += matched
 
     def on_pool_wait(self) -> None:
         """An admission bounced off page pressure (PoolExhausted after LRU
@@ -257,6 +276,10 @@ class ServeMetrics:
             / max(1, self.prefill_tokens_skipped
                   + self.prefill_tokens_computed),
             "pool_waits": float(self.pool_waits),
+            "gather_bytes_avoided": float(self.gather_bytes_avoided),
+            "conversation_prefix_hits": float(self.conversation_prefix_hits),
+            "conversation_tokens_reused": float(
+                self.conversation_tokens_reused),
             "pages_in_use": (sum(self.page_samples)
                              / len(self.page_samples))
             if self.page_samples else 0.0,
@@ -350,6 +373,12 @@ class ServeMetrics:
             "prefill_tokens_skipped": float(skipped),
             "prefill_skip_fraction": skipped / max(1, skipped + computed),
             "pool_waits": float(sum(m.pool_waits for m in metrics_list)),
+            "gather_bytes_avoided": float(sum(
+                m.gather_bytes_avoided for m in metrics_list)),
+            "conversation_prefix_hits": float(sum(
+                m.conversation_prefix_hits for m in metrics_list)),
+            "conversation_tokens_reused": float(sum(
+                m.conversation_tokens_reused for m in metrics_list)),
             "pages_in_use": page_num / page_den if page_den else 0.0,
             "page_occupancy": page_num / page_cap if page_cap else 0.0,
             # resilience counters sum exactly (failovers are counted on the
@@ -384,6 +413,12 @@ class ServeMetrics:
             spec += (f" | prefix hit {r['prefix_hit_rate']:.2f} "
                      f"({int(r['prefill_tokens_skipped'])} prefill toks "
                      f"skipped, pages {r['page_occupancy']:.2f} full)")
+            if self.conversation_prefix_hits:
+                spec += (f" | conv hits {self.conversation_prefix_hits} "
+                         f"({self.conversation_tokens_reused} toks reused)")
+            if self.gather_bytes_avoided:
+                spec += (f" | gather avoided "
+                         f"{self.gather_bytes_avoided / 1e6:.1f} MB")
         if self.shed or self.tier_demotions or self.failovers:
             spec += (f" | shed {self.shed} "
                      f"(deadline {self.deadline_missed}, "

@@ -7,19 +7,24 @@ already resident in another slot. This pool carves the SAME preallocated
 memory into fixed-size PAGES instead:
 
   * every cache leaf with a positional sequence axis is stored PAGE-MAJOR —
-    `(n_pages, ..., page_size, ...)` with the page axis leading (sharded
-    like the slab's slot axis: `page_pspecs` below);
+    the page axis sits exactly where the slab's slot axis sat (so the
+    layer-stacked 'blocks' leaves keep their leading scan axis and shard
+    page-over-data the way slots did: `page_pspecs`), and the sequence
+    axis shrinks to `page_size`;
   * each slot owns an int32 row of a `(n_slots, pages_per_slot)` PAGE TABLE
     mapping logical position `p` to physical page `table[slot, p // P]`;
   * page alloc/free is O(1) free-list bookkeeping with REFCOUNTS — a page
     shared by `k` slots (and/or retained by the prefix index) frees only
     when the last reference drops;
-  * the compiled steps GATHER each slot's pages into exactly the slab
-    layout the forward already consumes, run the unchanged decode/verify
-    math, and SCATTER the pages back — all inside one donated dispatch
-    (distributed.steps.make_paged_decode_step). Because the gathered view
-    is bit-identical to the slab rows on every position the per-slot
-    validity masks admit, greedy decode is token-identical to the slab.
+  * decode consumes the table NATIVELY: the attention layers read K/V
+    straight through the page table (kernels.ops.paged_attention — the
+    Pallas kernel's BlockSpec index map translates (slot, kv-block) ->
+    page id via scalar prefetch) and write new tokens with in-place
+    page-indexed scatters, so no per-dispatch slab materialization exists
+    (distributed.steps.make_paged_decode_step). The legacy gather/scatter
+    wrap survives behind `native=False` for A/B testing; `GATHER_EVENTS`
+    records every gather/scatter trace so tests can assert the hot path
+    stays gather-free.
 
 Leaf classification (PageLayout): a leaf is PAGED when its second-to-last
 axis is the `cache_len` positional sequence axis — full-window attention
@@ -43,10 +48,16 @@ remains to produce the first-sample logits); admission bumps the shared
 pages' refcounts (`alloc_pages`), prefills only the suffix through the
 existing s>1 decode-form block write (steps.make_suffix_prefill_step), and
 publishes the request's full-prompt pages into the radix tree
-(`prefix_insert`). Sharing needs no copy-on-write copy: only FULL prompt
-pages are ever published, so a sharer's first own write lands strictly
-past the shared region, and speculative write-headroom pages are private
-by the same argument. Under page pressure, allocation first evicts LRU
+(`prefix_insert`). At request FINISH the engine additionally publishes the
+whole conversation — prompt + generated tokens — via
+`conversation_insert`, so a multi-turn follow-up (new prompt = old
+conversation + new user text) skips prefill over everything said so far,
+not just the shared system prompt. Sharing needs no copy-on-write copy:
+only pages with COMPLETE, final KV are ever published (full prompt pages
+at admission; conversation pages up to the last token whose KV decode
+actually wrote), so a sharer's first own write lands strictly past the
+shared region, and speculative write-headroom pages are private by the
+same argument. Under page pressure, allocation first evicts LRU
 tree pages nobody else references; if that still doesn't cover the
 request, `PoolExhausted` surfaces to the scheduler (the engine requeues
 the admission) instead of crashing the step.
@@ -65,6 +76,14 @@ from repro.models import transformer as T
 from repro.serve.cache_pool import PoolExhausted, quiet_donation
 from repro.serve.prefix import PrefixIndex
 from repro.serve.trace import NULL_TRACER
+
+# (op, n_paged_leaves, slab_view_bytes) appended at TRACE time whenever a
+# full gather/scatter materializes the slab view — the paged analogue of
+# kernels.pallas_compat.SKINNY_M_EVENTS. Native paged decode must trace
+# ZERO of these; tests and serve_bench assert it. Callers may clear it.
+# (gather_one/scatter_one — admission-path slot installs — do not count:
+# they are off the decode hot path by design.)
+GATHER_EVENTS: List[Tuple[str, int, int]] = []
 
 
 def prefix_supported(cfg: T.ModelConfig) -> bool:
@@ -90,12 +109,17 @@ class PageLayout:
     The store is the flat leaf list of `T.make_caches(cfg, n_slots,
     cache_len)` with every PAGED leaf re-laid out page-major: slab
     `(..., B at batch_axis, ..., cache_len, d)` becomes
-    `(n_pages, ..., page_size, d)` (batch axis removed — a page belongs to
-    whichever slots reference it). RESIDENT leaves keep the slab layout.
-    `gather` rebuilds the exact slab tree (view sliced to `cache_len`, so
-    the forward compiles to the very same program as the unpaged slab);
-    `scatter` splits the view back into pages (zero-padding the final
-    partial page, which is private by construction — see module docstring).
+    `(..., n_pages at batch_axis, ..., page_size, d)` — the page axis
+    REPLACES the slot axis in place (a page belongs to whichever slots
+    reference it), which keeps the layer-stacked 'blocks' leaves' leading
+    scan axis where `T.forward`'s lax.scan expects it, so the native paged
+    decode can hand store leaves straight to the attention layers.
+    RESIDENT leaves keep the slab layout. `gather` rebuilds the exact slab
+    tree (view sliced to `cache_len`, bit-identical to the slab rows on
+    every valid position); `scatter` splits the view back into pages
+    (zero-padding the final partial page, which is private by construction
+    — see module docstring). Both are now the LEGACY path (native decode
+    reads through the table instead) and trace into `GATHER_EVENTS`.
     """
 
     def __init__(self, cfg: T.ModelConfig, n_slots: int, cache_len: int,
@@ -129,37 +153,52 @@ class PageLayout:
                 out.append(tuple(shape))
                 continue
             shp = list(shape)
-            del shp[spec.batch_axis]
+            shp[spec.batch_axis] = n_pages   # page axis replaces slot axis
             shp[-2] = self.page_size
-            out.append((n_pages, *shp))
+            out.append(tuple(shp))
         return out
 
     def make_store(self, n_pages: int) -> List[jnp.ndarray]:
         return [jnp.zeros(s, d)
                 for s, d in zip(self.store_shapes(n_pages), self.dtypes)]
 
+    def slab_view_bytes(self) -> int:
+        """Bytes of the full slab view a gather materializes (paged leaves
+        only) — the per-direction cost the native path avoids."""
+        return sum(int(np.prod(shape)) * jnp.dtype(dt).itemsize
+                   for shape, dt, spec in zip(self.slab_shapes, self.dtypes,
+                                              self.specs) if spec.paged)
+
     # ------------------------------------------------------ gather/scatter
 
     def _gather_leaf(self, store_leaf, table, spec: _LeafSpec):
-        g = store_leaf[table]                          # (B, pp, ..., P, d)
-        g = jnp.moveaxis(g, 1, -3)                     # (B, ..., pp, P, d)
+        bax = spec.batch_axis
+        idx = (slice(None),) * bax + (table,)
+        g = store_leaf[idx]                       # (..., B, pp, ..., P, d)
+        g = jnp.moveaxis(g, bax + 1, -3)          # (..., B, ..., pp, P, d)
         g = g.reshape(*g.shape[:-3], g.shape[-3] * g.shape[-2], g.shape[-1])
-        g = jax.lax.slice_in_dim(g, 0, self.cache_len, axis=-2)
-        return jnp.moveaxis(g, 0, spec.batch_axis)
+        return jax.lax.slice_in_dim(g, 0, self.cache_len, axis=-2)
 
     def _scatter_leaf(self, store_leaf, table, slab_leaf, spec: _LeafSpec):
-        x = jnp.moveaxis(slab_leaf, spec.batch_axis, 0)
+        bax = spec.batch_axis
+        x = slab_leaf
         pad = self.pp * self.page_size - self.cache_len
         if pad:   # final partial page: private by construction (docstring)
             x = jnp.concatenate(
                 [x, jnp.zeros((*x.shape[:-2], pad, x.shape[-1]), x.dtype)],
                 axis=-2)
         x = x.reshape(*x.shape[:-2], self.pp, self.page_size, x.shape[-1])
-        x = jnp.moveaxis(x, -3, 1)                     # (B, pp, ..., P, d)
-        return store_leaf.at[table].set(x.astype(store_leaf.dtype))
+        x = jnp.moveaxis(x, -3, bax + 1)          # (..., B, pp, ..., P, d)
+        idx = (slice(None),) * bax + (table,)
+        return store_leaf.at[idx].set(x.astype(store_leaf.dtype))
 
     def gather(self, store: List[jnp.ndarray], page_table) -> Dict:
-        """Page store + (n_slots, pp) table -> the full slab cache tree."""
+        """Page store + (n_slots, pp) table -> the full slab cache tree.
+
+        LEGACY path (steps' native=False A/B form): traces a GATHER_EVENTS
+        entry so hot-path tests can prove native decode never calls it."""
+        GATHER_EVENTS.append(("gather", sum(s.paged for s in self.specs),
+                              self.slab_view_bytes()))
         out = [leaf if not spec.paged
                else self._gather_leaf(leaf, page_table, spec)
                for leaf, spec in zip(store, self.specs)]
@@ -169,11 +208,29 @@ class PageLayout:
         """Slab cache tree -> page store (resident leaves adopt the
         forward's functional update; paged leaves scatter into their
         pages — shared pages receive back the identical values they
-        contributed, private pages the new writes)."""
+        contributed, private pages the new writes). LEGACY path; traces
+        a GATHER_EVENTS entry like `gather`."""
+        GATHER_EVENTS.append(("scatter", sum(s.paged for s in self.specs),
+                              self.slab_view_bytes()))
         leaves = jax.tree_util.tree_leaves(caches)
         return [leaf if not spec.paged
                 else self._scatter_leaf(sl, page_table, leaf, spec)
                 for sl, leaf, spec in zip(store, leaves, self.specs)]
+
+    # ----------------------------------------------------- native (no copy)
+
+    def as_tree(self, store: List[jnp.ndarray]) -> Dict:
+        """Zero-cost cache-tree view of the page store for the NATIVE paged
+        forward: same treedef as the slab tree (the page axis sits exactly
+        where the slot axis sat), paged leaves ARE the store leaves. The
+        attention layers detect the paged leaves via the `pages` operand
+        and read/write them through the table."""
+        return jax.tree_util.tree_unflatten(self.treedef, list(store))
+
+    def from_tree(self, caches: Dict) -> List[jnp.ndarray]:
+        """Inverse of `as_tree` (flat store leaf list, functional updates
+        from the forward included)."""
+        return list(jax.tree_util.tree_leaves(caches))
 
     def gather_one(self, store, table_row, slot) -> Dict:
         """Batch-1 view of one slot (suffix prefill / slot install)."""
@@ -390,15 +447,19 @@ class PagedCachePool:
 
     # ------------------------------------------------------------- prefix
 
-    def prefix_match(self, tokens) -> Tuple[int, List[int]]:
-        """(matched token count, shared page ids) for the longest cached
-        page-aligned prefix — capped at len(tokens) - 1 so the suffix
-        prefill always has at least one token to produce logits from."""
+    def prefix_match(self, tokens) -> Tuple[int, List[int], bool]:
+        """(matched token count, shared page ids, conversation hit) for the
+        longest cached page-aligned prefix — capped at len(tokens) - 1 so
+        the suffix prefill always has at least one token to produce logits
+        from. The third element is True when the match reached pages
+        published at a request FINISH (whole-conversation reuse)."""
         if self.index is None:
-            return 0, []
-        pages = self.index.match(tokens)
-        pages = pages[:max(0, (len(tokens) - 1) // self.page_size)]
-        return len(pages) * self.page_size, pages
+            return 0, [], False
+        pages, conversation = self.index.match(tokens)
+        cap = max(0, (len(tokens) - 1) // self.page_size)
+        pages = pages[:cap]
+        return len(pages) * self.page_size, pages, conversation and \
+            bool(pages)
 
     def prefix_insert(self, tokens, slot: int) -> int:
         """Publish the slot's FULL prompt pages (never the partial tail —
@@ -408,6 +469,22 @@ class PagedCachePool:
         n_full = len(tokens) // self.page_size
         return self.index.insert(tokens, self._slot_pages[slot][:n_full],
                                  retain=self._retain)
+
+    def conversation_insert(self, tokens, slot: int) -> int:
+        """Publish a FINISHED request's whole conversation (prompt +
+        generated tokens) so a follow-up turn skips prefill over all of it.
+
+        Only pages with complete KV coverage publish: decode never writes
+        KV for the final emitted token (it is sampled, not fed back), so
+        valid KV ends at len(tokens) - 2 and the publishable page count is
+        (len(tokens) - 1) // page_size. Rolled-back speculative writes and
+        post-finish garbage all land at positions >= len(tokens) - 1 —
+        strictly past every published page."""
+        if self.index is None:
+            return 0
+        n_full = max(0, (len(tokens) - 1) // self.page_size)
+        return self.index.insert(tokens, self._slot_pages[slot][:n_full],
+                                 retain=self._retain, generated=True)
 
     # ------------------------------------------------------------ install
 
@@ -420,6 +497,14 @@ class PagedCachePool:
                                      jnp.asarray(slot, jnp.int32))
 
     # ------------------------------------------------------ introspection
+
+    def gather_bytes_per_dispatch(self) -> int:
+        """Bytes a legacy gather+scatter dispatch would have materialized —
+        what the native page-table-reading decode avoids, per dispatch.
+        Static in the layout (host-computed, no device sync)."""
+        if not self.layout.has_paged:
+            return 0
+        return 2 * self.layout.slab_view_bytes()
 
     def bytes(self) -> int:
         return sum(l.size * l.dtype.itemsize for l in self.store) \

@@ -35,17 +35,25 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class _Node:
-    """One full page of tokens: key (token tuple) -> physical page id."""
+    """One full page of tokens: key (token tuple) -> physical page id.
 
-    __slots__ = ("key", "page", "children", "parent", "last_used")
+    `generated` marks nodes published at request FINISH (whole-conversation
+    reuse: the page covers tokens the model generated, not just prompt
+    text) — admission counts a match that touches one as a conversation
+    hit, distinct from plain prompt-prefix sharing."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_used",
+                 "generated")
 
     def __init__(self, key: Tuple[int, ...], page: int,
-                 parent: Optional["_Node"], clock: int):
+                 parent: Optional["_Node"], clock: int,
+                 generated: bool = False):
         self.key = key
         self.page = page
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.parent = parent
         self.last_used = clock
+        self.generated = generated
 
 
 class PrefixIndex:
@@ -67,37 +75,45 @@ class PrefixIndex:
         for i in range(0, (len(tokens) // p) * p, p):
             yield tuple(int(t) for t in tokens[i:i + p])
 
-    def match(self, tokens: Sequence[int]) -> List[int]:
-        """Physical pages of the longest page-aligned cached prefix.
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], bool]:
+        """(physical pages of the longest page-aligned cached prefix,
+        whether any matched node was published at request finish — a
+        CONVERSATION hit rather than a prompt-prefix hit).
 
         Touches every node on the matched path (an LRU hit on a deep prefix
         refreshes its ancestors too — a prefix of a hot prompt is at least
         as hot as the prompt)."""
         self.clock += 1
-        children, pages = self.children, []
+        children, pages, conversation = self.children, [], False
         for key in self._chunks(tokens):
             node = children.get(key)
             if node is None:
                 break
             node.last_used = self.clock
             pages.append(node.page)
+            conversation |= node.generated
             children = node.children
-        return pages
+        return pages, conversation
 
     def insert(self, tokens: Sequence[int], pages: Sequence[int],
-               retain: Callable[[int], None]) -> int:
+               retain: Callable[[int], None], *,
+               generated: bool = False) -> int:
         """Publish `pages` (the physical pages holding the leading full
         token pages of `tokens`) into the tree; returns how many were NEWLY
         retained. Chunks already present keep their existing page (the
         canonical copy — the caller's duplicate simply frees at slot
         release); `retain(page)` is called once per new node so the pool's
-        refcount mirrors tree membership exactly."""
+        refcount mirrors tree membership exactly. `generated` tags the NEW
+        nodes as conversation pages (request-finish publishes); an existing
+        node keeps its tag — the prompt-prefix portion of a conversation
+        stays a prompt-prefix hit."""
         self.clock += 1
         children, parent, added = self.children, None, 0
         for key, page in zip(self._chunks(tokens), pages):
             node = children.get(key)
             if node is None:
-                node = _Node(key, int(page), parent, self.clock)
+                node = _Node(key, int(page), parent, self.clock,
+                             generated=generated)
                 children[key] = node
                 retain(node.page)
                 self.n_nodes += 1

@@ -204,7 +204,9 @@ _COUNTER_KEYS = frozenset((
     "requests_completed", "rejected", "host_syncs_decode",
     "host_syncs_prefill", "spec_dispatches", "draft_proposed",
     "draft_accepted", "draft_rolled_back", "prefill_tokens_skipped",
-    "pool_waits", "spills", "overflowed", "rebalanced", "router_steps",
+    "pool_waits", "gather_bytes_avoided", "conversation_prefix_hits",
+    "conversation_tokens_reused",
+    "spills", "overflowed", "rebalanced", "router_steps",
     # resilience: QoS tier churn, shed/deadline accounting, failover
     "tier_demotions", "tier_promotions", "shed", "deadline_missed",
     "shed_pool_pressure", "failovers", "rejected_fleet", "replica_deaths",

@@ -145,6 +145,12 @@ class NullTracer:
     def pool_wait(self):
         pass
 
+    def gather_avoided(self, n_bytes):
+        pass
+
+    def conversation_hit(self, rid, matched):
+        pass
+
     # -- resilience edges (serve.qos / chaos / failover) --------------------
 
     def tier_change(self, old_tier, new_tier, load):
@@ -274,6 +280,14 @@ class Tracer(NullTracer):
 
     def pool_wait(self):
         self._push({"ev": "pool_wait", "step": self.step, "t": self._t()})
+
+    def gather_avoided(self, n_bytes):
+        self._push({"ev": "gather_avoided", "step": self.step,
+                    "t": self._t(), "bytes": n_bytes})
+
+    def conversation_hit(self, rid, matched):
+        self._push({"ev": "conversation_hit", "step": self.step,
+                    "t": self._t(), "rid": rid, "matched": matched})
 
     def tier_change(self, old_tier, new_tier, load):
         self._push({"ev": "tier_change", "step": self.step, "t": self._t(),

@@ -1,0 +1,227 @@
+"""Page-table-native decode attention (PR 8).
+
+Contracts under test:
+
+  * three-way greedy token identity per cache family: the NATIVE paged
+    decode (attention reads/writes the page-major store through the page
+    table) == the LEGACY gather-run-scatter wrap (paged_native=False) ==
+    the unpaged slab — plain and speculate=K, local and (subprocess,
+    8 forced CPU devices) sharded;
+  * the native decode hot path never touches `PageLayout.gather/scatter`
+    (GATHER_EVENTS stays empty) while the legacy wrap does, and the native
+    path dispatches through the paged attention op (PAGED_ATTN_EVENTS);
+  * `gather_bytes_avoided` counts the traffic the native path did not
+    move (> 0 native, == 0 legacy/slab) and pools across replicas;
+  * multi-turn chat: a finished request publishes its WHOLE conversation
+    (prompt + generated) into the prefix tree, so the next turn matches
+    the full prior exchange, skips that prefill, and still emits the
+    slab engine's exact tokens — with the pool draining back to pristine;
+  * suffix-prefill pow2 bucketing never bucket-pads PAGE allocation: the
+    slot's pages are sized from the true footprint even when the prefill
+    shape is padded (satellite regression).
+"""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
+                         ModelRegistry)
+from repro.serve.paging import GATHER_EVENTS
+
+from test_serve_paged import ARCHS, _jobs, run_script
+
+_REGISTRY = ModelRegistry()
+
+
+def _run(model, jobs, *, n_slots=3, max_len=32, **kw):
+    eng = InferenceEngine(model, EngineConfig(n_slots=n_slots,
+                                              max_len=max_len, **kw))
+    reqs = [eng.submit(p, g, arrival_step=i)
+            for i, (p, g) in enumerate(jobs)]
+    eng.run()
+    return [r.generated for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# three-way identity + hot-path trace events
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_native_vs_legacy_identity_and_events(arch):
+    """Native and legacy paged decode emit identical greedy tokens (each is
+    separately slab-identical — test_serve_paged gates that), and the
+    trace-time event logs prove WHICH path compiled: the native decode
+    never materialises a gather/scatter, the legacy wrap does."""
+    m = _REGISTRY.load(arch)
+    jobs = _jobs(m)
+    GATHER_EVENTS.clear()
+    ops.PAGED_ATTN_EVENTS.clear()
+    native, eng_n = _run(m, jobs, decode_chunk=2, page_size=8,
+                         prefix_cache=False)
+    assert not GATHER_EVENTS, GATHER_EVENTS   # no gather on the hot path
+    assert ops.PAGED_ATTN_EVENTS              # paged attention op compiled
+    legacy, eng_l = _run(m, jobs, decode_chunk=2, page_size=8,
+                         prefix_cache=False, paged_native=False)
+    assert any(ev[0] == "gather" for ev in GATHER_EVENTS)
+    assert any(ev[0] == "scatter" for ev in GATHER_EVENTS)
+    assert native == legacy
+    # the avoided-traffic ledger: positive per native dispatch, zero legacy
+    rep_n, rep_l = eng_n.metrics.report(), eng_l.metrics.report()
+    assert rep_n["gather_bytes_avoided"] > 0
+    assert rep_n["gather_bytes_avoided"] == pytest.approx(
+        eng_n.backend.gather_bytes_per_dispatch()
+        * rep_n["decode_steps"])
+    assert rep_l["gather_bytes_avoided"] == 0.0
+
+
+def test_native_speculative_identity_and_ledger():
+    """speculate=K through the native paged dispatch: token-identical to
+    the legacy wrap (and transitively the slab), with the speculative
+    cycle's avoided gather traffic on the ledger."""
+    m = _REGISTRY.load(ARCHS[0], draft_spec=DraftSpec(bits=8))
+    jobs = _jobs(m, seed=3)
+    GATHER_EVENTS.clear()
+    native, eng = _run(m, jobs, speculate=2, page_size=8)
+    assert not GATHER_EVENTS
+    legacy, _ = _run(m, jobs, speculate=2, page_size=8, paged_native=False)
+    assert native == legacy
+    rep = eng.metrics.report()
+    assert rep["spec_dispatches"] > 0
+    assert rep["gather_bytes_avoided"] > 0
+
+
+def test_sharded_native_vs_legacy_identity():
+    """(data=4, model=2) mesh: native paged decode == legacy wrap == local
+    slab, with donation aliasing intact — the sharded leg of the grid
+    (test_serve_paged covers native-sharded for every arch)."""
+    run_script("""
+        import numpy as np
+        from repro.serve import (EngineConfig, InferenceEngine,
+                                 ModelRegistry, ShardedBackend)
+        reg = ModelRegistry()
+        m = reg.load("nemotron-4-340b")
+        rng = np.random.default_rng(11)
+        jobs = [(rng.integers(0, m.cfg.vocab, s0), gen)
+                for s0, gen in [(5, 6), (9, 4), (7, 5)]]
+        def run(backend=None, **kw):
+            eng = InferenceEngine(
+                m, EngineConfig(n_slots=4, max_len=32, decode_chunk=2,
+                                **kw), backend=backend)
+            rs = [eng.submit(p, g, arrival_step=i)
+                  for i, (p, g) in enumerate(jobs)]
+            eng.run()
+            return [r.generated for r in rs], eng
+        slab, _ = run()
+        nat, eng = run(ShardedBackend(mesh_shape=(4, 2)), page_size=8,
+                       n_pages=24)
+        leg, _ = run(ShardedBackend(mesh_shape=(4, 2)), page_size=8,
+                     n_pages=24, paged_native=False)
+        assert slab == nat == leg, (slab, nat, leg)
+        assert eng.metrics.report()["gather_bytes_avoided"] > 0
+        print("sharded native vs legacy identity OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# multi-turn conversation reuse
+# ---------------------------------------------------------------------------
+
+def test_multi_turn_chat_reuses_whole_conversation():
+    """Turn 2 of a chat (prior prompt + prior reply + follow-up) matches
+    every FULL page of the prior conversation — generated tokens included,
+    which prompt-only publishing could never cover — skips that prefill,
+    counts a conversation hit, and still emits the slab engine's exact
+    tokens. Draining the engine returns the pool to pristine."""
+    m = _REGISTRY.load(ARCHS[0])
+    rng = np.random.default_rng(7)
+    p1, g1 = rng.integers(0, m.cfg.vocab, 8), 17
+    eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=64,
+                                          page_size=8))
+    r1 = eng.submit(p1, g1)
+    eng.run()
+    conv = np.concatenate([p1, np.asarray(r1.generated, np.int32)])
+    assert len(conv) == 25
+    # valid KV stops at the conversation's second-to-last position (the
+    # final emitted token's KV was never written), so 3 full pages of the
+    # 25-token exchange are published: 24 matched tokens for turn 2 —
+    # prompt-only publishing would have matched just len(p1) = 8
+    p2 = np.concatenate([conv, rng.integers(0, m.cfg.vocab, 5)])
+    r2 = eng.submit(p2, 5)
+    eng.run()
+    assert r2.prefix_matched == 24
+    rep = eng.metrics.report()
+    assert rep["conversation_prefix_hits"] == 1.0
+    assert rep["conversation_tokens_reused"] == 24.0
+    # token identity: a fresh slab engine given the same turn-2 prompt
+    slab, _ = _run(m, [(p2, 5)], n_slots=2, max_len=64)
+    assert r2.generated == slab[0]
+    # pristine drain: only tree-retained pages remain referenced
+    pool = eng.pool
+    assert pool.n_active == 0
+    assert pool.pages_in_use == pool.index.n_nodes
+    pool.index.clear(pool._release)
+    assert int(pool.refs[1:].sum()) == 0
+    assert len(pool._free_pages) == pool.n_usable_pages
+
+
+def test_shed_request_never_publishes_conversation():
+    """Cancel/shed paths free pages without publishing: the next admission
+    of the same history must match only the PROMPT pages the admission
+    path published, never pages from the cancelled generation."""
+    m = _REGISTRY.load(ARCHS[0])
+    rng = np.random.default_rng(9)
+    p1 = rng.integers(0, m.cfg.vocab, 16)
+    eng = InferenceEngine(m, EngineConfig(n_slots=2, max_len=64,
+                                          page_size=8))
+    r1 = eng.submit(p1, 12)
+    for _ in range(4):
+        eng.step()
+    eng.cancel(r1)
+    assert r1.state == "shed"
+    conv = np.concatenate([p1, np.asarray(r1.generated, np.int32),
+                           rng.integers(0, m.cfg.vocab, 4)])
+    matched, _, from_conversation = eng.backend.prefix_match(conv)
+    assert matched <= 16                # prompt pages only
+    assert not from_conversation
+    assert eng.metrics.report()["conversation_prefix_hits"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# suffix bucketing vs page accounting (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_suffix_bucket_page_accounting():
+    """Page allocation is sized from the TRUE footprint (prompt + budget +
+    headroom), never the pow2 prefill bucket: a 5-token suffix bucketed to
+    a 16-token prefill shape must still allocate ceil(true/P) pages, with
+    the padded tail's writes landing in the sink page / masked positions
+    instead of costing real pages."""
+    m = _REGISTRY.load(ARCHS[0])
+    rng = np.random.default_rng(1)
+    sys_p = rng.integers(0, m.cfg.vocab, 16)
+    tail = rng.integers(0, m.cfg.vocab, 5)
+    eng = InferenceEngine(m, EngineConfig(n_slots=1, max_len=32,
+                                          page_size=8, n_pages=9))
+    pages_at_start = {}
+
+    def cb(r, tok):
+        pages_at_start.setdefault(r.id, len(eng.pool._slot_pages[r.slot]))
+
+    r1 = eng.submit(sys_p, 4, on_token=cb)
+    eng.run()
+    r2 = eng.submit(np.concatenate([sys_p, tail]), 4, on_token=cb)
+    # the suffix path really is bucket-padded (5 -> 16): the regression
+    # only bites when the prefill shape and the footprint disagree
+    assert eng._suffix_len(5, 16) == 16
+    eng.run()
+    assert r2.prefix_matched == 16
+    # true footprint: 21 prompt + 4 budget = 25 positions -> 4 pages
+    # (2 shared + 2 private); bucket-padded accounting would take
+    # ceil((16 + 16 + 4) / 8) = 5
+    assert pages_at_start[r2.id] == 4
+    assert eng.metrics.pool_waits == 0
+    # identity against the slab for the bucketed-suffix request
+    slab, _ = _run(m, [(sys_p, 4), (np.concatenate([sys_p, tail]), 4)],
+                   n_slots=1, max_len=32)
+    assert [r1.generated, r2.generated] == slab

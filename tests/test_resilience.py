@@ -30,11 +30,16 @@ def _prompt(model, n=6, seed=0):
 
 def _assert_pristine(eng):
     """After a full drain every pool resource is back: all slots free, and
-    on a paged pool every non-sink page refcount is zero with the whole
-    free list restored."""
+    on a paged pool every surviving page reference is tree retention —
+    finished requests publish their conversation into the prefix tree
+    (PR 8), so retained pages must exactly match the tree's node count,
+    and clearing the tree must hand every page back to the free list."""
     assert eng.pool.n_active == 0
     assert eng.pool.n_free == eng.cfg.n_slots
     if hasattr(eng.pool, "_free_pages"):
+        if getattr(eng.pool, "index", None) is not None:
+            assert eng.pool.pages_in_use == eng.pool.index.n_nodes
+            eng.pool.index.clear(eng.pool._release)
         assert int(np.asarray(eng.pool.refs)[1:].sum()) == 0
         assert len(eng.pool._free_pages) == eng.pool.n_usable_pages
 

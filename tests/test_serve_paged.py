@@ -157,7 +157,7 @@ def test_pool_churn_invariants_randomized():
             continue
         prompt = rng.integers(0, cfg.vocab, int(rng.integers(4, 28)))
         slot = pool.alloc()
-        matched, shared = pool.prefix_match(prompt)
+        matched, shared, _ = pool.prefix_match(prompt)
         try:
             pool.alloc_pages(slot, len(prompt) + 4, shared)
         except PoolExhausted:
@@ -170,7 +170,7 @@ def test_pool_churn_invariants_randomized():
         for pages in pool._slot_pages:
             for p in pages:
                 uses[p] += 1
-        for node_pages in [pool.index.match(t)[:len(t) // 8]
+        for node_pages in [pool.index.match(t)[0][:len(t) // 8]
                            for t in live.values()]:
             pass                                 # match only touches LRU
         assert int(pool.refs[1:].sum()) == int(uses[1:].sum()) \
@@ -231,12 +231,12 @@ def test_lru_eviction_prefers_stale_unreferenced_prefixes():
     idx.insert(t0, [1, 2], retain)
     idx.insert(t1, [3, 4], retain)
     idx.insert(t2, [5, 6], retain)
-    assert idx.match(t0) == [1, 2]               # refresh t0: now hottest
+    assert idx.match(t0)[0] == [1, 2]            # refresh t0: now hottest
     refs[3] += 1                                 # page 3 pinned by a "slot"
     freed = idx.evict(3, can_free=lambda p: refs[p] == 1, release=release)
     assert freed == 3
-    assert idx.match(t0) == [1, 2]               # refreshed prefix survives
-    assert idx.match(t1) == [3]                  # pinned page 3 survives,
+    assert idx.match(t0)[0] == [1, 2]            # refreshed prefix survives
+    assert idx.match(t1)[0] == [3]               # pinned page 3 survives,
     assert refs[4] == 0 and refs[5] == 0         # its child + stale t2 gone
     assert idx.evicted == 3
 
@@ -252,13 +252,14 @@ def test_prefix_index_page_alignment_and_suffix_floor():
     assert pool.prefix_insert(prompt, slot) == 2          # 16 // 8 pages
     # exact-multiple prompt: the match is capped one page short so the
     # suffix prefill still has a token to sample from
-    matched, pages = pool.prefix_match(prompt)
+    matched, pages, conv = pool.prefix_match(prompt)
     assert matched == 8 and len(pages) == 1
+    assert not conv                      # prompt pages, not generated ones
     # longer prompt sharing the prefix: both pages match
-    matched, pages = pool.prefix_match(np.arange(20))
+    matched, pages, _ = pool.prefix_match(np.arange(20))
     assert matched == 16 and len(pages) == 2
     # a 17-token prompt only has 2 full pages; partial tail never matches
-    matched, _ = pool.prefix_match(np.arange(17))
+    matched, _, _ = pool.prefix_match(np.arange(17))
     assert matched == 16
 
 
@@ -332,10 +333,13 @@ def test_sharded_paged_identity_and_placement():
             local, _ = run()
             sh, eng = run(ShardedBackend(mesh_shape=(4, 2)))
             assert local == sh, (arch, local, sh)
-            i = next(j for j, s in enumerate(eng.pool.layout.specs)
-                     if s.paged)              # resident leaves keep slab spec
+            i, ls = next((j, s) for j, s in
+                         enumerate(eng.pool.layout.specs)
+                         if s.paged)          # resident leaves keep slab spec
             spec = eng.pool.store[i].sharding.spec
-            assert spec[0] in ("data", ("data",)), (arch, spec)
+            # the page axis sits IN PLACE of the slot axis and shards the
+            # same way ('data'); surrounding axes keep the slab's spec
+            assert spec[ls.batch_axis] in ("data", ("data",)), (arch, spec)
             bk = eng.backend
             txt = bk._decode.lower(bk.params, eng.pool.store,
                                    eng.pool.page_table, bk.state).as_text()
