@@ -105,6 +105,24 @@ POLICY: Dict[str, Tuple[str, float]] = {
     "conversation_tokens_reused": ("exact", 0.0),
     "decode_gather_events": ("exact", 0.0),
     "gather_bytes_avoided": ("higher", 0.05),
+    # ineffectual-work ledger (PR 9): probe counts accumulate on the
+    # step clock from deterministic traffic, so every counter — including
+    # the per-layer zero-histogram checksum — is behavior identity; the
+    # quality shadow of a single-tier engine is exact by construction
+    "ledger_dispatches": ("exact", 0.0),
+    "host_syncs_decode": ("exact", 0.0),
+    "act_probe_elems": ("exact", 0.0),
+    "act_zeros": ("exact", 0.0),
+    "act_near_zeros": ("exact", 0.0),
+    "act_kblocks": ("exact", 0.0),
+    "act_dead_kblocks": ("exact", 0.0),
+    "act_hist_checksum": ("exact", 0.0),
+    "quality_probes": ("exact", 0.0),
+    "quality_top1_rate": ("exact", 0.0),
+    "quality_logit_mad": ("exact", 0.0),
+    "trace_dropped": ("exact", 0.0),
+    "act_zero_fraction": ("info", 0.0),
+    "effective_flop_fraction": ("info", 0.0),
     # wall clock: never gated (CI hardware varies run to run)
     "wall_tok_s": ("info", 0.0),
     "admitted_tok_s": ("info", 0.0),

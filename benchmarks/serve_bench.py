@@ -80,6 +80,17 @@ shedding + per-step expiry make that exact at decode_chunk=1). Wall tok/s
 is reported ungated; `--out results/BENCH_overload.json` is the CI
 artifact.
 
+Ledger-trace mode (PR 9): `--ledger-trace` replays one Poisson trace TWICE
+through a device-loop engine carrying the ineffectual-work ledger
+(serve.ledger) and gates, all step-clock deterministic: measured activation
+zeros > 0 (nemotron's squared-ReLU MLP), every counter and per-layer
+zero-group histogram bit-identical across the two runs (hist_checksum),
+host syncs == decode dispatches (the ledger drains inside the existing
+token sync), and an exact tier-0 quality shadow (top1 1.0, MAD 0.0). The
+JSON artifact adds an ungated roofline join (analysis.roofline over the
+tracer's dispatch walls); `--out results/BENCH_ledger.json` is the CI
+artifact, diffed against its golden by benchmarks/qor.py.
+
 Provenance (PR 4): every JSON record is stamped with the git commit, jax
 version and rng seed, so BENCH trajectories are comparable across runs.
 
@@ -181,6 +192,20 @@ class PackedRouteCounter:
         return False
 
 
+def _warn_trace_dropped(tracer) -> None:
+    """Warn ONCE per process when a trace export lost events to the ring
+    buffer — every later export is silently incomplete in the same way, so
+    repeating the warning per mode would just bury the bench output."""
+    if getattr(tracer, "dropped", 0) and not _warn_trace_dropped.warned:
+        _warn_trace_dropped.warned = True
+        print(f"# WARNING: trace ring buffer dropped {tracer.dropped} "
+              "events — exports are incomplete; raise TraceConfig.capacity",
+              file=sys.stderr)
+
+
+_warn_trace_dropped.warned = False
+
+
 def run_one(model, trace, n_slots: int, max_len: int, scheduler, *,
             device_loop: bool = True, decode_chunk: int = 1, backend=None,
             trace_cfg=None, telemetry_jsonl: str = ""):
@@ -195,6 +220,7 @@ def run_one(model, trace, n_slots: int, max_len: int, scheduler, *,
     eng.run()
     if trace_cfg is not None:
         eng.trace.export()          # the TraceConfig's out/chrome paths
+        _warn_trace_dropped(eng.trace)
     if telemetry_jsonl:
         # one end-of-run snapshot per mode: the CI artifact shows the full
         # metric vector per (spec, mode) alongside the event traces
@@ -674,6 +700,134 @@ def run_overload_trace(arch: str, n_requests: int, n_slots: int, seed: int,
     return ok
 
 
+def run_ledger_trace(arch: str, n_requests: int, n_slots: int, seed: int,
+                     out: str = "", k_block: int = 8,
+                     quality_every: int = 2) -> bool:
+    """Ineffectual-work ledger mode (PR 9): the SAME Poisson trace replayed
+    twice through a ledger-instrumented device-loop engine.
+
+    Gates, all deterministic on the step clock:
+      * measured activation zeros > 0 — the arch default (nemotron's
+        squared-ReLU MLP) makes real zeros, and the ledger must see them;
+      * BIT-DETERMINISM: every counter — including the full per-layer
+        per-group zero histogram, collapsed to `hist_checksum` — is
+        identical across the two runs;
+      * NO EXTRA HOST SYNCS: host_syncs_decode == decode dispatches (the
+        ledger drains inside the existing token device_get);
+      * quality probes: tier-0 shadow prefill of a single-tier engine must
+        agree with itself exactly (top1 rate 1.0, logit MAD 0.0).
+
+    The JSON record carries the gated counters plus an UNGATED roofline
+    join (analysis.roofline over the tracer's dispatch walls) — wall time
+    is machine-dependent, the counters are not.
+    """
+    from repro.analysis import roofline as RL
+    from repro.serve import LedgerConfig
+
+    registry = ModelRegistry()
+    model = registry.load(arch)
+    prompt_range, gen_range = (6, 14), (10, 18)
+    trace = poisson_trace(n_requests, 1.5, prompt_range, gen_range,
+                          model.cfg.vocab, seed)
+    max_len = prompt_range[1] + gen_range[1] + 8
+    led_cfg = LedgerConfig(threshold=0.0, group=8, k_block=k_block,
+                           quality_every=quality_every)
+    prov = provenance(seed)
+
+    def one_run():
+        eng = InferenceEngine(model, EngineConfig(
+            n_slots=n_slots, max_len=max_len, decode_chunk=4,
+            ledger=led_cfg, trace=TraceConfig()))
+        for arrival, prompt, gen in trace:
+            eng.submit(prompt, gen, arrival_step=arrival)
+        t0 = time.time()
+        eng.run()
+        wall = max(time.time() - t0, 1e-9)
+        _warn_trace_dropped(eng.trace)
+        return eng, eng.metrics.report(), eng.ledger.summary(), wall
+
+    eng1, rep1, sum1, wall1 = one_run()
+    _, rep2, sum2, _ = one_run()
+
+    gated = ("act_probe_elems", "act_zeros", "act_near_zeros",
+             "act_kblocks", "act_dead_kblocks", "act_hist_checksum")
+    deterministic = all(sum1[k] == sum2[k] for k in gated) \
+        and sum1["hist"] == sum2["hist"]
+    zeros_ok = sum1["act_zeros"] > 0
+    syncs_ok = rep1["host_syncs_decode"] == rep1["decode_steps"] \
+        and rep1["ledger_dispatches"] == rep1["decode_steps"]
+    quality_ok = rep1["quality_probes"] > 0 \
+        and rep1["quality_top1_rate"] == 1.0 \
+        and rep1["quality_logit_mad"] == 0.0
+    ok = deterministic and zeros_ok and syncs_ok and quality_ok
+
+    # ungated roofline attribution: join the tracer's dispatch walls with
+    # the ledger counter tracks drained at the same steps
+    dispatch_rows = RL.dispatch_rooflines(list(eng1.trace.events))
+    replica = RL.replica_roofline(sum1, wall1)
+
+    zero_frac = sum1["act_zeros"] / max(sum1["act_probe_elems"], 1.0)
+    print(f"# ledger-trace[{arch}] kb={k_block}: "
+          f"{int(sum1['act_zeros'])} zeros / "
+          f"{int(sum1['act_probe_elems'])} probed elems "
+          f"({zero_frac:.3f}) [{'PASS' if zeros_ok else 'FAIL'} > 0] | "
+          f"hist checksum {sum1['act_hist_checksum']:.0f} "
+          f"[{'PASS' if deterministic else 'FAIL'} bit-identical x2] | "
+          f"syncs {int(rep1['host_syncs_decode'])} == dispatches "
+          f"{int(rep1['decode_steps'])} "
+          f"[{'PASS' if syncs_ok else 'FAIL'}] | quality "
+          f"{int(rep1['quality_probes'])} probes top1 "
+          f"{rep1['quality_top1_rate']:.2f} mad "
+          f"{rep1['quality_logit_mad']:.3g} "
+          f"[{'PASS' if quality_ok else 'FAIL'}] | eff flops "
+          f"{rep1['effective_flop_fraction']:.3f}, dead k-blocks "
+          f"{int(sum1['act_dead_kblocks'])}, "
+          f"skip bound {replica['skip_speedup_bound']:.2f}x "
+          f"({replica['dense']['bound']}-bound)")
+    records = [{
+        "arch": arch, "mode": "ledger", "n_requests": n_requests,
+        "n_slots": n_slots, "decode_chunk": 4, "k_block": k_block,
+        "group": led_cfg.group, "quality_every": quality_every,
+        "mesh_shape": [1, 1], "n_replicas": 1, **prov,
+        "tokens_generated": rep1["tokens_generated"],
+        "decode_steps": rep1["decode_steps"],
+        "ledger_dispatches": rep1["ledger_dispatches"],
+        "host_syncs_decode": rep1["host_syncs_decode"],
+        "act_probe_elems": sum1["act_probe_elems"],
+        "act_zeros": sum1["act_zeros"],
+        "act_near_zeros": sum1["act_near_zeros"],
+        "act_kblocks": sum1["act_kblocks"],
+        "act_dead_kblocks": sum1["act_dead_kblocks"],
+        "act_hist_checksum": sum1["act_hist_checksum"],
+        "act_zero_fraction": zero_frac,
+        "effective_flop_fraction": rep1["effective_flop_fraction"],
+        "quality_probes": rep1["quality_probes"],
+        "quality_top1_rate": rep1["quality_top1_rate"],
+        "quality_logit_mad": rep1["quality_logit_mad"],
+        "trace_dropped": rep1["trace_dropped"],
+    }]
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "n_slots": n_slots,
+                       "n_requests": n_requests, "k_block": k_block,
+                       "quality_every": quality_every, **prov,
+                       "deterministic": deterministic,
+                       "roofline": {
+                           "replica": replica,
+                           "n_dispatch_rows": len(dispatch_rows),
+                           "dispatches": dispatch_rows[:16]},
+                       "zero_fraction_by_layer":
+                           sum1["zero_fraction_by_layer"],
+                       "records": records}, f, indent=2)
+        print(f"# wrote {out} ({len(records)} records)")
+    print(f"# serve_bench --ledger-trace: {'PASS' if ok else 'FAIL'} — "
+          "activation zeros measured, counters bit-deterministic across "
+          "two runs, ledger drains inside the existing dispatch sync, "
+          "tier-0 quality shadow exact")
+    return ok
+
+
 def run_speculative(arch: str, n_requests: int, n_slots: int, seed: int,
                     speculate: int, draft: DraftSpec, out: str = "",
                     gate: float = 1.2) -> bool:
@@ -995,6 +1149,15 @@ def main() -> None:
                          "regular modes")
     ap.add_argument("--deadline-steps", type=int, default=0,
                     help="--overload-trace deadline (0 = 3x mean gen len)")
+    ap.add_argument("--ledger-trace", action="store_true",
+                    help="ineffectual-work ledger mode: one trace replayed "
+                         "twice through a ledger-instrumented device-loop "
+                         "engine; gated on measured activation zeros > 0, "
+                         "bit-identical counters/histograms across runs, "
+                         "host syncs == dispatches, exact tier-0 quality "
+                         "shadow; skips regular modes")
+    ap.add_argument("--ledger-kblock", type=int, default=8,
+                    help="--ledger-trace dead-k-block granularity")
     ap.add_argument("--draft-bits", type=int, default=8,
                     help="draft weight bits (0 = native)")
     ap.add_argument("--draft-sparsity", type=float, default=0.0)
@@ -1007,6 +1170,11 @@ def main() -> None:
                          "tracer: JSONL + Chrome traces and one telemetry "
                          "snapshot per mode land here (CI artifacts)")
     a = ap.parse_args()
+    if a.ledger_trace:
+        ok = run_ledger_trace(a.arch or "nemotron-4-340b",
+                              a.requests or 8, a.slots, a.seed,
+                              out=a.out, k_block=a.ledger_kblock)
+        sys.exit(0 if ok else 1)
     if a.overload_trace:
         ok = run_overload_trace(a.arch or "h2o-danube-1.8b",
                                 a.requests or 40, a.slots, a.seed,

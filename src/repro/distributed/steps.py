@@ -167,7 +167,8 @@ def make_prefill_step(cfg: T.ModelConfig, backend: str = "ref",
 
 def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
                      n_steps: Optional[int] = None,
-                     pages_meta: Optional[Dict[str, int]] = None):
+                     pages_meta: Optional[Dict[str, int]] = None,
+                     ledger=None):
     """Compiled slab decode. Two forms:
 
     n_steps=None (legacy, lock-step launch path):
@@ -202,12 +203,24 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
     table (models.attention). The table is loop-invariant inside the
     dispatch (admission updates it between dispatches) and passes through
     so it stays aliased to its donated buffer.
+
+    ledger=serve.ledger.LedgerConfig (n_steps form only) appends the
+    ineffectual-work ledger as a trailing DONATED operand and return: every
+    micro-step's forward runs with a LedgerProbe, the per-layer probe
+    matrix accumulates in the scan carry, and the cumulative
+    (n_layers, width) f32 buffer comes back for the engine to drain inside
+    the dispatch's one existing host sync —
+        decode(params, caches, state, ledger) ->
+            (tok_block, caches, state, ledger)
+    (paged form: the ledger operand stays last, after `state`).
     """
     cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
 
     if n_steps is None:
         if pages_meta is not None:
             raise ValueError("pages_meta requires the n_steps form")
+        if ledger is not None:
+            raise ValueError("ledger requires the n_steps form")
         def decode(params, caches, token, index):
             logits, _, caches = T.forward(
                 params, token, cfg, backend=backend, caches=caches,
@@ -218,15 +231,28 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
     if n_steps < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
 
-    def decode(params, caches, state, page_table=None):
+    if ledger is not None:
+        from repro.serve.ledger import LedgerProbe   # lazy: no serve<->models cycle
+
+    def decode(params, caches, state, page_table=None, ledger_in=None):
         pages = None if page_table is None else dict(pages_meta,
                                                      table=page_table)
 
         def micro(carry, _):
-            caches, st = carry
-            logits, _, caches = T.forward(
+            if ledger is not None:
+                caches, st, led = carry
+                probe = LedgerProbe(ledger)
+            else:
+                caches, st = carry
+                probe = None
+            out = T.forward(
                 params, st["tokens"][:, None], cfg, backend=backend,
-                caches=caches, index=st["index"], pages=pages)
+                caches=caches, index=st["index"], pages=pages, probe=probe)
+            if ledger is not None:
+                logits, _, caches, mat = out
+                led = led + mat
+            else:
+                logits, _, caches = out
             key, sub = jax.random.split(st["key"])
             tok = T.sample_tokens(logits[:, -1], sub, st["temperature"])
             active = st["active"]
@@ -244,18 +270,34 @@ def make_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
                 "active": active & (remaining > 0) & ~hit_eos,
                 "spec_limit": st["spec_limit"],
             }
-            return (caches, st), tok
+            carry = (caches, st, led) if ledger is not None else (caches, st)
+            return carry, tok
 
+        if ledger is not None:
+            (caches, state, led), tok_block = jax.lax.scan(
+                micro, (caches, state, ledger_in), None, length=n_steps)
+            return tok_block, caches, state, led
         (caches, state), tok_block = jax.lax.scan(
             micro, (caches, state), None, length=n_steps)
         return tok_block, caches, state
 
     if pages_meta is not None:
+        if ledger is not None:
+            def paged_decode(params, caches, page_table, state, ledger_in):
+                tok_block, caches, state, led = decode(
+                    params, caches, state, page_table, ledger_in)
+                return tok_block, caches, page_table, state, led
+            return paged_decode
+
         def paged_decode(params, caches, page_table, state):
             tok_block, caches, state = decode(params, caches, state,
                                               page_table)
             return tok_block, caches, page_table, state
         return paged_decode
+    if ledger is not None:
+        def ledger_decode(params, caches, state, ledger_in):
+            return decode(params, caches, state, None, ledger_in)
+        return ledger_decode
     return decode
 
 
@@ -323,7 +365,8 @@ def install_slot(state: Dict[str, jnp.ndarray], slot, token, index,
 # ---------------------------------------------------------------------------
 
 def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
-                           n_steps: int, layout, native: bool = True):
+                           n_steps: int, layout, native: bool = True,
+                           ledger=None):
     """Paged form of the device-resident loop (serve.paging):
 
         decode(params, store, page_table, state)
@@ -350,11 +393,23 @@ def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
 
     The table passes through unchanged (admission and slot release update
     it between dispatches); returning it keeps it aliased to its donated
-    buffer so it stays device-resident."""
+    buffer so it stays device-resident.
+
+    ledger=LedgerConfig appends the donated ineffectual-work ledger as a
+    trailing operand/return on either form (see make_decode_step)."""
     if native:
         meta = {"size": layout.page_size, "len": layout.cache_len}
         inner = make_decode_step(cfg, backend, n_steps=n_steps,
-                                 pages_meta=meta)
+                                 pages_meta=meta, ledger=ledger)
+
+        if ledger is not None:
+            def decode(params, store, page_table, state, ledger_in):
+                caches = layout.as_tree(store)
+                tok_block, caches, page_table, state, led = inner(
+                    params, caches, page_table, state, ledger_in)
+                return (tok_block, layout.from_tree(caches), page_table,
+                        state, led)
+            return decode
 
         def decode(params, store, page_table, state):
             caches = layout.as_tree(store)
@@ -364,7 +419,16 @@ def make_paged_decode_step(cfg: T.ModelConfig, backend: str = "ref", *,
 
         return decode
 
-    inner = make_decode_step(cfg, backend, n_steps=n_steps)
+    inner = make_decode_step(cfg, backend, n_steps=n_steps, ledger=ledger)
+
+    if ledger is not None:
+        def decode(params, store, page_table, state, ledger_in):
+            caches = layout.gather(store, page_table)
+            tok_block, caches, state, led = inner(params, caches, state,
+                                                  ledger_in)
+            return (tok_block, layout.scatter(store, page_table, caches),
+                    page_table, state, led)
+        return decode
 
     def decode(params, store, page_table, state):
         caches = layout.gather(store, page_table)
@@ -379,7 +443,8 @@ def make_paged_speculative_decode_step(cfg: T.ModelConfig,
                                        draft_cfg: T.ModelConfig,
                                        backend: str = "ref", *,
                                        n_draft: int, layout,
-                                       native: bool = True):
+                                       native: bool = True,
+                                       ledger=None):
     """Paged form of the fused propose-then-verify cycle:
 
         spec_decode(params, draft_params, store, page_table, draft_caches,
@@ -398,12 +463,27 @@ def make_paged_speculative_decode_step(cfg: T.ModelConfig,
     native=True: the verify forwards consume the page table directly (same
     contract as make_paged_decode_step) — the K+1-token block write is one
     page-indexed scatter per leaf. native=False keeps the legacy
-    gather/scatter wrap for A/B tests."""
+    gather/scatter wrap for A/B tests.
+
+    ledger=LedgerConfig appends the donated ineffectual-work ledger as a
+    trailing operand/return on either form (see
+    make_speculative_decode_step)."""
     if native:
         meta = {"size": layout.page_size, "len": layout.cache_len}
         inner = make_speculative_decode_step(cfg, draft_cfg, backend,
                                              n_draft=n_draft,
-                                             pages_meta=meta)
+                                             pages_meta=meta, ledger=ledger)
+
+        if ledger is not None:
+            def spec_decode(params, draft_params, store, page_table,
+                            draft_caches, state, ledger_in):
+                caches = layout.as_tree(store)
+                (commit, m, acc, caches, page_table, draft_caches, state,
+                 led) = inner(params, draft_params, caches, page_table,
+                              draft_caches, state, ledger_in)
+                return (commit, m, acc, layout.from_tree(caches),
+                        page_table, draft_caches, state, led)
+            return spec_decode
 
         def spec_decode(params, draft_params, store, page_table,
                         draft_caches, state):
@@ -417,7 +497,19 @@ def make_paged_speculative_decode_step(cfg: T.ModelConfig,
         return spec_decode
 
     inner = make_speculative_decode_step(cfg, draft_cfg, backend,
-                                         n_draft=n_draft)
+                                         n_draft=n_draft, ledger=ledger)
+
+    if ledger is not None:
+        def spec_decode(params, draft_params, store, page_table,
+                        draft_caches, state, ledger_in):
+            caches = layout.gather(store, page_table)
+            commit, m, acc, caches, draft_caches, state, led = inner(
+                params, draft_params, caches, draft_caches, state,
+                ledger_in)
+            return (commit, m, acc,
+                    layout.scatter(store, page_table, caches), page_table,
+                    draft_caches, state, led)
+        return spec_decode
 
     def spec_decode(params, draft_params, store, page_table, draft_caches,
                     state):
@@ -431,7 +523,7 @@ def make_paged_speculative_decode_step(cfg: T.ModelConfig,
 
 
 def make_suffix_prefill_step(cfg: T.ModelConfig, backend: str = "ref", *,
-                             layout):
+                             layout, ledger=None):
     """Prefill ONLY the unmatched suffix of a prompt whose prefix pages are
     already resident (serve.paging prefix reuse):
 
@@ -453,8 +545,29 @@ def make_suffix_prefill_step(cfg: T.ModelConfig, backend: str = "ref", *,
     the padded tail's block writes land past the shared region in the
     slot's private pages, masked by the validity clocks until decode
     overwrites them — the same contract as the slab's padded prefill
-    tail."""
+    tail.
+
+    ledger=serve.ledger.LedgerConfig appends the donated ineffectual-work
+    ledger as a trailing operand/return:
+        prefill(params, batch, store, page_table, slot, index, ledger)
+            -> (logits, store, ledger)."""
     cfg = dataclasses.replace(cfg, remat=False)   # see make_prefill_step
+
+    if ledger is not None:
+        from repro.serve.ledger import LedgerProbe   # lazy: no serve<->models cycle
+
+        def prefill(params, batch, store, page_table, slot, index,
+                    ledger_in):
+            row = jax.lax.dynamic_index_in_dim(page_table, slot, axis=0,
+                                               keepdims=False)
+            caches = layout.gather_one(store, row, slot)
+            probe = LedgerProbe(ledger)
+            logits, _, caches, mat = T.forward(
+                params, batch["tokens"], cfg, backend=backend,
+                caches=caches, index=index, probe=probe)
+            return (logits, layout.scatter_one(store, row, slot, caches),
+                    ledger_in + mat)
+        return prefill
 
     def prefill(params, batch, store, page_table, slot, index):
         row = jax.lax.dynamic_index_in_dim(page_table, slot, axis=0,
@@ -530,7 +643,8 @@ def _restore(caches, paths, init_leaves, step_stacks, g):
 def make_speculative_decode_step(cfg: T.ModelConfig,
                                  draft_cfg: T.ModelConfig,
                                  backend: str = "ref", *, n_draft: int,
-                                 pages_meta: Optional[Dict[str, int]] = None):
+                                 pages_meta: Optional[Dict[str, int]] = None,
+                                 ledger=None):
     """Fused propose-then-verify decode (serve.speculative):
 
         spec_decode(params, draft_params, caches, draft_caches, state)
@@ -541,6 +655,12 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
     `page_table` operand after `caches`, threaded into the TARGET forwards
     as the `pages` operand and passed through the return — see
     make_decode_step; the draft keeps its slab).
+
+    ledger=serve.ledger.LedgerConfig appends the donated ineffectual-work
+    ledger as a trailing operand/return (see make_decode_step). Only the
+    TARGET verify forwards are probed — the draft's cost is accounted
+    analytically (registry.draft_cost_fraction), so probing it would
+    double-count work the roofline already attributes.
 
     ONE dispatch per cycle, everything on device:
 
@@ -583,8 +703,11 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
     k = n_draft
     recurrent = bool(cfg.is_ssm or cfg.attn_period)
 
+    if ledger is not None:
+        from repro.serve.ledger import LedgerProbe   # lazy: no serve<->models cycle
+
     def spec_decode(params, draft_params, caches, draft_caches, state,
-                    page_table=None):
+                    page_table=None, ledger_in=None):
         pages = None if page_table is None else dict(pages_meta,
                                                      table=page_table)
         b = state["tokens"].shape[0]
@@ -618,23 +741,41 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
         tok_in = jnp.concatenate([state["tokens"][:, None], d_block], axis=1)
         t_paths = recurrent_cache_paths(caches)
         t_init = _snapshot(caches, t_paths)
+        led = ledger_in
         if not recurrent:
-            logits, _, caches = T.forward(
-                params, tok_in, cfg, backend=backend, caches=caches,
-                index=idx0, pages=pages)
+            if ledger is not None:
+                probe = LedgerProbe(ledger)
+                logits, _, caches, mat = T.forward(
+                    params, tok_in, cfg, backend=backend, caches=caches,
+                    index=idx0, pages=pages, probe=probe)
+                led = led + mat
+            else:
+                logits, _, caches = T.forward(
+                    params, tok_in, cfg, backend=backend, caches=caches,
+                    index=idx0, pages=pages)
             z = logits                                  # (B, K+1, vocab)
             t_snaps = []
         else:
-            def verify_micro(vcaches, xs):
+            def verify_micro(carry, xs):
+                vcaches, vled = carry
                 tok_j, j = xs
                 idx_j = jnp.where(active, idx0 + j, idx0)
-                lg, _, vcaches = T.forward(
-                    params, tok_j[:, None], cfg, backend=backend,
-                    caches=vcaches, index=idx_j, pages=pages)
-                return vcaches, (lg[:, -1], _snapshot(vcaches, t_paths))
+                if ledger is not None:
+                    probe = LedgerProbe(ledger)
+                    lg, _, vcaches, mat = T.forward(
+                        params, tok_j[:, None], cfg, backend=backend,
+                        caches=vcaches, index=idx_j, pages=pages,
+                        probe=probe)
+                    vled = vled + mat
+                else:
+                    lg, _, vcaches = T.forward(
+                        params, tok_j[:, None], cfg, backend=backend,
+                        caches=vcaches, index=idx_j, pages=pages)
+                return ((vcaches, vled),
+                        (lg[:, -1], _snapshot(vcaches, t_paths)))
 
-            caches, (zs, t_snaps) = jax.lax.scan(
-                verify_micro, caches,
+            (caches, led), (zs, t_snaps) = jax.lax.scan(
+                verify_micro, (caches, led),
                 (tok_in.T, jnp.arange(k + 1, dtype=jnp.int32)))
             z = zs.transpose(1, 0, 2)
 
@@ -721,9 +862,22 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
             caches = _restore(caches, t_paths, t_init, t_snaps, g)
             draft_caches = _restore(draft_caches, d_paths, d_init, d_snaps, g)
 
+        if ledger is not None:
+            return commit, m, n_accept, caches, draft_caches, new_state, led
         return commit, m, n_accept, caches, draft_caches, new_state
 
     if pages_meta is not None:
+        if ledger is not None:
+            def paged_spec_decode(params, draft_params, caches, page_table,
+                                  draft_caches, state, ledger_in):
+                (commit, m, acc, caches, draft_caches, state,
+                 led) = spec_decode(params, draft_params, caches,
+                                    draft_caches, state, page_table,
+                                    ledger_in)
+                return (commit, m, acc, caches, page_table, draft_caches,
+                        state, led)
+            return paged_spec_decode
+
         def paged_spec_decode(params, draft_params, caches, page_table,
                               draft_caches, state):
             commit, m, acc, caches, draft_caches, state = spec_decode(
@@ -732,4 +886,10 @@ def make_speculative_decode_step(cfg: T.ModelConfig,
             return (commit, m, acc, caches, page_table, draft_caches,
                     state)
         return paged_spec_decode
+    if ledger is not None:
+        def ledger_spec_decode(params, draft_params, caches, draft_caches,
+                               state, ledger_in):
+            return spec_decode(params, draft_params, caches, draft_caches,
+                               state, None, ledger_in)
+        return ledger_spec_decode
     return spec_decode

@@ -14,10 +14,12 @@ GEMMs really take this path (same idiom as serve_bench.PackedRouteCounter).
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 from jax.experimental.pallas import tpu as _pltpu
+
+from repro.instrument import REGISTRY
 
 CompilerParams = getattr(_pltpu, "CompilerParams",
                          getattr(_pltpu, "TPUCompilerParams", None))
@@ -42,15 +44,18 @@ if CompilerParams is None:                             # pragma: no cover
 _SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
 
 # (kernel_name, m, bm) appended whenever a GEMM pads its row dim — at trace
-# time, like kratos.apply_packed instrumentation. Callers may clear it.
-SKINNY_M_EVENTS: List[Tuple[str, int, int]] = []
+# time, like kratos.apply_packed instrumentation. Registry-backed
+# (repro.instrument.REGISTRY, stream "skinny_m"): wrap trace-and-assert
+# blocks in `REGISTRY.scoped(...)` instead of hand-clearing; the historical
+# name stays as an alias of the same list.
+SKINNY_M_EVENTS = REGISTRY.event_list("skinny_m")
 
 # (backend, n_slots, pages_per_slot) appended whenever the paged-attention
 # decode path traces — same trace-time idiom as SKINNY_M_EVENTS. Benchmarks
 # and tests assert page-table-native decode really dispatched (and that the
 # gather/scatter wrap did NOT) by inspecting this alongside
-# serve.paging.GATHER_EVENTS. Callers may clear it.
-PAGED_ATTN_EVENTS: List[Tuple[str, int, int]] = []
+# serve.paging.GATHER_EVENTS. Registry stream "paged_attn".
+PAGED_ATTN_EVENTS = REGISTRY.event_list("paged_attn")
 
 
 def sublane(dtype) -> int:

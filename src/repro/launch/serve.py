@@ -10,6 +10,7 @@
       [--mesh data,model] [--replicas N] [--max-waiting M] [--dry-run] \
       [--trace-out T.jsonl] [--trace-chrome T.json] [--profile-dir D] \
       [--telemetry-port P] [--telemetry-jsonl S.jsonl] \
+      [--ledger [--ledger-threshold T] [--quality-every N]] \
       [--tiers 8:0.5,8:0.75 [--qos-*]] [--deadline-steps D] \
       [--pool-wait-retries R] [--auto-restart]
 
@@ -29,7 +30,14 @@ as JSONL / chrome://tracing JSON after the run; `--profile-dir` brackets
 the first N traced dispatches with jax.profiler (device timeline next to
 the host spans); `--telemetry-port` serves live Prometheus text at
 /metrics during the run and `--telemetry-jsonl` appends one metrics
-snapshot per `--telemetry-interval` (serve.telemetry).
+snapshot per `--telemetry-interval` (serve.telemetry). `--ledger` carries
+the ineffectual-work counter matrix (serve.ledger) through every decode /
+speculative / suffix-prefill dispatch as donated device state — activation
+zero fractions, per-group zero histograms, dead k-blocks, effective vs
+dense FLOPs/bytes — drained once per dispatch inside the existing token
+sync and surfaced through ServeMetrics, the tracer's Chrome counter
+tracks, and Prometheus; `--quality-every N` shadow-runs every Nth
+full-prefill admission through tier 0 for per-tier logit agreement.
 
 Paged KV + prefix reuse: `--page-size P` switches the KV pool to the
 block-paged form (serve.paging) — per-slot page tables over refcounted
@@ -76,11 +84,11 @@ import numpy as np
 
 from repro.core.kratos import KratosSpec
 from repro.serve import (DraftSpec, EngineConfig, InferenceEngine,
-                         LocalBackend, ModelRegistry, QoSConfig,
-                         ReplicaRouter, ShardedBackend, StaticScheduler,
-                         TelemetryConfig, TelemetryExporter, TraceConfig,
-                         engine_sample, export_chrome, export_jsonl,
-                         parse_tiers, router_sample)
+                         LedgerConfig, LocalBackend, ModelRegistry,
+                         QoSConfig, ReplicaRouter, ShardedBackend,
+                         StaticScheduler, TelemetryConfig, TelemetryExporter,
+                         TraceConfig, engine_sample, export_chrome,
+                         export_jsonl, parse_tiers, router_sample)
 
 
 def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
@@ -234,6 +242,23 @@ def main() -> None:
                     help="telemetry snapshot cadence, seconds")
     ap.add_argument("--telemetry-jsonl", default="",
                     help="append one JSON metrics snapshot per interval here")
+    ap.add_argument("--ledger", action="store_true",
+                    help="ineffectual-work ledger (serve.ledger): device-"
+                         "resident activation-sparsity / effective-FLOP "
+                         "counters drained once per dispatch inside the "
+                         "existing token sync (device loop only)")
+    ap.add_argument("--ledger-threshold", type=float, default=0.0,
+                    help="|x| <= t counts as near-zero in the ledger probes "
+                         "(0 = exact zeros only)")
+    ap.add_argument("--ledger-group", type=int, default=8,
+                    help="ledger per-group zero histogram group size")
+    ap.add_argument("--ledger-kblock", type=int, default=32,
+                    help="ledger dead-k-block granularity (contraction-dim "
+                         "block size an activation-skip kernel would use)")
+    ap.add_argument("--quality-every", type=int, default=0,
+                    help="shadow-run every Nth full-prefill admission "
+                         "through tier 0 and record per-tier logit "
+                         "agreement (0 = off; implies --ledger wiring)")
     ap.add_argument("--tiers", default="",
                     help="QoS degradation ladder: 'bits:sparsity[,...]' "
                          "cheapest-last (e.g. '8:0.5,8:0.75') — the registry "
@@ -297,6 +322,15 @@ def main() -> None:
         out=args.trace_out or None, chrome=args.trace_chrome or None,
         profile_dir=args.profile_dir or None,
         profile_dispatches=args.profile_dispatches) if tracing else None
+    ledger_cfg = None
+    if args.ledger or args.quality_every:
+        if args.host_loop:
+            raise SystemExit("--ledger requires the device-resident loop "
+                             "(drop --host-loop)")
+        ledger_cfg = LedgerConfig(threshold=args.ledger_threshold,
+                                  group=args.ledger_group,
+                                  k_block=args.ledger_kblock,
+                                  quality_every=args.quality_every)
     qos = QoSConfig(demote_depth=args.qos_demote_depth,
                     promote_depth=args.qos_promote_depth,
                     hysteresis=args.qos_hysteresis,
@@ -312,7 +346,7 @@ def main() -> None:
                        prefix_cache=not args.no_prefix_cache,
                        pool_wait_retries=args.pool_wait_retries
                        if args.pool_wait_retries >= 0 else None,
-                       qos=qos, trace=trace_cfg)
+                       qos=qos, trace=trace_cfg, ledger=ledger_cfg)
     mesh_shape = M.parse_mesh_arg(args.mesh) if args.mesh else None
 
     if args.dry_run:

@@ -273,8 +273,8 @@ def _merge_heads(x):
 
 def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
               positions=None, cache=None, index=None,
-              kv_source=None, pages=None) -> Tuple[jnp.ndarray,
-                                                   Optional[Dict]]:
+              kv_source=None, pages=None, probe=None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Full-sequence (train/prefill) or single-step (decode) GQA attention.
 
     cache: None (train) | dict with 'k','v' (and implicit layout by size).
@@ -284,6 +284,8 @@ def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
     'len'} — see module docstring); the cache leaves are then page-major
     (n_pages, KV, P, dh). Windowed layers with W < len stay resident slab
     leaves and ignore it.
+    probe: serve.ledger probe (or None) — taps the merged attention output
+    feeding the packed `wo` GEMM at trace time.
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -304,7 +306,10 @@ def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
         o = attention_positional(
             q, k.astype(x.dtype), v.astype(x.dtype), jnp.arange(s),
             jnp.arange(skv), causal=False, softcap=cfg.softcap, scale=cfg.scale)
-        y = kr.apply(params["wo"], _merge_heads(o), spec, backend=backend)
+        mo = _merge_heads(o)
+        if probe is not None:
+            probe.tap(mo, cfg.d_model)
+        y = kr.apply(params["wo"], mo, spec, backend=backend)
         return y, new_cache
 
     kv_in = x if kv_source is None else kv_source
@@ -344,7 +349,10 @@ def gqa_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
             q, new_cache["k"].astype(x.dtype), new_cache["v"].astype(x.dtype),
             positions, kv_pos, causal=cfg.causal, window=cfg.window,
             softcap=cfg.softcap, extra_mask=valid, scale=cfg.scale)
-    y = kr.apply(params["wo"], _merge_heads(o), spec, backend=backend)
+    mo = _merge_heads(o)
+    if probe is not None:
+        probe.tap(mo, cfg.d_model)
+    y = kr.apply(params["wo"], mo, spec, backend=backend)
     y = L.shard(y, "batch", None, "dm_in")   # see layers.mlp_apply note
     return y, new_cache
 
@@ -512,8 +520,8 @@ def _mla_expand_kv(params, c_kv, cfg, spec, backend):
 
 def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
               positions=None, cache=None, index=None,
-              kv_source=None, pages=None) -> Tuple[jnp.ndarray,
-                                                   Optional[Dict]]:
+              kv_source=None, pages=None, probe=None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     b, s, d = x.shape
     h = cfg.n_heads
     if positions is None:
@@ -596,7 +604,10 @@ def mla_apply(params, x, cfg: AttnConfig, *, spec=kr.DENSE, backend="ref",
     o = attn_fn(
         q, k, v, positions, kv_pos, causal=cfg.causal, window=cfg.window,
         softcap=cfg.softcap, extra_mask=valid, scale=cfg.scale)
-    y = kr.apply(params["wo"], _merge_heads(o), spec, backend=backend)
+    mo = _merge_heads(o)
+    if probe is not None:
+        probe.tap(mo, cfg.d_model)
+    y = kr.apply(params["wo"], mo, spec, backend=backend)
     y = L.shard(y, "batch", None, "dm_in")   # see layers.mlp_apply note
     return y, new_cache
 

@@ -121,7 +121,8 @@ def mlp_init(key, d: int, d_ff: int, *, gated: bool = True,
 
 
 def mlp_apply(params: Dict, x: jnp.ndarray, *, activation: str = "silu",
-              spec: kr.KratosSpec = kr.DENSE, backend: str = "ref") -> jnp.ndarray:
+              spec: kr.KratosSpec = kr.DENSE, backend: str = "ref",
+              probe=None) -> jnp.ndarray:
     act = ACTIVATIONS[activation]
     up = kr.apply(params["w_up"], x, spec, backend=backend)
     if "w_gate" in params:
@@ -130,6 +131,11 @@ def mlp_apply(params: Dict, x: jnp.ndarray, *, activation: str = "silu",
     else:
         h = act(up)
     h = shard(h, "batch", "seq", "ffn")
+    if probe is not None:
+        # the activation-sparsity site: ReLU-family nonlinearities zero a
+        # large fraction of h, and every zero row-element makes its w_down
+        # k-slice ineffectual (serve.ledger)
+        probe.tap(h, x.shape[-1])
     y = kr.apply(params["w_down"], h, spec, backend=backend)
     # pin the row-parallel product to batch-sharded rows: without this,
     # GSPMD may satisfy the weight's FSDP out-dim by all-gathering the

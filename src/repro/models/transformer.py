@@ -271,14 +271,36 @@ def _layer_init(key, cfg: ModelConfig, i: int, cross: bool = False) -> Dict:
     return p
 
 
+def _probe_fanout(cfg: ModelConfig, kind: Dict, site: str) -> int:
+    """Dense GEMM fan-out a probed activation feeds (serve.ledger probes:
+    the FLOP/byte columns are fan-out-weighted trace-time constants)."""
+    if site == "mixer":
+        if kind["mixer"] == "mamba":
+            return 2 * cfg.d_inner
+        if cfg.mla:
+            q = cfg.q_lora_rank if cfg.q_lora_rank \
+                else cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+            return int(q + cfg.kv_lora_rank + cfg.qk_rope_dim)
+        return (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.dh
+    if kind["ffn"] == "moe":
+        return int(cfg.n_experts
+                   + 2 * (cfg.top_k + cfg.n_shared_experts) * cfg.d_ff_expert)
+    gated = cfg.gated_mlp if cfg.gated_mlp is not None \
+        else cfg.activation in ("silu", "gelu", "gelu_tanh")
+    return (2 if gated else 1) * cfg.d_ff
+
+
 def _layer_apply(p: Dict, x, cfg: ModelConfig, kind: Dict, *, backend="ref",
                  positions=None, cache=None, index=None, enc_out=None,
-                 cross_cache=None, pages=None):
+                 cross_cache=None, pages=None, probe=None):
     """One residual block. Returns (x, aux, new_cache, new_cross_cache).
 
     pages: page-table operand for native paged decode — consumed by the
     ATTENTION mixer only (mamba state is O(1) resident, cross caches are
     written once at prefill; both keep the slab layout in the page store).
+    probe: serve.ledger probe (or None) — taps the normalized mixer/FFN
+    GEMM inputs (and, inside attention, the pre-wo merged heads) at trace
+    time; the forward drains one summed row per layer.
     """
     aux = jnp.zeros((), jnp.float32)
     rs = jnp.asarray(cfg.residual_scale, x.dtype)
@@ -288,12 +310,14 @@ def _layer_apply(p: Dict, x, cfg: ModelConfig, kind: Dict, *, backend="ref",
     # 'dm_in' resolves to None in training and to 'data' under the 2D-TP
     # serving rules (weights stay fully sharded; activations psum instead).
     h = L.shard(_norm(cfg, p["pre_norm"], x), "batch", None, "dm_in")
+    if probe is not None:
+        probe.tap(h, _probe_fanout(cfg, kind, "mixer"))
     new_cache = new_cross = None
     if kind["mixer"] == "attn":
         h, new_cache = A.attn_apply(
             p["mixer"], h, attn_cfg_for(cfg, kind), spec=cfg.kratos,
             backend=backend, positions=positions, cache=cache, index=index,
-            pages=pages)
+            pages=pages, probe=probe)
     else:
         h, new_cache = S.mamba_apply(
             p["mixer"], h, mamba_cfg_for(cfg), spec=cfg.kratos,
@@ -307,16 +331,18 @@ def _layer_apply(p: Dict, x, cfg: ModelConfig, kind: Dict, *, backend="ref",
                                    causal=False, use_rope=False)
         h, new_cross = A.attn_apply(
             p["cross"], h, ccfg, spec=cfg.kratos, backend=backend,
-            kv_source=enc_out, cache=cross_cache, index=index)
+            kv_source=enc_out, cache=cross_cache, index=index, probe=probe)
         x = x + h * rs
     if kind["ffn"] != "none":
         h = L.shard(_norm(cfg, p["ffn_norm"], x), "batch", None, "dm_in")
+        if probe is not None:
+            probe.tap(h, _probe_fanout(cfg, kind, "ffn"))
         if kind["ffn"] == "moe":
             h, aux = M.moe_apply(p["ffn"], h, moe_cfg_for(cfg),
                                  spec=cfg.kratos, backend=backend)
         else:
             h = L.mlp_apply(p["ffn"], h, activation=cfg.activation,
-                            spec=cfg.kratos, backend=backend)
+                            spec=cfg.kratos, backend=backend, probe=probe)
         if cfg.sandwich_norm:
             h = _norm(cfg, p["ffn_post_norm"], h)
         x = x + h * rs
@@ -429,9 +455,10 @@ def encode(params, frames: jnp.ndarray, cfg: ModelConfig, *, backend="ref"):
 
 def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
             img_embeds=None, enc_out=None, caches=None, index=None,
-            last_only: bool = False, pages=None,
-            ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
-    """Decoder forward. tokens: (B, S_text). Returns (logits, aux, caches).
+            last_only: bool = False, pages=None, probe=None,
+            ) -> Tuple[jnp.ndarray, ...]:
+    """Decoder forward. tokens: (B, S_text). Returns (logits, aux, caches) —
+    or (logits, aux, caches, probe_mat) when `probe` is passed.
 
     img_embeds: (B, n_img, d) vision-stub tokens prepended (llava).
     enc_out: (B, S_enc, d) encoder output for cross-attention (whisper).
@@ -448,6 +475,12 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
     attention leaves are PAGE-MAJOR store leaves (serve.paging
     PageLayout.as_tree) that the attention layers read/write through the
     table — no slab view is ever materialized. Requires `index` (decode).
+    probe: serve.ledger.LedgerProbe (or None). With a probe, every layer's
+    GEMM taps sum into one (probe.cfg.width,) row; prelude rows collect in
+    Python, scanned rows exit the layer scan as stacked ys, and the rows
+    assemble into an (n_layers, width) matrix appended to the return tuple.
+    Layer order is TRUE model order: scanned slot s, period t is layer
+    `prelude + t * scan_period + s`.
     """
     x = L.embed(params["embed"], tokens, scale=cfg.emb_scale).astype(cfg.adtype())
     if img_embeds is not None:
@@ -468,6 +501,8 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
     new_caches: Optional[Dict] = None if caches is None else \
         {"prelude": [], "blocks": [None] * cfg.scan_period}
 
+    prelude_rows: List[jnp.ndarray] = []
+
     # prelude layers (unscanned)
     for li, lp in enumerate(params["prelude"]):
         kind = layer_kind(cfg, li)
@@ -477,8 +512,10 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
         x, aux, nm, ncr = _layer_apply(
             lp, x, cfg, kind, backend=backend, positions=positions,
             cache=mc, index=index, enc_out=enc_out, cross_cache=cc,
-            pages=pages)
+            pages=pages, probe=probe)
         aux_total += aux
+        if probe is not None:
+            prelude_rows.append(probe.layer_row())
         if caches is not None:
             entry = {"mixer": nm}
             if ncr is not None:
@@ -487,6 +524,7 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
 
     # scanned periodic blocks
     n_periods = (cfg.n_layers - cfg.prelude_layers) // cfg.scan_period
+    slot_rows: List[jnp.ndarray] = []
     for slot in range(cfg.scan_period):
         kind = layer_kind(cfg, cfg.prelude_layers + slot)
         stacked = params["blocks"][slot]
@@ -503,17 +541,22 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
             x, a, nm, ncr = _layer_apply(
                 lp, x, cfg, _kind, backend=backend, positions=positions,
                 cache=mc, index=index, enc_out=enc_out, cross_cache=cc,
-                pages=pages)
+                pages=pages, probe=probe)
             out = None
             if caches is not None:
                 out = {"mixer": nm}
                 if ncr is not None:
                     out["cross"] = ncr
+            if probe is not None:
+                out = (out, probe.layer_row())   # row exits via scan ys
             return (x, aux + a), out
 
         xs = (stacked, c_stack) if caches is not None else stacked
         (x, aux_total), new_stack = jax.lax.scan(
             _remat_wrap(cfg, body), (x, aux_total), xs)
+        if probe is not None:
+            new_stack, rows = new_stack          # (n_periods, width)
+            slot_rows.append(rows)
         if caches is not None:
             new_caches["blocks"][slot] = new_stack
 
@@ -523,7 +566,17 @@ def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *, backend="ref",
     x = L.shard(x, "batch", "seq", None)
     logits = L.unembed(params["embed"], x, params.get("head"),
                        softcap=cfg.logit_softcap)
-    return logits, aux_total, new_caches
+    if probe is None:
+        return logits, aux_total, new_caches
+    # assemble the per-layer probe matrix in true layer order
+    mat = jnp.zeros((cfg.n_layers, probe.cfg.width), jnp.float32)
+    for li, row in enumerate(prelude_rows):
+        mat = mat.at[li].set(row)
+    for slot, rows in enumerate(slot_rows):
+        ids = cfg.prelude_layers + slot \
+            + cfg.scan_period * jnp.arange(n_periods)
+        mat = mat.at[ids].set(rows)
+    return logits, aux_total, new_caches, mat
 
 
 # ---------------------------------------------------------------------------

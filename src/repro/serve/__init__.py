@@ -90,6 +90,19 @@ Layout:
                  exports; a jax.profiler bracket around the first traced
                  dispatches. `EngineConfig.trace=None` serves the shared
                  NULL_TRACER — zero-cost disabled (gated by test).
+  ledger.py      ineffectual-work ledger (PR 9): a device-resident
+                 (n_layers, width) counter matrix carried through the fused
+                 decode/spec/suffix-prefill dispatches as DONATED loop
+                 state, updated in-graph by thresholded probes around the
+                 packed GEMMs (activation zero / near-zero fractions,
+                 per-group zero histograms, dead k-block counts, effective
+                 vs dense FLOPs/bytes) and drained once per dispatch INSIDE
+                 the existing token device_get — no extra host syncs.
+                 `LedgerSink` turns per-dispatch deltas into ServeMetrics
+                 counters + tracer counter tracks; `quality_every` shadow-
+                 runs sampled prefills through tier 0 for per-tier logit
+                 agreement. `EngineConfig.ledger=None` serves NULL_LEDGER —
+                 zero-cost disabled (gated by an allocation test).
   telemetry.py   live counter/gauge/histogram registry snapshotting
                  ServeMetrics + page pool + router queue depths on a
                  cadence; Prometheus text over stdlib http.server
@@ -129,6 +142,8 @@ from repro.serve.cache_pool import CachePool, PoolExhausted
 from repro.serve.chaos import ChaosHarness, Fault, seeded_schedule
 from repro.serve.engine import (EngineConfig, EngineSaturated,
                                 InferenceEngine, ReplicaFault)
+from repro.serve.ledger import (NULL_LEDGER, LedgerConfig, LedgerSink,
+                                hist_checksum)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.qos import (QoSConfig, QoSController, check_tier_spec,
                              parse_tiers)
@@ -155,6 +170,7 @@ __all__ = [
     "QoSConfig", "QoSController", "check_tier_spec", "parse_tiers",
     "ChaosHarness", "Fault", "seeded_schedule",
     "NULL_TRACER", "TraceConfig", "Tracer", "export_chrome", "export_jsonl",
+    "NULL_LEDGER", "LedgerConfig", "LedgerSink", "hist_checksum",
     "TelemetryConfig", "TelemetryExporter", "TelemetryRegistry",
     "engine_sample", "router_sample",
 ]

@@ -124,6 +124,9 @@ class ExecutionBackend:
         self.draft_params: Any = None
         self._pending_draft: Any = None        # draft prefill awaiting slot
         self.tier = 0                          # active QoS tier (0 = full)
+        self._ledger = None                    # serve.ledger.LedgerConfig
+        self.ledger_buf: Any = None            # donated device counter matrix
+        self.last_ledger: Optional[np.ndarray] = None  # cum @ last drain
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -201,6 +204,22 @@ class ExecutionBackend:
 
     def decode_block(self) -> np.ndarray:
         with self._ctx(), quiet_donation():
+            if self.ledger_buf is not None:
+                if self.paged:
+                    (tok_block, self.pool.store, self.pool.page_table,
+                     self.state, led) = self._decode(
+                        self.params, self.pool.store, self.pool.page_table,
+                        self.state, self.ledger_buf)
+                else:
+                    (tok_block, self.pool.caches, self.state,
+                     led) = self._decode(self.params, self.pool.caches,
+                                         self.state, self.ledger_buf)
+                self.ledger_buf = led
+                # ledger rides the dispatch's one existing sync — the drain
+                # costs zero extra host round-trips by construction
+                tok_block, self.last_ledger = jax.device_get(
+                    (tok_block, led))            # the ONLY decode sync
+                return np.asarray(tok_block)
             if self.paged:
                 (tok_block, self.pool.store, self.pool.page_table,
                  self.state) = self._decode(self.params, self.pool.store,
@@ -215,8 +234,24 @@ class ExecutionBackend:
             raise NotImplementedError(
                 f"{self.name} backend was not built with "
                 "EngineConfig.speculate")
+        led = None
         with self._ctx(), quiet_donation():
-            if self.paged:
+            if self.ledger_buf is not None:
+                if self.paged:
+                    (commit, n_commit, n_accept, self.pool.store,
+                     self.pool.page_table, self.draft_pool.caches,
+                     self.state, led) = self._spec_decode(
+                        self.params, self.draft_params, self.pool.store,
+                        self.pool.page_table, self.draft_pool.caches,
+                        self.state, self.ledger_buf)
+                else:
+                    (commit, n_commit, n_accept, self.pool.caches,
+                     self.draft_pool.caches, self.state,
+                     led) = self._spec_decode(
+                        self.params, self.draft_params, self.pool.caches,
+                        self.draft_pool.caches, self.state, self.ledger_buf)
+                self.ledger_buf = led
+            elif self.paged:
                 (commit, n_commit, n_accept, self.pool.store,
                  self.pool.page_table, self.draft_pool.caches,
                  self.state) = self._spec_decode(
@@ -227,10 +262,47 @@ class ExecutionBackend:
                  self.draft_pool.caches, self.state) = self._spec_decode(
                     self.params, self.draft_params, self.pool.caches,
                     self.draft_pool.caches, self.state)
-        commit, n_commit, n_accept = jax.device_get(
-            (commit, n_commit, n_accept))        # the ONLY decode sync
+        if led is not None:
+            commit, n_commit, n_accept, self.last_ledger = jax.device_get(
+                (commit, n_commit, n_accept, led))  # the ONLY decode sync
+        else:
+            commit, n_commit, n_accept = jax.device_get(
+                (commit, n_commit, n_accept))    # the ONLY decode sync
         return (np.asarray(commit), np.asarray(n_commit),
                 np.asarray(n_accept))
+
+    # -- ineffectual-work ledger (serve.ledger) -----------------------------
+
+    def maybe_rebase_ledger(self) -> bool:
+        """Zero the device counter matrix before any cell can lose f32
+        exactness (counts are integers, exact up to 2**24). Called by the
+        engine right after draining `last_ledger`; returning True tells the
+        LedgerSink to reset its cumulative snapshot to match."""
+        if (self.last_ledger is None
+                or float(self.last_ledger.max()) < float(2 ** 23)):
+            return False
+        with self._ctx():
+            self.ledger_buf = self._place_ledger_zeros()
+        self.last_ledger = None
+        return True
+
+    def _place_ledger_zeros(self):
+        return jnp.zeros((self.model.cfg.n_layers, self._ledger.width),
+                         jnp.float32)
+
+    def quality_shadow(self, batch: Dict[str, Any], exact: bool):
+        """Shadow-run one admitted prompt's prefill through TIER-0 params
+        and return its logits on host (the engine's per-tier quality
+        probe). A deliberate, metered host sync (ServeMetrics
+        kind='quality') at admission frequency / quality_every — never in
+        the decode hot path."""
+        fn = self._prefill_last if exact else self._prefill_full
+        with self._ctx():
+            logits, _ = fn(self._tier0_params(), batch)
+        return np.asarray(logits)
+
+    def _tier0_params(self):
+        return self.params            # single-tier backend: tier 0 is live
 
     def decode_host(self, tokens: np.ndarray, indices: np.ndarray):
         raise NotImplementedError(
@@ -294,9 +366,19 @@ class ExecutionBackend:
                 f"{self.name} backend was not built with a prefix-caching "
                 "paged pool (EngineConfig.page_size + prefix_cache)")
         with self._ctx(), quiet_donation():
-            logits, self.pool.store = self._suffix_prefill(
-                self.params, batch, self.pool.store, self.pool.page_table,
-                jnp.asarray(slot, jnp.int32), jnp.asarray(index, jnp.int32))
+            if self.ledger_buf is not None:
+                # ledger stays device-resident: drained at the next decode
+                # dispatch's sync, never here
+                (logits, self.pool.store,
+                 self.ledger_buf) = self._suffix_prefill(
+                    self.params, batch, self.pool.store,
+                    self.pool.page_table, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(index, jnp.int32), self.ledger_buf)
+            else:
+                logits, self.pool.store = self._suffix_prefill(
+                    self.params, batch, self.pool.store,
+                    self.pool.page_table, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(index, jnp.int32))
             if self.draft_pool is not None:
                 _, draft = self._draft_prefill(self.draft_params, full_batch)
                 self.draft_pool.write_slot(slot, draft)
@@ -344,24 +426,36 @@ class LocalBackend(ExecutionBackend):
             ST.make_prefill_step(mcfg, cfg.backend, last_only=True, **pkw))
         self._prefill_full = jax.jit(
             ST.make_prefill_step(mcfg, cfg.backend, last_only=False, **pkw))
+        ledger = getattr(cfg, "ledger", None) if cfg.device_loop else None
+        self._ledger = ledger
+        if ledger is not None:
+            self.ledger_buf = jnp.zeros((mcfg.n_layers, ledger.width),
+                                        jnp.float32)
         if cfg.device_loop:
             if cfg.page_size:
                 self._decode = jax.jit(
                     ST.make_paged_decode_step(
                         mcfg, cfg.backend, n_steps=cfg.decode_chunk,
                         layout=self.pool.layout,
-                        native=getattr(cfg, "paged_native", True)),
-                    donate_argnums=(1, 2, 3))  # store + table + state
+                        native=getattr(cfg, "paged_native", True),
+                        ledger=ledger),
+                    # store + table + state (+ ledger) update in place
+                    donate_argnums=(1, 2, 3) if ledger is None
+                    else (1, 2, 3, 4))
                 if self.pool.index is not None:
                     self._suffix_prefill = jax.jit(
                         ST.make_suffix_prefill_step(
-                            mcfg, cfg.backend, layout=self.pool.layout),
-                        donate_argnums=(2,))   # store updates in place
+                            mcfg, cfg.backend, layout=self.pool.layout,
+                            ledger=ledger),
+                        # store (+ ledger) update in place
+                        donate_argnums=(2,) if ledger is None else (2, 6))
             else:
                 self._decode = jax.jit(
                     ST.make_decode_step(mcfg, cfg.backend,
-                                        n_steps=cfg.decode_chunk),
-                    donate_argnums=(1, 2))   # slab + state update in place
+                                        n_steps=cfg.decode_chunk,
+                                        ledger=ledger),
+                    # slab + state (+ ledger) update in place
+                    donate_argnums=(1, 2) if ledger is None else (1, 2, 3))
             self._install = jax.jit(ST.install_slot, donate_argnums=(0,))
             self.state = ST.make_decode_state(cfg.n_slots, cfg.seed)
             self._sample_first = jax.jit(T.sample_tokens)
@@ -381,13 +475,22 @@ class LocalBackend(ExecutionBackend):
                     ST.make_paged_speculative_decode_step(
                         mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
                         layout=self.pool.layout,
-                        native=getattr(cfg, "paged_native", True)),
-                    donate_argnums=(2, 3, 4, 5))  # store+table+draft+state
+                        native=getattr(cfg, "paged_native", True),
+                        ledger=ledger),
+                    # store+table+draft+state (+ ledger)
+                    donate_argnums=(2, 3, 4, 5) if ledger is None
+                    else (2, 3, 4, 5, 6))
             else:
                 self._spec_decode = jax.jit(
                     ST.make_speculative_decode_step(
-                        mcfg, dcfg, cfg.backend, n_draft=cfg.speculate),
-                    donate_argnums=(2, 3, 4))   # both slabs + state in place
+                        mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
+                        ledger=ledger),
+                    # both slabs + state (+ ledger) in place
+                    donate_argnums=(2, 3, 4) if ledger is None
+                    else (2, 3, 4, 5))
+
+    def _tier0_params(self):
+        return self._tier_params[0]
 
     def decode_host(self, tokens, indices):
         logits, self.pool.caches = self._decode(
@@ -475,15 +578,28 @@ class ShardedBackend(ExecutionBackend):
             self._slot_spec = slot_spec
             self._tok_sharding = NamedSharding(
                 mesh, P(None, *tuple(slot_spec)))
+            # ledger counter matrix: REPLICATED — probe sums over the
+            # sharded slot axis all-reduce under GSPMD, and the drained
+            # matrix must read identically from every device
+            ledger = getattr(cfg, "ledger", None)
+            self._ledger = ledger
+            if ledger is not None:
+                self._ledger_sharding = NamedSharding(mesh, P())
+                self.ledger_buf = jax.device_put(
+                    jnp.zeros((mcfg.n_layers, ledger.width), jnp.float32),
+                    self._ledger_sharding)
             if cfg.page_size and self.pool.index is not None:
+                sfx_out = (NamedSharding(mesh, P()), self.pool.shardings)
+                if ledger is not None:
+                    sfx_out = sfx_out + (self._ledger_sharding,)
                 self._suffix_prefill = jax.jit(
                     ST.make_suffix_prefill_step(
-                        mcfg, cfg.backend, layout=self.pool.layout),
-                    donate_argnums=(2,),
+                        mcfg, cfg.backend, layout=self.pool.layout,
+                        ledger=ledger),
+                    donate_argnums=(2,) if ledger is None else (2, 6),
                     # logits replicated; store pinned to the donated
                     # input placement so aliasing survives pjit
-                    out_shardings=(NamedSharding(mesh, P()),
-                                   self.pool.shardings))
+                    out_shardings=sfx_out)
             self._install = jax.jit(ST.install_slot, donate_argnums=(0,),
                                     out_shardings=self.state_shardings)
             # batch-1 prefill: nothing to shard on the request axis; params
@@ -533,28 +649,33 @@ class ShardedBackend(ExecutionBackend):
 
         cfg, mcfg, mesh = self.cfg, self.model.cfg, self.mesh
         tok_sharding = self._tok_sharding
+        ledger = self._ledger
+        led_in = () if ledger is None else (self._ledger_sharding,)
         if cfg.page_size:
             decode = jax.jit(
                 ST.make_paged_decode_step(
                     mcfg, cfg.backend, n_steps=cfg.decode_chunk,
                     layout=self.pool.layout,
-                    native=getattr(cfg, "paged_native", True)),
-                donate_argnums=(1, 2, 3),
+                    native=getattr(cfg, "paged_native", True),
+                    ledger=ledger),
+                donate_argnums=(1, 2, 3) if ledger is None
+                else (1, 2, 3, 4),
                 in_shardings=(self.param_shardings, self.pool.shardings,
                               self.pool.table_sharding,
-                              self.state_shardings),
+                              self.state_shardings) + led_in,
                 out_shardings=(tok_sharding, self.pool.shardings,
                                self.pool.table_sharding,
-                               self.state_shardings))
+                               self.state_shardings) + led_in)
         else:
             decode = jax.jit(
                 ST.make_decode_step(mcfg, cfg.backend,
-                                    n_steps=cfg.decode_chunk),
-                donate_argnums=(1, 2),
+                                    n_steps=cfg.decode_chunk,
+                                    ledger=ledger),
+                donate_argnums=(1, 2) if ledger is None else (1, 2, 3),
                 in_shardings=(self.param_shardings, self.pool.shardings,
-                              self.state_shardings),
+                              self.state_shardings) + led_in,
                 out_shardings=(tok_sharding, self.pool.shardings,
-                               self.state_shardings))
+                               self.state_shardings) + led_in)
         steps = {"decode": decode}
         if cfg.speculate:
             dcfg = self.model.draft_cfg
@@ -566,38 +687,50 @@ class ShardedBackend(ExecutionBackend):
                     ST.make_paged_speculative_decode_step(
                         mcfg, dcfg, cfg.backend, n_draft=cfg.speculate,
                         layout=self.pool.layout,
-                        native=getattr(cfg, "paged_native", True)),
-                    donate_argnums=(2, 3, 4, 5),
+                        native=getattr(cfg, "paged_native", True),
+                        ledger=ledger),
+                    donate_argnums=(2, 3, 4, 5) if ledger is None
+                    else (2, 3, 4, 5, 6),
                     in_shardings=(self.param_shardings,
                                   self.draft_shardings,
                                   self.pool.shardings,
                                   self.pool.table_sharding,
                                   self.draft_pool.shardings,
-                                  self.state_shardings),
+                                  self.state_shardings) + led_in,
                     out_shardings=(commit_sharding, vec_sharding,
                                    vec_sharding, self.pool.shardings,
                                    self.pool.table_sharding,
                                    self.draft_pool.shardings,
-                                   self.state_shardings))
+                                   self.state_shardings) + led_in)
             else:
                 steps["spec"] = jax.jit(
                     ST.make_speculative_decode_step(mcfg, dcfg, cfg.backend,
-                                                    n_draft=cfg.speculate),
-                    donate_argnums=(2, 3, 4),
+                                                    n_draft=cfg.speculate,
+                                                    ledger=ledger),
+                    donate_argnums=(2, 3, 4) if ledger is None
+                    else (2, 3, 4, 5),
                     in_shardings=(self.param_shardings,
                                   self.draft_shardings,
                                   self.pool.shardings,
                                   self.draft_pool.shardings,
-                                  self.state_shardings),
+                                  self.state_shardings) + led_in,
                     out_shardings=(commit_sharding, vec_sharding,
                                    vec_sharding, self.pool.shardings,
                                    self.draft_pool.shardings,
-                                   self.state_shardings))
+                                   self.state_shardings) + led_in)
         return steps
 
     @property
     def n_tiers(self) -> int:
         return len(self._tier_placed)
+
+    def _tier0_params(self):
+        return self._tier_placed[0]
+
+    def _place_ledger_zeros(self):
+        return jax.device_put(
+            jnp.zeros((self.model.cfg.n_layers, self._ledger.width),
+                      jnp.float32), self._ledger_sharding)
 
     def set_tier(self, tier: int) -> None:
         if not 0 <= tier < self.n_tiers:

@@ -133,6 +133,7 @@ import numpy as np
 
 from repro.serve.backend import ExecutionBackend, LocalBackend
 from repro.serve.cache_pool import PoolExhausted
+from repro.serve.ledger import NULL_LEDGER, LedgerSink
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import PackedModel
 from repro.serve.scheduler import (ContinuousScheduler, Request,
@@ -203,6 +204,14 @@ class EngineConfig:
     # buffer, with optional JSONL/Chrome export paths and a jax.profiler
     # bracket around the first N traced dispatches.
     trace: Optional[TraceConfig] = None
+    # ineffectual-work ledger (serve.ledger): None = OFF, served by the
+    # shared NULL_LEDGER no-op sink (allocation-free hot path, gated by
+    # test_ledger). Set a ledger.LedgerConfig to carry a device-resident
+    # activation-sparsity / effective-FLOPs counter matrix as donated loop
+    # state through every fused dispatch, drained inside the dispatch's
+    # one existing host sync — plus the per-tier quality probe when
+    # LedgerConfig.quality_every > 0. Requires device_loop=True.
+    ledger: Optional[Any] = None
 
 
 class InferenceEngine:
@@ -235,6 +244,10 @@ class InferenceEngine:
         if cfg.pool_wait_retries is not None and cfg.pool_wait_retries < 0:
             raise ValueError(f"pool_wait_retries must be >= 0 or None, got "
                              f"{cfg.pool_wait_retries}")
+        if cfg.ledger is not None and not cfg.device_loop:
+            raise ValueError("ledger requires device_loop=True (the counter "
+                             "matrix rides the fused dispatch's donated "
+                             "loop state; the host loop has no fused step)")
         if cfg.speculate:
             from repro.serve import speculative as SP
             if not cfg.device_loop:
@@ -274,6 +287,20 @@ class InferenceEngine:
         self.pool.tracer = self.trace
         if self.backend.draft_pool is not None:
             self.backend.draft_pool.tracer = self.trace
+        # ineffectual-work ledger (serve.ledger): the sink folds each
+        # dispatch's drained counter delta into float64 running totals and
+        # fans it out to metrics + tracer; NULL_LEDGER keeps the disabled
+        # hot path allocation-free (one attribute lookup + fixed-arity
+        # no-op call per dispatch).
+        if cfg.ledger is not None:
+            self.ledger = LedgerSink(cfg.ledger, mcfg.n_layers,
+                                     metrics=self.metrics, tracer=self.trace)
+        else:
+            self.ledger = NULL_LEDGER
+        self._quality_every = cfg.ledger.quality_every \
+            if cfg.ledger is not None else 0
+        self._quality_count = 0        # full-prefill admissions since probe
+        self.quality_log: List[Dict[str, Any]] = []
         # per-dispatch host-sync payload, precomputed so every hot-path
         # tracer call passes only pre-existing values (the zero-allocation
         # contract of the disabled path — tests/test_trace.py)
@@ -735,6 +762,16 @@ class InferenceEngine:
             # (1, vocab) on device: the true prompt-end column
             row = logits[:, -1] if sp == s0 else logits[:, n_img + s0 - 1]
             self.backend.write_slot(slot, caches)
+            if self._quality_every:
+                # every quality_every-th FULL-prefill admission (prefix-hit
+                # suffixes are skipped: their logits depend on page state
+                # the offline recompute can't replay standalone)
+                self._quality_count += 1
+                if self._quality_count >= self._quality_every:
+                    self._quality_count = 0
+                    self._quality_probe(
+                        r, batch, row, sp == s0,
+                        -1 if sp == s0 else n_img + s0 - 1)
         if not r.extras:
             # publish the prompt's full pages for future admissions (a
             # no-op on the slab pool / prefix-unsupported archs)
@@ -773,6 +810,29 @@ class InferenceEngine:
             self._indices[slot] = r.index
         self._emit(r, tok, self.step_count)  # may finish (max_new_tokens == 1)
 
+    def _quality_probe(self, r: Request, batch, row, exact: bool,
+                       col: int) -> None:
+        """Per-tier quality probe (serve.ledger): shadow-run this
+        admission's prefill through TIER-0 params and compare the sampled
+        logits column host-side — top-1 agreement + mean |Δlogit| recorded
+        per active (sparsity, bits) tier. Two deliberate host pulls,
+        metered as kind='quality' so `host_syncs_decode` stays exactly the
+        decode-dispatch count. Both prefills are deterministic functions of
+        (prompt, params), so an offline recompute of the same slot
+        reproduces these gauges EXACTLY (tests/test_ledger.py)."""
+        shadow = self.backend.quality_shadow(batch, exact)
+        ref = np.asarray(shadow[:, col][0], np.float64)
+        mine = np.asarray(row)[0].astype(np.float64)
+        self.metrics.on_host_sync("quality", 2)
+        self.trace.host_sync("quality", 8 * mine.size)
+        top1 = bool(int(np.argmax(mine)) == int(np.argmax(ref)))
+        mad = float(np.mean(np.abs(mine - ref)))
+        tier = self.backend.tier
+        self.metrics.on_quality_probe(tier, top1, mad)
+        self.trace.quality_probe(r.id, tier, top1, mad)
+        self.quality_log.append({"rid": r.id, "tier": tier,
+                                 "top1": top1, "mad": mad})
+
     def _decode_block(self) -> int:
         """Device-resident path: ONE dispatch = K fused micro-steps; sync a
         (K, B) int32 token block and catch host bookkeeping up to it."""
@@ -788,6 +848,14 @@ class InferenceEngine:
             self.trace.gather_avoided(self._gather_bytes)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
+        # ledger drain rides the dispatch sync above — no extra crossing
+        self.ledger.on_drain(self.backend.last_ledger, self.step_count)
+        if self.ledger.enabled and self.backend.maybe_rebase_ledger():
+            self.ledger.rebase()
+        # mirror the tracer's cumulative ring-buffer drop count so
+        # report()/telemetry surface lost trace events (an int attribute
+        # store: allocation-free on the disabled path)
+        self.metrics.trace_dropped = self.trace.dropped
         # fault detection at the host/device boundary: a healthy fused step
         # emits argmax/Gumbel-argmax indices, ALWAYS in [0, vocab) — an
         # out-of-range token in a live column is proof of a corrupted
@@ -842,6 +910,14 @@ class InferenceEngine:
             self.trace.gather_avoided(self._gather_bytes)
         self.metrics.on_host_sync("decode")
         self.trace.host_sync("decode", self._sync_bytes)
+        # ledger drain rides the dispatch sync above — no extra crossing
+        self.ledger.on_drain(self.backend.last_ledger, self.step_count)
+        if self.ledger.enabled and self.backend.maybe_rebase_ledger():
+            self.ledger.rebase()
+        # mirror the tracer's cumulative ring-buffer drop count so
+        # report()/telemetry surface lost trace events (an int attribute
+        # store: allocation-free on the disabled path)
+        self.metrics.trace_dropped = self.trace.dropped
         # fault detection (see _decode_block): validate every live slot's
         # committed prefix BEFORE any emission side effects
         for slot in range(self.cfg.n_slots):

@@ -1,0 +1,278 @@
+"""Device-resident ineffectual-work ledger for the serving hot path.
+
+Kratos's thesis is that ineffectual operations — zero weights, zero
+activations, dead bits — can be skipped entirely. The repo accounts for
+weight-side savings analytically (packed nnz-block FLOPs,
+`draft_cost_fraction`); this module measures the *activation* side at
+runtime, on device, inside the fused decode/spec/suffix-prefill steps:
+
+  * per-layer activation zero / near-zero(|x| <= threshold) element counts
+    around the packed GEMMs (probe taps in models.transformer /
+    models.attention);
+  * per-group zero histograms (sparseCNN-style: consecutive `group`-channel
+    groups, bin j = groups with exactly j near-zero channels);
+  * dead k-block counts at the configured block geometry — activation rows
+    whose `k_block` consecutive channels are all near-zero, i.e. exactly
+    what an activation-skipping GEMM at that geometry would have skipped;
+  * effective-vs-dense FLOPs/bytes per probed GEMM (the weight-read and
+    MAC work the dead k-blocks would have saved).
+
+The probe emits one fixed-width f32 row per GEMM tap; rows sum per layer
+into an `(n_layers, width)` matrix that the fused steps carry as DONATED
+loop state (a `lax.scan` carry across the K micro-steps) and return
+alongside the token block, so the engine drains it in the same
+`device_get` that already syncs the tokens — zero extra host syncs.
+Counters accumulate on device in f32 (exact up to 2**24); the backend
+rebases the buffer to zero before any cell approaches that, and the
+`LedgerSink` keeps the running float64 totals host-side.
+
+Everything is optional: models take `probe=None` (no in-graph ops traced
+when absent), the engine wires `NULL_LEDGER` when `EngineConfig.ledger`
+is None — a fixed-arity no-op singleton whose hot-path calls allocate
+nothing (gated by tests/test_ledger.py::test_null_ledger_zero_alloc,
+same idiom as trace.NULL_TRACER).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import numpy as np
+
+# jnp is imported lazily inside LedgerProbe so that host-side consumers
+# (qor gating, roofline joins) can import the schema without jax.
+
+
+# ---------------------------------------------------------------- schema
+
+# Fixed columns of a probe row; histogram bins follow (group + 1 of them).
+C_ELEMS = 0          # activation elements probed
+C_ZEROS = 1          # exact zeros
+C_NEAR = 2           # |x| <= threshold
+C_GROUPS = 3         # channel groups probed
+C_KBLOCKS = 4        # k-blocks examined (per activation row)
+C_DEAD_KB = 5        # k-blocks entirely near-zero (skippable work)
+C_FLOPS_DENSE = 6    # dense MACs*2 the probed GEMMs would do
+C_FLOPS_EFF = 7      # ... minus the dead-k-block share
+C_BYTES_DENSE = 8    # act read + weight read + out write, dense
+C_BYTES_EFF = 9      # weight-read term scaled by the live-k-block share
+N_FIXED = 10
+C_HIST = N_FIXED     # first histogram bin (bin j = j near-zero channels)
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerConfig:
+    """Knobs for the ineffectual-work probes (launch/serve flags map here).
+
+    threshold: |x| <= threshold counts as near-zero (0.0 = exact zeros
+    only — the right setting for ReLU-family archs where true zeros are
+    the signal). group: channels per histogram group. k_block: contraction
+    block the dead-block accounting assumes (what an activation-skipping
+    GEMM would tile k by). quality_every: shadow-run every Nth admitted
+    request's prefill logits through tier 0 (0 = never).
+    """
+
+    threshold: float = 0.0
+    group: int = 8
+    k_block: int = 32
+    quality_every: int = 0
+
+    @property
+    def width(self) -> int:
+        return N_FIXED + self.group + 1
+
+
+def probe_width(cfg: LedgerConfig) -> int:
+    return cfg.width
+
+
+def hist_checksum(mat: np.ndarray, group: int) -> float:
+    """Order-sensitive scalar over the per-layer histograms — one number
+    benchmarks/qor.py can gate EXACTLY (bit-determinism of the whole
+    histogram matrix collapses to equality of this sum)."""
+    mat = np.asarray(mat, np.float64)
+    h = mat[:, C_HIST:C_HIST + group + 1]
+    weights = np.arange(1, group + 2, dtype=np.float64)
+    return float((h * weights[None, :]).sum())
+
+
+# ----------------------------------------------------------------- probe
+
+class LedgerProbe:
+    """Trace-time tap collector: models call `tap(x, n_out)` around their
+    packed GEMMs; the forward drains the accumulated rows once per layer
+    (`layer_row`). Python-list state only lives within one layer's trace
+    (no scan boundary crosses a tap/drain pair), so the same probe object
+    threads through prelude loop and scan body alike.
+    """
+
+    def __init__(self, cfg: LedgerConfig):
+        self.cfg = cfg
+        self._taps: List[Any] = []
+
+    # -- in-graph measurement --------------------------------------------
+
+    def measure(self, x, n_out: int):
+        """One probe row for activation `x` (..., d) feeding a GEMM with
+        fan-out `n_out`. All counts f32; shapes are static so the dense
+        FLOP/byte terms are trace-time constants."""
+        import jax.numpy as jnp
+
+        cfg = self.cfg
+        x = x.astype(jnp.float32)
+        d = x.shape[-1]
+        flat = x.reshape(-1, d)
+        rows = int(flat.shape[0])
+        ax = jnp.abs(flat)
+        near_mask = ax <= cfg.threshold
+        n_zero = jnp.sum(flat == 0.0).astype(jnp.float32)
+        n_near = jnp.sum(near_mask).astype(jnp.float32)
+
+        g = cfg.group
+        dg = d // g
+        hist = jnp.zeros((g + 1,), jnp.float32)
+        n_groups = 0.0
+        if dg:
+            cnt = jnp.sum(near_mask[:, :dg * g].reshape(rows, dg, g), axis=-1)
+            hist = jnp.sum(
+                (cnt[..., None] == jnp.arange(g + 1)[None, None, :]),
+                axis=(0, 1)).astype(jnp.float32)
+            n_groups = float(rows * dg)
+
+        kb = cfg.k_block
+        dk = d // kb
+        n_kb = float(rows * dk)
+        if dk:
+            dead = jnp.sum(jnp.all(
+                near_mask[:, :dk * kb].reshape(rows, dk, kb), axis=-1)
+            ).astype(jnp.float32)
+            live_frac = 1.0 - dead / max(n_kb, 1.0)
+        else:
+            dead = jnp.zeros((), jnp.float32)
+            live_frac = jnp.float32(1.0)
+
+        flops_dense = float(2 * rows * d * n_out)
+        itemsize = 4                      # probe accounting is f32-denominated
+        act_bytes = float(itemsize * (rows * d + rows * n_out))
+        w_bytes = float(itemsize * d * n_out)
+        fixed = jnp.stack([
+            jnp.float32(rows * d), n_zero, n_near,
+            jnp.float32(n_groups), jnp.float32(n_kb), dead,
+            jnp.float32(flops_dense), flops_dense * live_frac,
+            jnp.float32(act_bytes + w_bytes), act_bytes + w_bytes * live_frac,
+        ])
+        return jnp.concatenate([fixed, hist])
+
+    def tap(self, x, n_out: int) -> None:
+        self._taps.append(self.measure(x, n_out))
+
+    def layer_row(self):
+        """Sum + clear the taps accumulated during one layer application."""
+        import jax.numpy as jnp
+
+        rows = self._taps
+        self._taps = []
+        if not rows:
+            return jnp.zeros((self.cfg.width,), jnp.float32)
+        out = rows[0]
+        for r in rows[1:]:
+            out = out + r
+        return out
+
+
+# ------------------------------------------------------------------ sink
+
+class NullLedger:
+    """No-op ledger sink: the engine's hot path calls these unconditionally
+    when the ledger is disabled, so they must be fixed-arity and allocate
+    NOTHING (tests/test_ledger.py::test_null_ledger_zero_alloc)."""
+
+    enabled = False
+    total = None
+
+    def on_drain(self, cum, step):
+        return None
+
+    def rebase(self):
+        return None
+
+    def summary(self):
+        return {}
+
+
+NULL_LEDGER = NullLedger()
+
+
+class LedgerSink(NullLedger):
+    """Host-side accumulator behind the per-dispatch drain.
+
+    `on_drain(cum, step)` receives the CUMULATIVE device matrix pulled in
+    the dispatch's one existing sync, computes the per-dispatch delta
+    against the previous snapshot, folds it into float64 running totals,
+    and fans the delta out to `ServeMetrics.on_ledger` and the tracer's
+    `ledger_dispatch` hook (Chrome counter tracks ride on those events).
+    `rebase()` resets the snapshot when the backend zeroes the device
+    buffer (f32 exactness headroom)."""
+
+    enabled = True
+
+    def __init__(self, cfg: LedgerConfig, n_layers: int, *, metrics=None,
+                 tracer=None):
+        self.cfg, self.n_layers = cfg, n_layers
+        self.metrics, self.tracer = metrics, tracer
+        shape = (n_layers, cfg.width)
+        self._prev = np.zeros(shape, np.float64)
+        self.total = np.zeros(shape, np.float64)
+
+    def on_drain(self, cum, step):
+        if cum is None:
+            return None
+        cum = np.asarray(cum, np.float64)
+        delta = cum - self._prev
+        self._prev = cum
+        self.total = self.total + delta
+        t = delta.sum(axis=0)
+        if self.metrics is not None:
+            self.metrics.on_ledger(
+                elems=t[C_ELEMS], zeros=t[C_ZEROS], near=t[C_NEAR],
+                groups=t[C_GROUPS], kblocks=t[C_KBLOCKS],
+                dead_kblocks=t[C_DEAD_KB],
+                flops_dense=t[C_FLOPS_DENSE], flops_eff=t[C_FLOPS_EFF],
+                bytes_dense=t[C_BYTES_DENSE], bytes_eff=t[C_BYTES_EFF])
+        if self.tracer is not None:
+            elems = max(t[C_ELEMS], 1.0)
+            kb = max(t[C_KBLOCKS], 1.0)
+            fd = max(t[C_FLOPS_DENSE], 1.0)
+            self.tracer.ledger_dispatch(
+                step, t[C_ZEROS] / elems, t[C_NEAR] / elems,
+                t[C_DEAD_KB] / kb, t[C_FLOPS_EFF] / fd,
+                t[C_FLOPS_DENSE], t[C_FLOPS_EFF])
+        return delta
+
+    def rebase(self):
+        self._prev = np.zeros_like(self._prev)
+
+    def summary(self) -> Dict[str, Any]:
+        """Bench/analysis view of the running totals: per-layer fractions +
+        the full histogram matrix + the qor-gateable checksum."""
+        tot = self.total
+        elems = np.maximum(tot[:, C_ELEMS], 1.0)
+        kb = np.maximum(tot[:, C_KBLOCKS], 1.0)
+        return {
+            "n_layers": self.n_layers,
+            "act_probe_elems": float(tot[:, C_ELEMS].sum()),
+            "act_zeros": float(tot[:, C_ZEROS].sum()),
+            "act_near_zeros": float(tot[:, C_NEAR].sum()),
+            "act_kblocks": float(tot[:, C_KBLOCKS].sum()),
+            "act_dead_kblocks": float(tot[:, C_DEAD_KB].sum()),
+            "flops_dense": float(tot[:, C_FLOPS_DENSE].sum()),
+            "flops_effective": float(tot[:, C_FLOPS_EFF].sum()),
+            "bytes_dense": float(tot[:, C_BYTES_DENSE].sum()),
+            "bytes_effective": float(tot[:, C_BYTES_EFF].sum()),
+            "zero_fraction_by_layer": (tot[:, C_ZEROS] / elems).tolist(),
+            "dead_kblock_fraction_by_layer":
+                (tot[:, C_DEAD_KB] / kb).tolist(),
+            "hist": tot[:, C_HIST:].tolist(),
+            "act_hist_checksum": hist_checksum(tot, self.cfg.group),
+        }

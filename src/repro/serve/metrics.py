@@ -102,6 +102,25 @@ class ServeMetrics:
         self.failovers = 0                    # requests re-admitted HERE off
         #                                       a dead replica (destination-
         #                                       side count: sums cleanly)
+        # ineffectual-work ledger (serve.ledger): exact integer counts
+        # drained from the device matrix, accumulated in float64
+        self.ledger_dispatches = 0            # dispatches with a drain
+        self.act_probe_elems = 0.0            # activation elements probed
+        self.act_zeros = 0.0                  # exact zeros among them
+        self.act_near_zeros = 0.0             # |x| <= threshold
+        self.act_groups = 0.0                 # histogram groups probed
+        self.act_kblocks = 0.0                # k-blocks examined
+        self.act_dead_kblocks = 0.0           # ... entirely near-zero
+        self.flops_dense = 0.0                # dense FLOPs at probed GEMMs
+        self.flops_effective = 0.0            # minus the dead-k-block share
+        self.bytes_dense = 0.0
+        self.bytes_effective = 0.0
+        # per-tier quality probe: tier -> [n, top1 matches, mad sum]
+        self.quality_probes = 0
+        self.quality: Dict[int, List[float]] = {}
+        # trace ring-buffer losses (the tracer's cumulative drop count,
+        # mirrored here per dispatch so report()/telemetry surface it)
+        self.trace_dropped = 0
 
     # -- recording hooks (called by the engine) -----------------------------
 
@@ -145,7 +164,10 @@ class ServeMetrics:
 
     def on_host_sync(self, kind: str, n: int = 1) -> None:
         """Record `n` host<->device crossings of the given kind
-        ('decode' | 'prefill')."""
+        ('decode' | 'prefill' | 'quality'). Quality-probe pulls are metered
+        under their own kind so `host_syncs_decode` stays EXACTLY the
+        decode-dispatch count — the no-extra-syncs contract the ledger
+        tests gate."""
         self.host_syncs[kind] = self.host_syncs.get(kind, 0) + n
 
     def on_spec_dispatch(self, proposed: int, accepted: int) -> None:
@@ -222,6 +244,44 @@ class ServeMetrics:
         self.page_samples.append(in_use)
         self.page_capacity = capacity
 
+    def on_ledger(self, *, elems: float, zeros: float, near: float,
+                  groups: float, kblocks: float, dead_kblocks: float,
+                  flops_dense: float, flops_eff: float, bytes_dense: float,
+                  bytes_eff: float) -> None:
+        """One drained dispatch delta from the device ineffectual-work
+        ledger (serve.ledger LedgerSink.on_drain). All values are exact
+        integer counts carried in float64."""
+        self.ledger_dispatches += 1
+        self.act_probe_elems += elems
+        self.act_zeros += zeros
+        self.act_near_zeros += near
+        self.act_groups += groups
+        self.act_kblocks += kblocks
+        self.act_dead_kblocks += dead_kblocks
+        self.flops_dense += flops_dense
+        self.flops_effective += flops_eff
+        self.bytes_dense += bytes_dense
+        self.bytes_effective += bytes_eff
+
+    def on_quality_probe(self, tier: int, top1: bool, mad: float) -> None:
+        """One shadow-prefill quality sample against tier 0 (serve.ledger):
+        whether the probed slot's top-1 token agreed, and the mean absolute
+        logit difference over the sampled column."""
+        self.quality_probes += 1
+        q = self.quality.setdefault(tier, [0.0, 0.0, 0.0])
+        q[0] += 1.0
+        q[1] += 1.0 if top1 else 0.0
+        q[2] += mad
+
+    def quality_by_tier(self) -> Dict[int, Dict[str, float]]:
+        """Per-(sparsity, bits)-tier quality gauges from the shadow
+        probes: sample count, top-1 agreement rate vs tier 0, mean
+        |Δlogit| over the probed columns."""
+        return {t: {"probes": q[0],
+                    "top1_rate": q[1] / max(1.0, q[0]),
+                    "logit_mad": q[2] / max(1.0, q[0])}
+                for t, q in sorted(self.quality.items())}
+
     # -- report -------------------------------------------------------------
 
     def report(self) -> Dict[str, float]:
@@ -242,6 +302,7 @@ class ServeMetrics:
             "idle_steps": float(self.idle_steps),
             "host_syncs_decode": float(self.host_syncs.get("decode", 0)),
             "host_syncs_prefill": float(self.host_syncs.get("prefill", 0)),
+            "host_syncs_quality": float(self.host_syncs.get("quality", 0)),
             "host_syncs_per_token": self.host_syncs.get("decode", 0)
             / max(1, decoded),
             "wall_seconds": elapsed,
@@ -294,6 +355,34 @@ class ServeMetrics:
             "deadline_missed": float(self.deadline_missed),
             "shed_pool_pressure": float(self.shed_pool_pressure),
             "failovers": float(self.failovers),
+            # ineffectual-work ledger: exact counters + derived fractions
+            "ledger_dispatches": float(self.ledger_dispatches),
+            "act_probe_elems": float(self.act_probe_elems),
+            "act_zeros": float(self.act_zeros),
+            "act_near_zeros": float(self.act_near_zeros),
+            "act_groups": float(self.act_groups),
+            "act_kblocks": float(self.act_kblocks),
+            "act_dead_kblocks": float(self.act_dead_kblocks),
+            "act_zero_fraction": self.act_zeros
+            / max(1.0, self.act_probe_elems),
+            "act_near_zero_fraction": self.act_near_zeros
+            / max(1.0, self.act_probe_elems),
+            "dead_kblock_fraction": self.act_dead_kblocks
+            / max(1.0, self.act_kblocks),
+            "flops_dense": float(self.flops_dense),
+            "flops_effective": float(self.flops_effective),
+            "effective_flop_fraction": self.flops_effective
+            / max(1.0, self.flops_dense),
+            "bytes_dense": float(self.bytes_dense),
+            "bytes_effective": float(self.bytes_effective),
+            # per-tier quality probe (pooled; per-tier via quality_by_tier)
+            "quality_probes": float(self.quality_probes),
+            "quality_top1_rate": sum(q[1] for q in self.quality.values())
+            / max(1.0, float(self.quality_probes)),
+            "quality_logit_mad": sum(q[2] for q in self.quality.values())
+            / max(1.0, float(self.quality_probes)),
+            # trace ring-buffer losses
+            "trace_dropped": float(self.trace_dropped),
         }
 
     @staticmethod
@@ -337,6 +426,20 @@ class ServeMetrics:
         elapsed = max(max((time.perf_counter() - m.t0 for m in metrics_list),
                           default=0.0), 1e-9)
         tokens_per_dispatch = tokens / max(1, dispatches)
+        # fleet-pooled ledger: counters sum; fractions re-derive from the
+        # pooled numerators/denominators (never a mean of per-replica rates)
+        led_elems = sum(m.act_probe_elems for m in metrics_list)
+        led_zeros = sum(m.act_zeros for m in metrics_list)
+        led_near = sum(m.act_near_zeros for m in metrics_list)
+        led_kb = sum(m.act_kblocks for m in metrics_list)
+        led_dead = sum(m.act_dead_kblocks for m in metrics_list)
+        led_fd = sum(m.flops_dense for m in metrics_list)
+        led_fe = sum(m.flops_effective for m in metrics_list)
+        qn = sum(float(m.quality_probes) for m in metrics_list)
+        q_top1 = sum(q[1] for m in metrics_list
+                     for q in m.quality.values())
+        q_mad = sum(q[2] for m in metrics_list
+                    for q in m.quality.values())
         return {
             "n_replicas": float(len(metrics_list)),
             "requests_completed": float(len(done)),
@@ -348,6 +451,8 @@ class ServeMetrics:
             "host_syncs_decode": float(syncs_d),
             "host_syncs_prefill": float(sum(
                 m.host_syncs.get("prefill", 0) for m in metrics_list)),
+            "host_syncs_quality": float(sum(
+                m.host_syncs.get("quality", 0) for m in metrics_list)),
             "host_syncs_per_token": syncs_d / max(1, decoded),
             "wall_seconds": elapsed,
             "tok_per_s": tokens / elapsed,
@@ -393,6 +498,29 @@ class ServeMetrics:
             "shed_pool_pressure": float(sum(m.shed_pool_pressure
                                             for m in metrics_list)),
             "failovers": float(sum(m.failovers for m in metrics_list)),
+            # fleet-pooled ineffectual-work ledger
+            "ledger_dispatches": float(sum(m.ledger_dispatches
+                                           for m in metrics_list)),
+            "act_probe_elems": float(led_elems),
+            "act_zeros": float(led_zeros),
+            "act_near_zeros": float(led_near),
+            "act_groups": float(sum(m.act_groups for m in metrics_list)),
+            "act_kblocks": float(led_kb),
+            "act_dead_kblocks": float(led_dead),
+            "act_zero_fraction": led_zeros / max(1.0, led_elems),
+            "act_near_zero_fraction": led_near / max(1.0, led_elems),
+            "dead_kblock_fraction": led_dead / max(1.0, led_kb),
+            "flops_dense": float(led_fd),
+            "flops_effective": float(led_fe),
+            "effective_flop_fraction": led_fe / max(1.0, led_fd),
+            "bytes_dense": float(sum(m.bytes_dense for m in metrics_list)),
+            "bytes_effective": float(sum(m.bytes_effective
+                                         for m in metrics_list)),
+            "quality_probes": float(qn),
+            "quality_top1_rate": q_top1 / max(1.0, qn),
+            "quality_logit_mad": q_mad / max(1.0, qn),
+            "trace_dropped": float(sum(m.trace_dropped
+                                       for m in metrics_list)),
             "mean_occupancy": occ_num / occ_den if occ_den else 0.0,
             "latency_steps_p50": percentile(lat_steps, 50),
             "latency_steps_p99": percentile(lat_steps, 99),
@@ -419,6 +547,13 @@ class ServeMetrics:
             if self.gather_bytes_avoided:
                 spec += (f" | gather avoided "
                          f"{self.gather_bytes_avoided / 1e6:.1f} MB")
+        if self.ledger_dispatches:
+            spec += (f" | act zeros {r['act_zero_fraction']:.2f} "
+                     f"(dead k-blocks {r['dead_kblock_fraction']:.2f}, "
+                     f"eff flops {r['effective_flop_fraction']:.2f})")
+            if self.quality_probes:
+                spec += (f" | quality top1 {r['quality_top1_rate']:.2f} "
+                         f"over {self.quality_probes} probes")
         if self.shed or self.tier_demotions or self.failovers:
             spec += (f" | shed {self.shed} "
                      f"(deadline {self.deadline_missed}, "

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.instrument import REGISTRY
 from repro.models import transformer as T
 from repro.serve.cache_pool import PoolExhausted, quiet_donation
 from repro.serve.prefix import PrefixIndex
@@ -80,10 +81,12 @@ from repro.serve.trace import NULL_TRACER
 # (op, n_paged_leaves, slab_view_bytes) appended at TRACE time whenever a
 # full gather/scatter materializes the slab view — the paged analogue of
 # kernels.pallas_compat.SKINNY_M_EVENTS. Native paged decode must trace
-# ZERO of these; tests and serve_bench assert it. Callers may clear it.
-# (gather_one/scatter_one — admission-path slot installs — do not count:
-# they are off the decode hot path by design.)
-GATHER_EVENTS: List[Tuple[str, int, int]] = []
+# ZERO of these; tests and serve_bench assert it. Registry-backed
+# (repro.instrument.REGISTRY, stream "gather") with scoped reset; the
+# historical name aliases the same list. (gather_one/scatter_one —
+# admission-path slot installs — do not count: they are off the decode hot
+# path by design.)
+GATHER_EVENTS = REGISTRY.event_list("gather")
 
 
 def prefix_supported(cfg: T.ModelConfig) -> bool:

@@ -211,6 +211,11 @@ _COUNTER_KEYS = frozenset((
     "tier_demotions", "tier_promotions", "shed", "deadline_missed",
     "shed_pool_pressure", "failovers", "rejected_fleet", "replica_deaths",
     "restarts",
+    # ineffectual-work ledger + quality probes (serve.ledger)
+    "ledger_dispatches", "act_probe_elems", "act_zeros", "act_near_zeros",
+    "act_groups", "act_kblocks", "act_dead_kblocks",
+    "flops_dense", "flops_effective", "bytes_dense", "bytes_effective",
+    "quality_probes", "host_syncs_quality", "trace_dropped",
 ))
 
 

@@ -93,6 +93,7 @@ class NullTracer:
     def __init__(self) -> None:
         self.step = 0
         self.replica = 0
+        self.dropped = 0     # ring-buffer losses: always 0 when disabled
 
     # -- lifecycle edges ----------------------------------------------------
 
@@ -129,6 +130,15 @@ class NullTracer:
         pass
 
     def host_sync(self, kind, n_bytes):
+        pass
+
+    # -- ineffectual-work ledger edges (serve.ledger) -----------------------
+
+    def ledger_dispatch(self, step, zero_frac, near_frac, dead_frac,
+                        eff_flop_frac, flops_dense, flops_eff):
+        pass
+
+    def quality_probe(self, rid, tier, top1, mad):
         pass
 
     # -- page-pool edges ----------------------------------------------------
@@ -265,6 +275,23 @@ class Tracer(NullTracer):
     def host_sync(self, kind, n_bytes):
         self._push({"ev": "host_sync", "step": self.step, "t": self._t(),
                     "kind": kind, "bytes": n_bytes})
+
+    def ledger_dispatch(self, step, zero_frac, near_frac, dead_frac,
+                        eff_flop_frac, flops_dense, flops_eff):
+        """Per-dispatch drained ledger fractions (serve.ledger): rendered
+        as Chrome counter tracks alongside occupancy."""
+        self._push({"ev": "ledger", "step": step, "t": self._t(),
+                    "zero_frac": float(zero_frac),
+                    "near_frac": float(near_frac),
+                    "dead_frac": float(dead_frac),
+                    "eff_flop_frac": float(eff_flop_frac),
+                    "flops_dense": float(flops_dense),
+                    "flops_eff": float(flops_eff)})
+
+    def quality_probe(self, rid, tier, top1, mad):
+        self._push({"ev": "quality_probe", "step": self.step,
+                    "t": self._t(), "rid": rid, "tier": tier,
+                    "top1": bool(top1), "mad": float(mad)})
 
     def page_alloc(self, slot, n_shared, n_fresh):
         self._push({"ev": "page_alloc", "step": self.step, "t": self._t(),
@@ -504,6 +531,22 @@ def chrome_events(tr: Tracer) -> List[Dict[str, Any]]:
                         "name": f"sync:{ev['kind']}", "cat": "sync",
                         "s": "t", "ts": us(ev["t"]),
                         "args": {"bytes": ev["bytes"], "step": ev["step"]}})
+        elif ev["ev"] == "ledger":
+            # counter tracks: activation ineffectuality + effective-FLOP
+            # fraction per dispatch, next to the occupancy series
+            evs.append({"ph": "C", "pid": pid, "name": "act_sparsity",
+                        "ts": us(ev["t"]),
+                        "args": {"zero_frac": ev["zero_frac"],
+                                 "dead_kblock_frac": ev["dead_frac"]}})
+            evs.append({"ph": "C", "pid": pid, "name": "effective_flops",
+                        "ts": us(ev["t"]),
+                        "args": {"eff_frac": ev["eff_flop_frac"]}})
+        elif ev["ev"] == "quality_probe":
+            evs.append({"ph": "i", "pid": pid, "tid": _DISPATCH_TID,
+                        "name": f"quality:tier{ev['tier']}", "cat": "quality",
+                        "s": "t", "ts": us(ev["t"]),
+                        "args": {"rid": ev["rid"], "top1": ev["top1"],
+                                 "mad": ev["mad"], "step": ev["step"]}})
     for s in tr.request_spans().values():
         if "admit_t" in s:
             evs.append({"ph": "X", "pid": pid, "tid": _ADMIT_TID,

@@ -1,0 +1,58 @@
+"""instrument.EventRegistry: named event lists, aliasing, scoped reset."""
+
+from repro.instrument import REGISTRY, EventList
+from repro.kernels.pallas_compat import PAGED_ATTN_EVENTS, SKINNY_M_EVENTS
+from repro.serve.paging import GATHER_EVENTS
+
+
+def test_registry_returns_same_object():
+    a = REGISTRY.event_list("test_stream_a")
+    b = REGISTRY.event_list("test_stream_a")
+    assert a is b
+    assert isinstance(a, EventList) and isinstance(a, list)
+    a.clear()
+
+
+def test_legacy_names_are_registry_aliases():
+    """The historical module globals must BE the registry's lists — tests
+    that clear one must affect the other (same object, never rebound)."""
+    assert SKINNY_M_EVENTS is REGISTRY.event_list("skinny_m")
+    assert PAGED_ATTN_EVENTS is REGISTRY.event_list("paged_attn")
+    assert GATHER_EVENTS is REGISTRY.event_list("gather")
+
+
+def test_scoped_isolates_and_restores():
+    lst = REGISTRY.event_list("test_stream_scoped")
+    lst.clear()
+    lst.append(("outer", 1))
+    with REGISTRY.scoped("test_stream_scoped") as seen:
+        inner = seen["test_stream_scoped"]
+        assert inner is lst          # in-place: aliases stay live
+        assert list(inner) == []     # prior events invisible inside
+        inner.append(("inner", 2))
+    assert list(lst) == [("outer", 1)]   # inner events did not leak out
+    lst.clear()
+
+
+def test_scoped_restores_on_exception():
+    lst = REGISTRY.event_list("test_stream_exc")
+    lst.clear()
+    lst.append("keep")
+    try:
+        with REGISTRY.scoped("test_stream_exc"):
+            lst.append("dropped")
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert list(lst) == ["keep"]
+    lst.clear()
+
+
+def test_reset_and_snapshot():
+    lst = REGISTRY.event_list("test_stream_snap")
+    lst.clear()
+    lst.extend([1, 2])
+    snap = REGISTRY.snapshot()
+    assert snap["test_stream_snap"] == (1, 2)
+    REGISTRY.reset("test_stream_snap")
+    assert list(lst) == []
