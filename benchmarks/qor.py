@@ -49,7 +49,8 @@ GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # identity: which golden record corresponds to which new record. Absent
 # fields compare equal (None == None), so slim records match slim records.
 KEY_FIELDS = ("arch", "spec", "mode", "decode_chunk", "speculate",
-              "draft_spec", "page_size", "n_replicas", "mesh_shape")
+              "draft_spec", "page_size", "n_replicas", "mesh_shape",
+              "n_processes")
 
 # metric -> (direction, relative tolerance). Directions per the module
 # docstring; tolerances sized to observed CPU-CI jitter on the step-clock
@@ -123,6 +124,24 @@ POLICY: Dict[str, Tuple[str, float]] = {
     "trace_dropped": ("exact", 0.0),
     "act_zero_fraction": ("info", 0.0),
     "effective_flop_fraction": ("info", 0.0),
+    # multi-process fleet (PR 10): coordinator-accumulated token counts
+    # and failover/resurrection events are step-clock deterministic on a
+    # healthy fleet (behavior identity); the throughput ratio is the
+    # gated win. fleet_steps inherits wall-paced pump scheduling (which
+    # process happens to step while waiting for arrivals varies run to
+    # run), so it gets slack rather than exactness.
+    "fleet_tokens": ("exact", 0.0),
+    "fleet_requests_completed": ("exact", 0.0),
+    "fleet_failovers": ("exact", 0.0),
+    "resurrections_ignored": ("exact", 0.0),
+    "token_identical": ("exact", 0.0),
+    "tokens_per_fleet_step": ("higher", 0.10),
+    "fleet_vs_single": ("higher", 0.10),
+    "fleet_steps": ("lower", 0.15),
+    # overflow parking depends on wall-paced heartbeat arrival order —
+    # a canary worth printing, too timing-coupled to gate
+    "fleet_overflowed": ("info", 0.0),
+    "single_tokens_per_step": ("higher", 0.02),
     # wall clock: never gated (CI hardware varies run to run)
     "wall_tok_s": ("info", 0.0),
     "admitted_tok_s": ("info", 0.0),

@@ -700,6 +700,101 @@ def run_overload_trace(arch: str, n_requests: int, n_slots: int, seed: int,
     return ok
 
 
+def run_fleet_trace(arch: str, n_requests: int, n_slots: int, seed: int,
+                    n_processes: int = 2, out: str = "", gate: float = 1.5,
+                    decode_chunk: int = 4) -> bool:
+    """Fleet mode (PR 10): one dense Poisson trace through a single
+    in-process engine and through an N-process subprocess fleet
+    (launch.fleet workers + serve.FleetRouter over the control plane).
+
+    Gates:
+      * TOKEN IDENTITY: every request's fleet output equals the single
+        engine's, greedy, across the process boundary — the wire protocol
+        and the per-process DistributedBackend meshes change placement,
+        never tokens;
+      * THROUGHPUT: tokens per FLEET step (completed tokens over the
+        SLOWEST process's engine steps — processes decode concurrently,
+        so the max is the wall-clock analog on the deterministic step
+        clock) >= `gate`x the single engine's tokens per step.
+
+    Wall tok/s is reported ungated (subprocess pacing + control-plane
+    sleeps dominate on CPU; the step-clock ratio is the load-bearing
+    number)."""
+    from repro.launch.fleet import spawn_fleet
+
+    registry = ModelRegistry()
+    model = registry.load(arch)
+    prompt_range, gen_range = (4, 12), (4, 10)
+    # dense means QUEUE-limited, not arrival-limited: arrivals must pile
+    # onto the single engine far faster than its slots drain them, or
+    # both sides just ride the arrival clock and the ratio pins at 1.0
+    dense = poisson_trace(max(n_requests, 12 * n_processes), 0.25,
+                          prompt_range, gen_range, model.cfg.vocab, seed)
+    max_len = model.cfg.n_img_tokens + prompt_range[1] + gen_range[1] + 8
+    prov = provenance(seed)
+
+    eng = InferenceEngine(model, EngineConfig(
+        n_slots=n_slots, max_len=max_len, decode_chunk=decode_chunk))
+    ref = [eng.submit(p, g, arrival_step=a) for a, p, g in dense]
+    eng.run()
+    single = eng.metrics.report()
+    ref_toks = [list(r.generated) for r in ref]
+
+    t0 = time.time()
+    with spawn_fleet(n_processes, arch=arch, n_slots=n_slots,
+                     max_len=max_len, decode_chunk=decode_chunk) as fleet:
+        reqs = [fleet.router.submit(p, g, arrival_step=a)
+                for a, p, g in dense]
+        fleet.drive()
+        fleet.router.stop()
+        routed = fleet.router.report()
+    wall = max(time.time() - t0, 1e-9)
+
+    identical = [list(r.tokens) for r in reqs] == ref_toks
+    ratio = routed["tokens_per_fleet_step"] / \
+        max(1e-9, single["tokens_per_step"])
+    win_ratio = ratio >= gate
+    ok = identical and win_ratio
+    print(f"# fleet[{arch}] {n_processes} processes: "
+          f"{routed['tokens_per_fleet_step']:.2f} tok/fleet-step vs single "
+          f"{single['tokens_per_step']:.2f} tok/step ({ratio:.2f}x, gate "
+          f">= {gate:g}x) [{'PASS' if win_ratio else 'FAIL'}] | "
+          f"token-identical [{'PASS' if identical else 'FAIL'}] | "
+          f"failovers {int(routed['fleet_failovers'])}, dead "
+          f"{int(routed['processes_dead'])}, overflowed "
+          f"{int(routed['fleet_overflowed'])} | wall "
+          f"{routed['fleet_tokens'] / wall:.1f} tok/s (reported not gated)")
+    records = [{
+        "arch": arch, "spec": "dense", "mode": "fleet",
+        "decode_chunk": decode_chunk, "mesh_shape": [1, 1],
+        "n_replicas": 1, "n_processes": n_processes, **prov,
+        "fleet_tokens": routed["fleet_tokens"],
+        "fleet_steps": routed["fleet_steps"],
+        "fleet_requests_completed": routed["fleet_requests_completed"],
+        "tokens_per_fleet_step": routed["tokens_per_fleet_step"],
+        "fleet_failovers": routed["fleet_failovers"],
+        "fleet_overflowed": routed["fleet_overflowed"],
+        "resurrections_ignored": routed["resurrections_ignored"],
+        "single_tokens_per_step": single["tokens_per_step"],
+        "fleet_vs_single": ratio,
+        "token_identical": float(identical),
+        "wall_tok_s": routed["fleet_tokens"] / wall,
+    }]
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "n_slots": n_slots,
+                       "decode_chunk": decode_chunk,
+                       "n_processes": n_processes, "gate": gate,
+                       "fleet_vs_single": ratio, **prov,
+                       "records": records}, f, indent=2)
+        print(f"# wrote {out} ({len(records)} records)")
+    print(f"# serve_bench --fleet: {'PASS' if ok else 'FAIL'} — fleet >= "
+          f"{gate:g}x single tok/step at {n_processes} processes, "
+          "token-identical")
+    return ok
+
+
 def run_ledger_trace(arch: str, n_requests: int, n_slots: int, seed: int,
                      out: str = "", k_block: int = 8,
                      quality_every: int = 2) -> bool:
@@ -1149,6 +1244,11 @@ def main() -> None:
                          "regular modes")
     ap.add_argument("--deadline-steps", type=int, default=0,
                     help="--overload-trace deadline (0 = 3x mean gen len)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="fleet mode: one dense trace through an N-process "
+                         "subprocess fleet (launch.fleet + FleetRouter) vs "
+                         "a single engine, gated >= 1.5x tokens/fleet-step "
+                         "+ token-identity; skips regular modes")
     ap.add_argument("--ledger-trace", action="store_true",
                     help="ineffectual-work ledger mode: one trace replayed "
                          "twice through a ledger-instrumented device-loop "
@@ -1170,6 +1270,12 @@ def main() -> None:
                          "tracer: JSONL + Chrome traces and one telemetry "
                          "snapshot per mode land here (CI artifacts)")
     a = ap.parse_args()
+    if a.fleet:
+        ok = run_fleet_trace(a.arch or "h2o-danube-1.8b",
+                             a.requests or 12, a.slots, a.seed,
+                             n_processes=a.fleet, out=a.out,
+                             decode_chunk=a.decode_chunk)
+        sys.exit(0 if ok else 1)
     if a.ledger_trace:
         ok = run_ledger_trace(a.arch or "nemotron-4-340b",
                               a.requests or 8, a.slots, a.seed,

@@ -72,6 +72,100 @@ def replica_meshes(data: int, model: int, n_replicas: int) -> List:
     return [Mesh(grid[i], ("data", "model")) for i in range(n_replicas)]
 
 
+def process_meshes(data: int, model: int, n_replicas: int) -> List:
+    """`replica_meshes` for ONE PROCESS of a fleet: the same disjoint
+    (data, model) submesh split, but over `jax.local_devices()` — the
+    devices THIS process owns after `jax.distributed.initialize` — so
+    each fleet process serves its own replicas on its own chips and the
+    data plane never crosses the process boundary. In a single-process
+    run local_devices == devices and this degenerates to replica_meshes
+    exactly (same grid, same meshes), which is what keeps
+    DistributedBackend token-identical to ShardedBackend."""
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    if data % n_replicas:
+        raise ValueError(f"data axis {data} does not divide into "
+                         f"{n_replicas} replicas")
+    import numpy as np
+    from jax.sharding import Mesh
+    need = data * model
+    devices = jax.local_devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"process mesh {data}x{model} needs {need} LOCAL devices, "
+            f"process {jax.process_index()} has {len(devices)} "
+            f"(of {jax.device_count()} global)")
+    grid = np.asarray(devices[:need]).reshape(n_replicas,
+                                              data // n_replicas, model)
+    return [Mesh(grid[i], ("data", "model")) for i in range(n_replicas)]
+
+
+def fleet_topology(data: int, model: int, n_replicas: int) -> dict:
+    """Resolved process -> devices -> replica-mesh map for THIS process,
+    JSON-safe — what `launch.serve --dry-run` prints per fleet process so
+    a misconfigured coordinator (wrong num_processes, short device
+    count, uneven replica split) fails loudly BEFORE weight packing."""
+    meshes = process_meshes(data, model, n_replicas)
+    return {
+        "process_index": jax.process_index(),
+        "num_processes": jax.process_count(),
+        "local_devices": [str(d) for d in jax.local_devices()],
+        "global_device_count": jax.device_count(),
+        "mesh_shape": [data, model],
+        "n_replicas": n_replicas,
+        "replica_meshes": [
+            {"replica": i,
+             "shape": dict(zip(m.axis_names,
+                               (int(s) for s in m.devices.shape))),
+             "devices": [str(d) for d in m.devices.flat]}
+            for i, m in enumerate(meshes)],
+    }
+
+
+def plan_fleet_topology(n_processes: int, devices_per_process: int,
+                        data: int, model: int, n_replicas: int) -> dict:
+    """Arithmetic-only fleet plan: the same constraints `process_meshes`
+    enforces live, checked WITHOUT touching jax device state — so
+    `launch.serve --dry-run --processes N` can validate a local-fleet
+    launch (which spawns workers with their own forced device counts)
+    from the coordinator process, before any worker or weight pack
+    exists. Raises ValueError exactly where process_meshes would."""
+    if n_processes < 1:
+        raise ValueError(f"n_processes must be >= 1, got {n_processes}")
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    if data % n_replicas:
+        raise ValueError(f"data axis {data} does not divide into "
+                         f"{n_replicas} replicas")
+    need = data * model
+    if devices_per_process < need:
+        raise ValueError(
+            f"process mesh {data}x{model} needs {need} devices per "
+            f"process, plan gives each of {n_processes} processes "
+            f"{devices_per_process}")
+    per = data // n_replicas
+    procs = []
+    for p in range(n_processes):
+        devs = [f"cpu:{p}:{i}" for i in range(devices_per_process)]
+        procs.append({
+            "process_index": p,
+            "local_devices": devs,
+            "replica_meshes": [
+                {"replica": r,
+                 "shape": {"data": per, "model": model},
+                 "devices": devs[r * per * model:(r + 1) * per * model]}
+                for r in range(n_replicas)],
+        })
+    return {
+        "num_processes": n_processes,
+        "devices_per_process": devices_per_process,
+        "global_device_count": n_processes * devices_per_process,
+        "mesh_shape": [data, model],
+        "n_replicas": n_replicas,
+        "processes": procs,
+    }
+
+
 # Hardware constants for the roofline (TPU v5e-class, per chip)
 PEAK_BF16_FLOPS = 197e12        # FLOP/s
 PEAK_INT8_OPS = 394e12          # OP/s

@@ -74,6 +74,18 @@ the RESOLVED placement — one line per cache/state leaf with its
 PartitionSpec — plus the loop-aware cost of the lowered sharded decode step
 (analysis.hlo: flops, memory bytes, collective wire bytes) and exits
 without running traffic.
+
+Fleet serving (PR 10): `--processes N` serves through a local fleet — N
+worker processes spawned by launch.fleet, each running its own engines on
+its own forced CPU devices, fronted by the cross-process FleetRouter
+(serve.control). `--coordinator HOST:PORT --num-processes M
+--process-id I` instead identifies THIS process in a real multi-host
+launch (jax.distributed.initialize via serve.ensure_distributed).
+`--dry-run` with either prints the resolved fleet topology — process ->
+local devices -> replica meshes -> per-leaf cache/state shardings —
+BEFORE any weight packing, so a short device count, an uneven replica
+split, or a wrong num_processes fails in milliseconds, not after a
+multi-minute pack.
 """
 
 from __future__ import annotations
@@ -166,6 +178,98 @@ def _dry_run(model, cfg: EngineConfig, mesh_shape) -> None:
     print(f"[dry-run] {label}: "
           f"{r['flops']:.3g} flops, {r['bytes']:.3g} B touched, "
           f"{r['wire_bytes']:.3g} B wire, collectives {coll or 'none'}")
+
+
+def _dry_run_fleet(args, M) -> None:
+    """Resolved fleet topology, NO weight packing: process -> local
+    devices -> replica meshes -> per-leaf cache/state shardings. The
+    sharding resolution runs over an AbstractMesh of the per-process
+    replica shape, so nothing here allocates or packs — a bad topology
+    fails in milliseconds."""
+    import jax
+    from jax.sharding import AbstractMesh
+
+    from repro import configs as C
+    from repro.distributed import sharding as SH, steps as ST
+    from repro.models import transformer as T
+
+    mesh_shape = (M.parse_mesh_arg(args.mesh) if args.mesh
+                  else (args.replicas, 1))
+    data, model_ax = mesh_shape
+    if args.coordinator:
+        from repro.serve import ensure_distributed
+        ensure_distributed(args.coordinator, args.num_processes,
+                           args.process_id)
+        live = M.fleet_topology(data, model_ax, args.replicas)
+        print(f"[dry-run] fleet (live): process {live['process_index']} "
+              f"of {live['num_processes']}, "
+              f"{live['global_device_count']} global devices, "
+              f"mesh {data}x{model_ax}, {args.replicas} replicas/process")
+        procs = [live]
+    else:
+        plan = M.plan_fleet_topology(args.processes, data * model_ax,
+                                     data, model_ax, args.replicas)
+        print(f"[dry-run] fleet (planned): {plan['num_processes']} "
+              f"processes x {plan['devices_per_process']} forced CPU "
+              f"devices = {plan['global_device_count']} global, "
+              f"mesh {data}x{model_ax}, {args.replicas} replicas/process")
+        procs = plan["processes"]
+    for p in procs:
+        print(f"[dry-run]   process {p['process_index']}: "
+              + " ".join(p["local_devices"]))
+        for rm in p["replica_meshes"]:
+            shape = "x".join(str(v) for v in rm["shape"].values())
+            print(f"[dry-run]     replica {rm['replica']} ({shape}): "
+                  + " ".join(rm["devices"]))
+
+    # per-leaf shardings on the per-replica submesh, shape-only
+    sub = AbstractMesh((("data", data // args.replicas),
+                        ("model", model_ax)))
+    cfg = C.get_smoke(args.arch)
+    max_len = args.max_len or (cfg.n_img_tokens + args.prompt_len
+                               + args.gen + 8)
+    caches = jax.eval_shape(lambda: T.make_caches(cfg, args.slots, max_len))
+    print(f"[dry-run] per-replica KV slab leaves ({args.slots} slots x "
+          f"{max_len} positions):")
+    cache_specs = SH.cache_pspecs(caches, sub, args.slots, slab=True)
+    for path, spec in jax.tree_util.tree_leaves_with_path(
+            cache_specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec)):
+        print(f"    {jax.tree_util.keystr(path):48s} {spec}")
+    print("[dry-run] per-replica decode state vectors:")
+    for k, spec in ST.decode_state_pspecs(sub, args.slots).items():
+        print(f"    {k:48s} {spec}")
+
+
+def _serve_fleet(args) -> None:
+    """Local-fleet serving: spawn N workers (launch.fleet), front them
+    with the FleetRouter, drive the same Poisson-ish trace."""
+    import numpy as np
+
+    from repro.launch import fleet as F
+
+    rng = np.random.default_rng(args.seed)
+    with F.spawn_fleet(args.processes, arch=args.arch, n_slots=args.slots,
+                       max_len=args.max_len or 96,
+                       decode_chunk=args.decode_chunk,
+                       replicas_per_process=args.replicas) as fl:
+        reqs = []
+        for i in range(args.requests):
+            s0 = max(1, args.prompt_len + int(rng.integers(-4, 5)))
+            prompt = rng.integers(0, 32000, s0)
+            reqs.append(fl.router.submit(
+                list(map(int, prompt)), args.gen,
+                temperature=args.temperature))
+        fl.drive()
+        fl.router.stop()
+        rep = fl.router.report()
+        print(f"[serve] fleet {args.processes} processes: "
+              f"{rep['fleet_tokens']:.0f} tokens, "
+              f"{rep['fleet_requests_completed']:.0f} done, "
+              f"{rep['tokens_per_fleet_step']:.2f} tok/fleet-step, "
+              f"failovers {rep['fleet_failovers']:.0f}")
+        for r in reqs[:2]:
+            print(f"  req{r.rid}: {np.asarray(r.tokens)[:16]} ...")
 
 
 def main() -> None:
@@ -286,9 +390,37 @@ def main() -> None:
     ap.add_argument("--auto-restart", action="store_true",
                     help="router: rebuild a replica marked dead by a "
                          "ReplicaFault instead of serving degraded")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="serve through a local fleet of N worker "
+                         "processes (launch.fleet + serve.FleetRouter); "
+                         "each worker runs --replicas engines on its own "
+                         "forced CPU devices")
+    ap.add_argument("--coordinator", default="",
+                    help="jax.distributed coordinator HOST:PORT for a real "
+                         "multi-host launch (this process joins the fleet)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="fleet size for --coordinator")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's index for --coordinator")
     args = ap.parse_args()
 
     from repro.launch import mesh as M
+
+    fleet_mode = args.processes > 1 or args.coordinator
+    if args.dry_run and fleet_mode:
+        # Topology resolution must fail BEFORE the (expensive) weight pack:
+        # no registry.load on this path, config comes shape-only.
+        _dry_run_fleet(args, M)
+        return
+    if args.processes > 1:
+        # workers pack their own weights; the coordinator never loads
+        _serve_fleet(args)
+        return
+    if args.coordinator:
+        # real multi-host: join the fleet before any jax backend touch
+        from repro.serve import ensure_distributed
+        ensure_distributed(args.coordinator, args.num_processes,
+                           args.process_id)
 
     spec = KratosSpec(sparsity=args.sparsity,
                       bits=args.bits or None,
@@ -379,7 +511,10 @@ def main() -> None:
         exp = TelemetryExporter(sample_fn, TelemetryConfig(
             interval=args.telemetry_interval,
             port=args.telemetry_port if args.telemetry_port >= 0 else None,
-            jsonl=args.telemetry_jsonl or None))
+            jsonl=args.telemetry_jsonl or None,
+            # fleet processes exporting on one host need distinct series;
+            # single-process output stays byte-identical (no label)
+            process_index=args.process_id if args.coordinator else None))
         exp.start()
         if exp.port is not None:
             print(f"[serve] telemetry: http://127.0.0.1:{exp.port}/metrics")

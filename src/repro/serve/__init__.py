@@ -50,7 +50,19 @@ Layout:
                  waiting deque (`max_waiting`) raising `EngineSaturated`.
   router.py      `ReplicaRouter`: least-loaded/deficit admission across N
                  engine replicas, overflow hold + drain, queue rebalance,
-                 aggregate metrics (tokens_per_router_step).
+                 aggregate metrics (tokens_per_router_step). `FleetRouter`
+                 (PR 10) lifts the same semantics one process boundary up:
+                 least-loaded admission off possibly-stale control-plane
+                 snapshots, heartbeat-timeout failover with evacuate-style
+                 re-prefill on a surviving process.
+  control.py     cross-process control plane (PR 10): newline-framed JSON
+                 messages over stdlib sockets (load/occupancy/QoS/liveness
+                 heartbeats, submits, token progress, final metric
+                 reports), `FleetState` (staleness-bounded least-loaded
+                 with in-flight submit credits, terminal death on
+                 heartbeat silence, resurrection drops), and the
+                 LocalProcess/RemoteProcess/WorkerServer process faces the
+                 FleetRouter and launch.fleet compose from.
   speculative.py speculative decode (PR 4): `DraftSpec` derives a SELF-DRAFT
                  artifact — the same weights re-packed through
                  core/quantize + core/sparsity at a cheaper (sparsity, bits)
@@ -136,10 +148,15 @@ Quickstart:
     print(req.generated, eng.metrics.report())
 """
 
-from repro.serve.backend import (ExecutionBackend, LocalBackend,
-                                 ShardedBackend)
+from repro.serve.backend import (DistributedBackend, ExecutionBackend,
+                                 LocalBackend, ShardedBackend,
+                                 ensure_distributed)
 from repro.serve.cache_pool import CachePool, PoolExhausted
 from repro.serve.chaos import ChaosHarness, Fault, seeded_schedule
+from repro.serve.control import (ControlListener, Endpoint, FleetConfig,
+                                 FleetState, LocalProcess, ProcessStatus,
+                                 RemoteProcess, WorkerServer, connect,
+                                 decode_message, encode_message)
 from repro.serve.engine import (EngineConfig, EngineSaturated,
                                 InferenceEngine, ReplicaFault)
 from repro.serve.ledger import (NULL_LEDGER, LedgerConfig, LedgerSink,
@@ -150,7 +167,7 @@ from repro.serve.qos import (QoSConfig, QoSController, check_tier_spec,
 from repro.serve.paging import PagedCachePool, PageLayout, prefix_supported
 from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import ModelRegistry, PackedModel, pack_model_params
-from repro.serve.router import ReplicaRouter
+from repro.serve.router import FleetRequest, FleetRouter, ReplicaRouter
 from repro.serve.scheduler import (ContinuousScheduler, Request,
                                    StaticScheduler, replica_load)
 from repro.serve.speculative import DraftSpec
@@ -163,8 +180,13 @@ from repro.serve.trace import (NULL_TRACER, TraceConfig, Tracer,
 __all__ = [
     "CachePool", "PoolExhausted", "DraftSpec", "EngineConfig",
     "EngineSaturated", "InferenceEngine", "ReplicaFault", "ExecutionBackend",
-    "LocalBackend", "ShardedBackend", "PagedCachePool", "PageLayout",
+    "LocalBackend", "ShardedBackend", "DistributedBackend",
+    "ensure_distributed", "PagedCachePool", "PageLayout",
     "PrefixIndex", "prefix_supported", "ReplicaRouter", "ServeMetrics",
+    "FleetRequest", "FleetRouter",
+    "ControlListener", "Endpoint", "FleetConfig", "FleetState",
+    "LocalProcess", "ProcessStatus", "RemoteProcess", "WorkerServer",
+    "connect", "decode_message", "encode_message",
     "ModelRegistry", "PackedModel", "pack_model_params",
     "ContinuousScheduler", "StaticScheduler", "Request", "replica_load",
     "QoSConfig", "QoSController", "check_tier_spec", "parse_tiers",

@@ -775,3 +775,74 @@ class ShardedBackend(ExecutionBackend):
                                for a in self.mesh.axis_names],
                 "mesh_axes": list(self.mesh.axis_names),
                 "n_devices": int(self.mesh.size)}
+
+
+_DISTRIBUTED_INITIALIZED = False
+
+
+def ensure_distributed(coordinator_address: str, num_processes: int,
+                       process_id: int) -> None:
+    """Idempotent `jax.distributed.initialize`. Must run BEFORE any jax
+    backend use in the process (device queries included) — launch.fleet
+    worker processes call it first thing, before weights exist. A second
+    call with the same identity is a no-op; jax itself rejects a second
+    call with a different one."""
+    global _DISTRIBUTED_INITIALIZED
+    if _DISTRIBUTED_INITIALIZED:
+        return
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    _DISTRIBUTED_INITIALIZED = True
+
+
+class DistributedBackend(ShardedBackend):
+    """One fleet process's placement: `jax.distributed.initialize` (when a
+    coordinator address is given), then the SAME donated/sharded decode
+    steps as ShardedBackend on a replica submesh of this process's LOCAL
+    devices (`launch.mesh.process_meshes`).
+
+    The inheritance is the design: a fleet process is a ShardedBackend
+    whose mesh happens to come from local_devices, so every placement
+    rule, donation alias, tier swap and dispatch jit is reused verbatim
+    — token-identical to ShardedBackend on the same devices (gated by
+    tests/test_fleet.py). Cross-PROCESS coordination is not jax's job
+    here: each process's replicas decode independently and the control
+    plane (serve.control) moves requests/results, so a local CPU fleet
+    may run with no coordinator at all (coordinator_address=None) —
+    jax.distributed only needs to exist when a deployment wants the
+    global device view (real multi-host meshes, DCN collectives).
+    """
+
+    name = "distributed"
+
+    def __init__(self, *, mesh_shape: Tuple[int, int], n_replicas: int = 1,
+                 replica: int = 0, coordinator_address: Optional[str] = None,
+                 num_processes: int = 1, process_id: int = 0):
+        if coordinator_address:
+            ensure_distributed(coordinator_address, num_processes, process_id)
+        meshes = None
+
+        # defer mesh construction to build() so constructing backends for
+        # several replicas stays cheap, but resolve the submesh list once
+        self._fleet = dict(mesh_shape=tuple(mesh_shape),
+                           n_replicas=n_replicas, replica=replica)
+        if not 0 <= replica < n_replicas:
+            raise ValueError(f"replica {replica} out of range "
+                             f"(n_replicas={n_replicas})")
+        super().__init__(mesh=meshes)
+
+    def build(self, model, cfg) -> None:
+        from repro.launch import mesh as M
+        f = self._fleet
+        if self._mesh is None:
+            self._mesh = M.process_meshes(*f["mesh_shape"],
+                                          f["n_replicas"])[f["replica"]]
+        super().build(model, cfg)
+
+    def describe(self):
+        d = super().describe()
+        d.update({"process_index": int(jax.process_index()),
+                  "num_processes": int(jax.process_count()),
+                  "replica": int(self._fleet["replica"])})
+        return d

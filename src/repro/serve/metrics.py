@@ -282,6 +282,50 @@ class ServeMetrics:
                     "logit_mad": q[2] / max(1.0, q[0])}
                 for t, q in sorted(self.quality.items())}
 
+    # -- cross-process transport (serve.control) ----------------------------
+
+    def to_payload(self) -> Dict:
+        """JSON-safe snapshot of every counter and record, so a fleet
+        worker can ship its metrics through the control plane and the
+        coordinator can rebuild ServeMetrics objects and reuse
+        `aggregate` unchanged. Monotonic anchors don't cross processes:
+        only the elapsed interval travels; `from_payload` re-bases it on
+        the receiver's own perf_counter."""
+        d = {k: v for k, v in self.__dict__.items() if k != "t0"}
+        d["elapsed"] = time.perf_counter() - self.t0
+        d["records"] = {str(rid): dataclasses.asdict(r)
+                        for rid, r in self.records.items()}
+        d["quality"] = {str(t): list(q) for t, q in self.quality.items()}
+        d["slot_acceptance"] = {str(s): list(a)
+                                for s, a in self.slot_acceptance.items()}
+        return d
+
+    @classmethod
+    def from_payload(cls, payload: Dict) -> "ServeMetrics":
+        """Rebuild a ServeMetrics from `to_payload` output. Per-request
+        monotonic timestamps are from the SENDER's clock — useless here —
+        so wall intervals are zeroed; the step-clock fields (everything
+        the deterministic gates read) survive exactly."""
+        m = cls()
+        elapsed = float(payload.get("elapsed", 0.0))
+        m.t0 = time.perf_counter() - elapsed
+        rec_fields = {f.name for f in dataclasses.fields(RequestRecord)}
+        for k, v in payload.items():
+            if k in ("elapsed", "records", "quality", "slot_acceptance"):
+                continue
+            if hasattr(m, k):
+                setattr(m, k, v)
+        for rid, rd in payload.get("records", {}).items():
+            rec = RequestRecord(**{k: v for k, v in rd.items()
+                                   if k in rec_fields})
+            rec.submit_mono = rec.first_token_time = rec.finish_time = 0.0
+            m.records[int(rid)] = rec
+        m.quality = {int(t): list(q)
+                     for t, q in payload.get("quality", {}).items()}
+        m.slot_acceptance = {int(s): list(a) for s, a in
+                             payload.get("slot_acceptance", {}).items()}
+        return m
+
     # -- report -------------------------------------------------------------
 
     def report(self) -> Dict[str, float]:

@@ -57,8 +57,9 @@ class Counter:
         counters already accumulate; re-counting them here would double)."""
         self.value = float(v)
 
-    def render(self, name: str) -> List[str]:
-        return [f"{name} {self.value:g}"]
+    def render(self, name: str, labels: str = "") -> List[str]:
+        tag = "{" + labels + "}" if labels else ""
+        return [f"{name}{tag} {self.value:g}"]
 
 
 class Gauge:
@@ -72,8 +73,9 @@ class Gauge:
     def set(self, v: float) -> None:
         self.value = float(v)
 
-    def render(self, name: str) -> List[str]:
-        return [f"{name} {self.value:g}"]
+    def render(self, name: str, labels: str = "") -> List[str]:
+        tag = "{" + labels + "}" if labels else ""
+        return [f"{name}{tag} {self.value:g}"]
 
 
 class Histogram:
@@ -95,21 +97,30 @@ class Histogram:
             if v <= ub:
                 self.counts[i] += 1
 
-    def render(self, name: str) -> List[str]:
-        out, cum = [], 0
+    def render(self, name: str, labels: str = "") -> List[str]:
+        # `le` joins any shared labels inside the same brace set.
+        pre = labels + "," if labels else ""
+        tag = "{" + labels + "}" if labels else ""
+        out = []
         for ub, c in zip(self.buckets, self.counts):
-            out.append(f'{name}_bucket{{le="{ub:g}"}} {c}')
-        out.append(f'{name}_bucket{{le="+Inf"}} {self.count}')
-        out.append(f"{name}_sum {self.sum:g}")
-        out.append(f"{name}_count {self.count}")
+            out.append(f'{name}_bucket{{{pre}le="{ub:g}"}} {c}')
+        out.append(f'{name}_bucket{{{pre}le="+Inf"}} {self.count}')
+        out.append(f"{name}_sum{tag} {self.sum:g}")
+        out.append(f"{name}_count{tag} {self.count}")
         return out
 
 
 class TelemetryRegistry:
     """Named metric store with get-or-create accessors and rendering."""
 
-    def __init__(self, prefix: str = "serve") -> None:
+    def __init__(self, prefix: str = "serve",
+                 process_index: Optional[int] = None) -> None:
         self.prefix = prefix
+        # When several fleet processes export on one host their metric
+        # names collide at the scraper; a process_index label keeps the
+        # series apart. None (single-process) renders byte-identical to
+        # the pre-fleet format: no label, no braces.
+        self.process_index = process_index
         self._metrics: Dict[str, Tuple[Any, str]] = {}
         self._lock = threading.Lock()
 
@@ -154,6 +165,8 @@ class TelemetryRegistry:
         return out
 
     def render_prometheus(self) -> str:
+        labels = ("" if self.process_index is None
+                  else f'process_index="{self.process_index}"')
         lines: List[str] = []
         with self._lock:
             items = sorted(self._metrics.items())
@@ -162,7 +175,7 @@ class TelemetryRegistry:
             if help_:
                 lines.append(f"# HELP {full} {help_}")
             lines.append(f"# TYPE {full} {m.kind}")
-            lines.extend(m.render(full))
+            lines.extend(m.render(full, labels))
         return "\n".join(lines) + "\n"
 
 
@@ -226,6 +239,7 @@ class TelemetryConfig:
     interval: float = 1.0              # snapshot cadence, seconds
     port: Optional[int] = None         # Prometheus endpoint (0 = ephemeral)
     jsonl: Optional[str] = None        # append one JSON line per snapshot
+    process_index: Optional[int] = None  # fleet label; None = unlabeled
 
 
 class TelemetryExporter:
@@ -242,7 +256,8 @@ class TelemetryExporter:
                  registry: Optional[TelemetryRegistry] = None) -> None:
         self.sample_fn = sample_fn
         self.cfg = cfg
-        self.registry = registry or TelemetryRegistry()
+        self.registry = registry or TelemetryRegistry(
+            process_index=cfg.process_index)
         self.n_samples = 0
         self.port: Optional[int] = None
         self._stop = threading.Event()
@@ -266,9 +281,12 @@ class TelemetryExporter:
             d = os.path.dirname(self.cfg.jsonl)
             if d:
                 os.makedirs(d, exist_ok=True)
+            ptag = ({} if self.registry.process_index is None
+                    else {"process": self.registry.process_index})
             with open(self.cfg.jsonl, "a") as f:
                 f.write(json.dumps({"ts": time.time(),
-                                    "sample": self.n_samples, **s}) + "\n")
+                                    "sample": self.n_samples,
+                                    **ptag, **s}) + "\n")
         return s
 
     # -- cadence + endpoint -------------------------------------------------

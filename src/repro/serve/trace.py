@@ -93,6 +93,8 @@ class NullTracer:
     def __init__(self) -> None:
         self.step = 0
         self.replica = 0
+        self.process = None  # fleet process index (PR 10); None = not in a
+        #                      fleet, and exports stay byte-identical
         self.dropped = 0     # ring-buffer losses: always 0 when disabled
 
     # -- lifecycle edges ----------------------------------------------------
@@ -480,15 +482,21 @@ def export_jsonl(tracers: Sequence[Tracer], path: str) -> int:
     n = 0
     with open(path, "w") as f:
         for tr in tracers:
+            # fleet runs (PR 10) stamp the process index into the meta
+            # line and every event; single-process output stays
+            # BYTE-identical (no key at all when process is None)
+            ptag = {} if getattr(tr, "process", None) is None \
+                else {"process": tr.process}
             f.write(json.dumps({
-                "ev": "meta", "replica": tr.replica,
+                "ev": "meta", **ptag, "replica": tr.replica,
                 "epoch_wall": tr.epoch_wall, "dropped": tr.dropped,
                 "capacity": tr.cfg.capacity,
                 "clocks": {"step": "engine steps",
                            "t": "monotonic seconds since epoch_wall"},
             }) + "\n")
             for ev in tr.events:
-                f.write(json.dumps({"replica": tr.replica, **ev}) + "\n")
+                f.write(json.dumps({**ptag, "replica": tr.replica, **ev})
+                        + "\n")
                 n += 1
     return n
 
@@ -502,10 +510,15 @@ def chrome_events(tr: Tracer) -> List[Dict[str, Any]]:
     tid = slot + 1 for request spans (one track per slot), the admission
     queue on tid 0, dispatches on their own track, occupancy as a counter
     series. ts/dur in microseconds on the monotonic clock."""
-    pid = tr.replica
+    proc = getattr(tr, "process", None)
+    # fleet runs get a disjoint pid block per PROCESS so two processes'
+    # replica 0 tracks never merge; single-process pid stays the replica
+    pid = tr.replica if proc is None else proc * 4096 + tr.replica
+    pname = f"replica {pid}" if proc is None \
+        else f"process {proc} replica {tr.replica}"
     evs: List[Dict[str, Any]] = [
         {"ph": "M", "pid": pid, "name": "process_name",
-         "args": {"name": f"replica {pid}"}},
+         "args": {"name": pname}},
         {"ph": "M", "pid": pid, "tid": _ADMIT_TID, "name": "thread_name",
          "args": {"name": "admission queue"}},
         {"ph": "M", "pid": pid, "tid": _DISPATCH_TID, "name": "thread_name",
